@@ -1,0 +1,115 @@
+"""Paper Table 2 + §6.1 optimality study.
+
+  * approximation ratio beta / Theorem-1 bound for k-path matching vs the
+    joint-greedy baseline at 16/32/64 MB (Table 2),
+  * the fraction of runs hitting the Theorem-1 optimum exactly
+    (paper: 5.4% for InceptionResNetV2, 50 nodes, 64 MB, 20 classes),
+  * beyond-paper: ratio vs the *exact* optimum (subset-DP) on 12-node
+    clusters, where Theorem 1 is only a lower bound.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (PartitionInfeasible, PlacementInfeasible,
+                        exact_optimal_bottleneck, joint_greedy,
+                        partition_and_place, random_geometric_cluster,
+                        theorem1_bound)
+
+from .common import build_model, timed
+
+
+def ratios(graph, cap_mb, reps, n_nodes=20, n_classes=11, seed0=0):
+    ours_r, joint_r = [], []
+    for r in range(reps):
+        cluster = random_geometric_cluster(n_nodes, rng=seed0 + 13 * r)
+        try:
+            plan = partition_and_place(graph, cluster, cap_mb * 1e6,
+                                       n_classes=n_classes, rng=r)
+            thm = plan.evaluation.theorem1_s
+            ours_r.append(plan.bottleneck_s / thm)
+            jg = joint_greedy(graph, cluster, cap_mb * 1e6)
+            joint_r.append(jg.bottleneck_s /
+                           theorem1_bound(jg.sizes, cluster))
+        except (PartitionInfeasible, PlacementInfeasible):
+            continue
+    return (float(np.mean(ours_r)) if ours_r else None,
+            float(np.mean(joint_r)) if joint_r else None)
+
+
+def optimality_rate(graph, trials=200, n_nodes=50, cap_mb=64, n_classes=20,
+                    tol=1e-9):
+    """Fraction of runs whose beta is within ``tol`` of the Theorem-1 bound.
+
+    Note on granularity: our DAGs cut at block boundaries, so the max
+    transfer size is often *repeated* across adjacent boundaries — the
+    Theorem-1 bound (which assumes the single max rides the single best
+    edge) is then strictly unreachable; the paper's layer-level cuts give
+    unique maxima.  We therefore report exact and near-hit rates."""
+    hits = 0
+    done = 0
+    for r in range(trials):
+        cluster = random_geometric_cluster(n_nodes, rng=5000 + r)
+        try:
+            plan = partition_and_place(graph, cluster, cap_mb * 1e6,
+                                       n_classes=n_classes, rng=r)
+        except (PartitionInfeasible, PlacementInfeasible):
+            continue
+        done += 1
+        if plan.bottleneck_s <= plan.evaluation.theorem1_s * (1 + tol):
+            hits += 1
+    return hits / max(done, 1), done
+
+
+def exact_audit(graph, cap_mb=64, reps=6, n_nodes=12, n_classes=5):
+    """beyond-paper: vs the true optimum on small clusters."""
+    rs = []
+    for r in range(reps):
+        cluster = random_geometric_cluster(n_nodes, rng=9000 + r)
+        try:
+            plan = partition_and_place(graph, cluster, cap_mb * 1e6,
+                                       n_classes=n_classes, rng=r)
+            opt = exact_optimal_bottleneck(plan.partition.boundary_sizes,
+                                           cluster)
+            rs.append(plan.bottleneck_s / opt)
+        except (PartitionInfeasible, PlacementInfeasible):
+            continue
+    return float(np.mean(rs)) if rs else None
+
+
+def run(reps: int = 10, trials: int = 200):
+    rows = []
+    models = {"ResNet50": build_model("ResNet50"),
+              "MobileNetV2": build_model("MobileNetV2"),
+              "InceptionResNetV2": build_model("InceptionResNetV2")}
+    for cap in (16, 32, 64):
+        ours_all, joint_all = [], []
+        for mname, g in models.items():
+            o, j = ratios(g, cap, reps)
+            if o:
+                ours_all.append(o)
+            if j:
+                joint_all.append(j)
+        rows.append({"name": f"approx_ratio/kpath/cap{cap}MB",
+                     "us_per_call": 0.0,
+                     "derived": round(float(np.mean(ours_all)), 3)
+                     if ours_all else "infeasible"})
+        rows.append({"name": f"approx_ratio/joint/cap{cap}MB",
+                     "us_per_call": 0.0,
+                     "derived": round(float(np.mean(joint_all)), 3)
+                     if joint_all else "infeasible"})
+    for tol, label in ((1e-9, "exact"), (0.005, "within0.5%"),
+                       (0.02, "within2%")):
+        (rate, done), us = timed(optimality_rate,
+                                 models["InceptionResNetV2"], trials,
+                                 tol=tol)
+        rows.append({"name": f"optimality_rate/{label}/IRNv2/50n/64MB/20c "
+                             f"({done} runs)",
+                     "us_per_call": us / max(done, 1),
+                     "derived": f"{rate * 100:.1f}%"})
+    ex, us2 = timed(exact_audit, models["ResNet50"])
+    rows.append({"name": "exact_audit/ResNet50/12n (beyond-paper)",
+                 "us_per_call": us2 / 6,
+                 "derived": round(ex, 3) if ex else "n/a"})
+    return rows

@@ -1,0 +1,31 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.paper_cnns import PAPER_MODELS
+
+# the paper's §6.1 grid
+NODE_COUNTS = [5, 10, 15, 20, 50]
+CLASS_COUNTS = [2, 5, 8, 11, 14, 17, 20]
+CAPACITIES_MB = [64, 128, 256, 512]
+
+# benchmark-time defaults (paper used 50 reps; scale with --reps)
+DEFAULT_REPS = 10
+
+# models used for the headline figures (image + text, §1)
+FIG_MODELS = ["ResNet50", "InceptionResNetV2", "MobileNetV2", "VGG16",
+              "DenseNet121", "BERT-Base"]
+
+
+def build_model(name):
+    return PAPER_MODELS[name]()
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6     # us

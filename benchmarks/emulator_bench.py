@@ -1,0 +1,45 @@
+"""Paper Table 4: emulator throughput / end-to-end latency by cluster shape
+(ring vs grid vs blob-cluster) and size (5 / 9 / 20 nodes)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import partition_and_place, ring_cluster, grid_cluster, blob_cluster
+from repro.emulator.pipeline import emulate_plan
+
+from .common import build_model, timed
+
+
+def make_cluster(shape: str, n: int):
+    if shape == "ring":
+        return ring_cluster(n)
+    if shape == "grid":
+        rows = int(np.sqrt(n))
+        while n % rows:
+            rows -= 1
+        return grid_cluster(rows, n // rows)
+    return blob_cluster(n, n_blobs=max(2, n // 4))
+
+
+def run(reps: int = 1):
+    rows = []
+    g = build_model("ResNet50")
+    for n in (5, 9, 20):
+        for shape in ("ring", "grid", "cluster"):
+            cluster = make_cluster(shape, n)
+            try:
+                plan = partition_and_place(g, cluster, 64e6, n_classes=3,
+                                           rng=0)
+                m, us = timed(emulate_plan, plan, cluster, None, 40, 1e6)
+                rows.append({"name": f"emulator/{shape}/n{n}/throughput_hz",
+                             "us_per_call": us,
+                             "derived": round(m["throughput_hz"], 4)})
+                rows.append({"name": f"emulator/{shape}/n{n}/e2e_s",
+                             "us_per_call": us,
+                             "derived": round(m["mean_e2e_s"], 2)})
+            except Exception as e:
+                rows.append({"name": f"emulator/{shape}/n{n}",
+                             "us_per_call": 0.0,
+                             "derived": f"infeasible({type(e).__name__})"})
+    return rows

@@ -1,0 +1,53 @@
+"""Paper Fig. 15: bottleneck latency vs (model, capacity, #nodes, #classes).
+
+Validates the paper's trends: beta falls as nodes / classes / capacity
+grow; small-capacity small-cluster cells go infeasible (the blank cells of
+Fig. 15).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (PartitionInfeasible, PlacementInfeasible,
+                        partition_and_place, random_geometric_cluster)
+
+from .common import CAPACITIES_MB, CLASS_COUNTS, NODE_COUNTS, build_model, timed
+
+
+def cell(graph, n_nodes, n_classes, cap_mb, reps, seed0=0):
+    betas = []
+    for r in range(reps):
+        cluster = random_geometric_cluster(n_nodes, rng=seed0 + 7919 * r)
+        try:
+            plan = partition_and_place(graph, cluster, cap_mb * 1e6,
+                                       n_classes=n_classes, rng=seed0 + r)
+            betas.append(plan.bottleneck_s)
+        except (PartitionInfeasible, PlacementInfeasible):
+            continue
+    return float(np.mean(betas)) if betas else None
+
+
+def run(reps: int = 4, models=("ResNet50", "InceptionResNetV2"),
+        node_counts=(5, 20, 50), class_counts=(2, 11, 20),
+        caps=(64, 128, 256)):
+    rows = []
+    for mname in models:
+        g = build_model(mname)
+        for cap in caps:
+            for n in node_counts:
+                for nc in class_counts:
+                    (beta), us = timed(cell, g, n, nc, cap, reps)
+                    rows.append({
+                        "name": f"latency_grid/{mname}/cap{cap}MB/n{n}/c{nc}",
+                        "us_per_call": us / max(reps, 1),
+                        "derived": round(beta, 4) if beta else "infeasible"})
+    return rows
+
+
+def trend_check(reps: int = 6):
+    """Assertable trends for tests: more nodes and classes help."""
+    g = build_model("InceptionResNetV2")
+    small = cell(g, 10, 2, 64, reps, seed0=3)
+    big = cell(g, 50, 20, 64, reps, seed0=3)
+    return small, big

@@ -1,0 +1,25 @@
+"""Paper Fig. 3: candidate partition points per model (>=25 for most;
+NASNet-style cross-links admit none in the body)."""
+
+from __future__ import annotations
+
+from repro.configs.paper_cnns import PAPER_MODELS, nasnet_like
+
+from .common import timed
+
+
+def run(reps: int = 1):
+    rows = []
+    for name, fn in PAPER_MODELS.items():
+        g = fn()
+        pts, us = timed(g.candidate_partition_points)
+        rows.append({"name": f"partition_points/{name}", "us_per_call": us,
+                     "derived": len(pts)})
+    g = nasnet_like()
+    pts, us = timed(g.candidate_partition_points)
+    lp = g.longest_path_depths()
+    interior = [p for p in pts
+                if 2 < lp[p] < max(lp.values()) - 2]
+    rows.append({"name": "partition_points/NASNet-like(interior)",
+                 "us_per_call": us, "derived": len(interior)})
+    return rows

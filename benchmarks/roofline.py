@@ -1,0 +1,105 @@
+"""Roofline assembly: read results/dryrun.json, emit the per-cell 3-term
+table (compute / memory / collective seconds), dominant bottleneck,
+MODEL_FLOPS ratio, and roofline fractions.
+
+Hardware constants (TPU v5e per brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.models.config import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = {"single": 256, "multi": 512}
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun.json"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D prefill, 2*N*B decode
+    (N = active params for MoE)."""
+    cfg = get_config(arch, "full")
+    shp = SHAPES[shape_name]
+    n = cfg.param_count(active_only=bool(cfg.n_experts))
+    d = shp.tokens_per_step
+    mult = 6.0 if shp.kind == "train" else 2.0
+    return mult * n * d
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("skipped") or not rec.get("ok") or "walker" not in rec:
+        return None
+    w = rec["walker"]
+    chips = CHIPS[rec["mesh"]]
+    compute_s = w["flops_per_device"] / PEAK_FLOPS
+    memory_s = w["traffic_bytes_per_device"] / HBM_BW
+    coll_s = w["collective_total_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())              # perfect-overlap bound
+    mf = model_flops(rec["arch"], rec["shape"]) / chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "hlo_flops_per_chip": w["flops_per_device"],
+        "useful_ratio": mf / w["flops_per_device"]
+        if w["flops_per_device"] else 0.0,
+        # roofline fraction: useful-model-compute time / bound step time
+        "roofline_frac": (mf / PEAK_FLOPS) / step_s if step_s else 0.0,
+        "memory_gb": (rec.get("memory", {}).get("temp_bytes") or 0) / 1e9,
+        "collective_breakdown": w["collective_wire_bytes"],
+    }
+
+
+def load(results_path=RESULTS) -> list[dict]:
+    recs = json.loads(Path(results_path).read_text())
+    out = []
+    for r in recs:
+        a = analyze_record(r)
+        if a:
+            out.append(a)
+    return out
+
+
+def markdown_table(rows, mesh="single") -> str:
+    hdr = ("| arch | shape | compute(s) | memory(s) | collective(s) | "
+           "dominant | 6ND/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac'] * 100:.1f}% |")
+    return "\n".join(lines)
+
+
+def run(reps: int = 1):
+    rows = load()
+    out = []
+    for r in rows:
+        if r["mesh"] != "single":
+            continue
+        out.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}",
+            "us_per_call": 0.0,
+            "derived": (f"dom={r['dominant']} frac="
+                        f"{r['roofline_frac'] * 100:.1f}%")})
+    return out
+
+
+if __name__ == "__main__":
+    rows = load()
+    print(markdown_table(rows, "single"))

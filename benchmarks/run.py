@@ -1,0 +1,59 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: one module per paper table/figure + the roofline.
+
+  Fig. 3   partition_points     candidate partition point counts
+  Fig. 15  latency_grid         beta vs nodes/classes/capacity
+  Fig. 16  vs_random            ~10x over the random algorithm
+  Fig. 17  vs_joint             vs greedy joint optimization (35% @ 50 nodes)
+  Table 2  approx_ratio         approximation ratios + 5.4% optimality
+  Table 3  fault_tolerance      live fault-injection matrix
+  Table 4  emulator_bench       throughput/E2E by cluster shape
+  (ours)   roofline             3-term roofline per dry-run cell
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=None,
+                    help="override per-benchmark repetitions (paper used 50)")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--trials", type=int, default=200,
+                    help="optimality-rate trials (paper used 1000)")
+    args = ap.parse_args()
+
+    from . import (approx_ratio, emulator_bench, fault_tolerance,
+                   latency_grid, partition_points, roofline,
+                   transfer_classes, vs_joint, vs_random)
+
+    suites = {
+        "partition_points": lambda: partition_points.run(),
+        "transfer_classes": lambda: transfer_classes.run(),
+        "latency_grid": lambda: latency_grid.run(args.reps or 4),
+        "vs_random": lambda: vs_random.run(args.reps or 8),
+        "vs_joint": lambda: vs_joint.run(args.reps or 8),
+        "approx_ratio": lambda: approx_ratio.run(args.reps or 10,
+                                                 args.trials),
+        "fault_tolerance": lambda: fault_tolerance.run(),
+        "emulator_bench": lambda: emulator_bench.run(),
+        "roofline": lambda: roofline.run(),
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            rows = fn()
+        except Exception as e:                      # keep the suite running
+            print(f"{name}/SUITE_ERROR,0,{type(e).__name__}:{e}",
+                  file=sys.stdout)
+            continue
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

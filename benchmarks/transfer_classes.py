@@ -1,0 +1,95 @@
+"""Paper Fig. 12 + §5.3: transfer-size class counts (Doane's estimator)
+and the analytic RGG statistics the paper derives.
+
+Fig. 12: the number of histogram bins needed to represent each model's
+candidate-point transfer sizes (paper: most models need ~11, almost all in
+11-13).  §5.3.1: E[r] ~ 4.766 Mbps, sigma ~ 1.398, CV ~ 0.293 over the
+annulus-square uniform node placement.  §5.3.2: RGG clustering coefficient
+C ~ 0.587 and full connectivity of the high-bandwidth subgraph.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.paper_cnns import PAPER_MODELS
+from repro.core import (DEFAULT_COMPRESSION, shannon_bandwidth_mbps,
+                        random_geometric_cluster, MBPS)
+from repro.core.partitioner import transfer_sizes
+
+from .common import timed
+
+
+def doane_bins(x) -> int:
+    """Doane's estimator for histogram bin count."""
+    x = np.asarray(x, dtype=float)
+    n = len(x)
+    if n < 3 or np.std(x) == 0:
+        return 1
+    g1 = float(np.mean(((x - x.mean()) / x.std()) ** 3))
+    sg1 = np.sqrt(6.0 * (n - 2) / ((n + 1) * (n + 3)))
+    return int(1 + np.log2(n) + np.log2(1 + abs(g1) / sg1))
+
+
+def model_bins():
+    rows = []
+    for name, fn in PAPER_MODELS.items():
+        g = fn()
+        pts = g.candidate_partition_points()
+        segs = g.segment_layers(pts)
+        ts = transfer_sizes(g, pts, segs, DEFAULT_COMPRESSION)
+        rows.append((name, doane_bins(ts)))
+    return rows
+
+
+def rgg_stats(n_samples: int = 200_000, seed: int = 0):
+    """Monte-Carlo check of Eq. 18: mean/std/CV of r(x, y) over the paper's
+    uniform annulus-square placement."""
+    rng = np.random.default_rng(seed)
+    b = 150.0
+    mag = rng.uniform(1.0, b, size=(n_samples, 2))
+    sign = rng.choice([-1.0, 1.0], size=(n_samples, 2))
+    pos = mag * sign
+    r = shannon_bandwidth_mbps(np.linalg.norm(pos, axis=1))
+    return float(r.mean()), float(r.std()), float(r.std() / r.mean())
+
+
+def high_class_connectivity(trials: int = 20, n: int = 50):
+    """§5.3.2: the subgraph of above-average-bandwidth edges stays one
+    connected component (P(alpha)=1), enabling k-paths.  The paper models
+    this as a standard RGG — bandwidth from inter-node distance (Eq. 13),
+    H-class edges are those within ~104 m (D(x) >= mu)."""
+    connected = 0
+    for t in range(trials):
+        c = random_geometric_cluster(n, rng=t, edge_model="distance")
+        thr = shannon_bandwidth_mbps(103.944) * MBPS   # D(x) = mu (Eq. 19)
+        adj = c.bw >= thr
+        # BFS from node 0 over the H-class subgraph
+        seen = {0}
+        stack = [0]
+        while stack:
+            u = stack.pop()
+            for v in np.flatnonzero(adj[u]):
+                if v not in seen:
+                    seen.add(int(v))
+                    stack.append(int(v))
+        connected += (len(seen) == n)
+    return connected / trials
+
+
+def run(reps: int = 1):
+    rows = []
+    for name, bins in model_bins():
+        rows.append({"name": f"transfer_classes/{name}", "us_per_call": 0.0,
+                     "derived": bins})
+    (mu, sigma, cv), us = timed(rgg_stats)
+    rows.append({"name": "rgg_stats/mean_mbps (paper 4.766)",
+                 "us_per_call": us, "derived": round(mu, 3)})
+    rows.append({"name": "rgg_stats/std_mbps (paper 1.398)",
+                 "us_per_call": 0.0, "derived": round(sigma, 3)})
+    rows.append({"name": "rgg_stats/cv (paper 0.293)",
+                 "us_per_call": 0.0, "derived": round(cv, 3)})
+    frac, us2 = timed(high_class_connectivity)
+    rows.append({"name": "rgg_stats/H_subgraph_connected (paper P=1)",
+                 "us_per_call": us2, "derived": f"{frac * 100:.0f}%"})
+    return rows

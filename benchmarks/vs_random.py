@@ -1,0 +1,50 @@
+"""Paper Fig. 16: our algorithm vs the random algorithm (~10x average)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (PartitionInfeasible, PlacementInfeasible,
+                        partition_and_place, random_algorithm,
+                        random_geometric_cluster)
+
+from .common import FIG_MODELS, build_model, timed
+
+
+def compare(graph, n_nodes, cap_mb, reps, n_classes=11, seed0=0):
+    ratios, ours_list = [], []
+    for r in range(reps):
+        cluster = random_geometric_cluster(n_nodes, rng=seed0 + 31 * r)
+        try:
+            ours = partition_and_place(graph, cluster, cap_mb * 1e6,
+                                       n_classes=n_classes, rng=r).bottleneck_s
+            rand = np.mean([
+                random_algorithm(graph, cluster, cap_mb * 1e6,
+                                 rng=1000 + 17 * r + j).bottleneck_s
+                for j in range(5)])
+        except (PartitionInfeasible, PlacementInfeasible):
+            continue
+        ratios.append(rand / ours)
+        ours_list.append(ours)
+    return (float(np.mean(ratios)) if ratios else None,
+            float(np.mean(ours_list)) if ours_list else None)
+
+
+def run(reps: int = 8, node_counts=(10, 20, 50), caps=(64, 256)):
+    rows = []
+    all_ratios = []
+    for mname in FIG_MODELS:
+        g = build_model(mname)
+        for n in node_counts:
+            for cap in caps:
+                (ratio, ours), us = timed(compare, g, n, cap, reps)
+                if ratio:
+                    all_ratios.append(ratio)
+                rows.append({
+                    "name": f"vs_random/{mname}/n{n}/cap{cap}MB",
+                    "us_per_call": us / max(reps, 1),
+                    "derived": round(ratio, 2) if ratio else "infeasible"})
+    rows.append({"name": "vs_random/GEOMEAN_speedup", "us_per_call": 0.0,
+                 "derived": round(float(np.exp(np.mean(np.log(all_ratios)))), 2)
+                 if all_ratios else "n/a"})
+    return rows

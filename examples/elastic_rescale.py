@@ -1,0 +1,85 @@
+"""Elastic-rescale demo: train on N simulated hosts, lose some, re-plan the
+mesh, restore the checkpoint onto the smaller fleet, continue at the same
+step — the stateless data pipeline keeps the token stream exact.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/elastic_rescale.py
+"""
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import tempfile
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data import SyntheticTokens
+from repro.launch.sharding import param_shardings
+from repro.launch.steps import make_train_step
+from repro.models import init_params
+from repro.models.layers import set_mesh_axes
+from repro.optim import adamw_init
+from repro.runtime import HeartbeatMonitor, plan_rescale
+
+
+def main():
+    cfg = get_config("granite-3-2b", "smoke")
+    data = SyntheticTokens(vocab=cfg.vocab, seq_len=64, global_batch=8)
+    step_fn = make_train_step(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+
+    # ---- phase 1: 8 devices as a (4, 2) mesh -------------------------------
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    set_mesh_axes(mesh.axis_names, mesh=mesh)
+    print(f"phase 1: training on {mesh.devices.size} devices {mesh.shape}")
+    with mesh:
+        ps = param_shardings(mesh, jax.eval_shape(lambda: params))
+        fn = jax.jit(step_fn, in_shardings=(ps, None, None))
+        for step in range(10):
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in data.batch(step).items()}
+            params, opt, m = fn(params, opt, batch)
+    ckpt = tempfile.mkdtemp(prefix="elastic_")
+    save_checkpoint(ckpt, 10, {"params": params, "opt": opt})
+    print(f"  step 10 loss={float(m['loss']):.4f}; checkpointed")
+
+    # ---- phase 2: heartbeat detects 4 dead hosts; re-plan ------------------
+    clock = [0.0]
+    mon = HeartbeatMonitor([f"host{i}" for i in range(8)], timeout_s=5.0,
+                           clock=lambda: clock[0])
+    clock[0] = 10.0
+    for i in range(4):
+        mon.beat(f"host{i}")
+    dead = mon.sweep()
+    print(f"phase 2: heartbeat monitor declared dead: {dead}")
+    plan = plan_rescale(len(mon.healthy()), prefer_model=2, global_batch=8)
+    print(f"  rescale plan: {plan.mesh_shape} ({plan.note})")
+
+    # ---- phase 3: restore onto the surviving mesh and continue --------------
+    mesh2 = jax.make_mesh(plan.mesh_shape, plan.axis_names,
+                          devices=np.array(jax.devices()[:plan.n_devices]))
+    set_mesh_axes(mesh2.axis_names, mesh=mesh2)
+    with mesh2:
+        ps2 = param_shardings(mesh2, jax.eval_shape(lambda: params))
+        state = restore_checkpoint(ckpt, 10,
+                                   {"params": params, "opt": opt})
+        params2, opt2 = state["params"], state["opt"]
+        fn2 = jax.jit(step_fn, in_shardings=(ps2, None, None))
+        for step in range(10, 20):
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in data.batch(step).items()}
+            params2, opt2, m = fn2(params2, opt2, batch)
+    print(f"phase 3: resumed on {plan.n_devices} devices; "
+          f"step 20 loss={float(m['loss']):.4f}")
+    print("elastic rescale complete — same stream, same step counter.")
+
+
+if __name__ == "__main__":
+    main()

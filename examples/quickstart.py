@@ -1,0 +1,48 @@
+"""Quickstart: partition a DNN and place it on an edge cluster (the paper's
+core algorithm end to end), then on the TPU-pod analogue.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.paper_cnns import PAPER_MODELS
+from repro.core import (joint_greedy, partition_and_place, random_algorithm,
+                        random_geometric_cluster, tpu_cluster)
+from repro.core.pipeline import plan_stages
+from repro.models.config import SHAPES
+
+
+def main():
+    # ---- the paper's setting: ResNet50 on 20 WiFi edge nodes ----------------
+    g = PAPER_MODELS["ResNet50"]()
+    cluster = random_geometric_cluster(20, rng=0)
+    plan = partition_and_place(g, cluster, capacity_bytes=64e6,
+                               n_classes=11, rng=1)
+    print("=" * 70)
+    print("ResNet50 on a 20-node edge cluster (64 MB nodes):")
+    print(plan.describe())
+
+    rand = np.mean([random_algorithm(g, cluster, 64e6, rng=s).bottleneck_s
+                    for s in range(10)])
+    jg = joint_greedy(g, cluster, 64e6)
+    print(f"\n  random algorithm (avg of 10): {rand*1e3:8.1f} ms bottleneck")
+    print(f"  joint-greedy:                 {jg.bottleneck_s*1e3:8.1f} ms")
+    print(f"  SEIFER (ours):                {plan.bottleneck_s*1e3:8.1f} ms"
+          f"  ({rand/plan.bottleneck_s:.1f}x better than random)")
+
+    # ---- the TPU restatement: llama3-405b across 2 pods --------------------
+    cfg = get_config("llama3-405b", "full")
+    sp = plan_stages(cfg, SHAPES["prefill_32k"],
+                     cluster=tpu_cluster(n_pods=2, slots_per_pod=8),
+                     hbm_per_stage_bytes=16e9 * 32)
+    print("\n" + "=" * 70)
+    print("llama3-405b prefill, partitioned into pipeline stages on 2 TPU "
+          "pods\n(16 stage-slots, DCN between pods is the min-bandwidth "
+          "edge):")
+    print(sp.describe())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Architecture configs: the 10 assigned LM-family architectures plus the
+paper's own CNN/text model DAGs (paper_cnns)."""
+
+from __future__ import annotations
+
+ARCH_IDS = [
+    "minicpm-2b",
+    "deepseek-7b",
+    "granite-3-2b",
+    "llama3-405b",
+    "llama4-maverick-400b-a17b",
+    "deepseek-v3-671b",
+    "mamba2-1.3b",
+    "zamba2-7b",
+    "llama-3.2-vision-90b",
+    "whisper-large-v3",
+]
+
+
+def get_config(arch_id: str, preset: str = "full"):
+    """Load an architecture config by id.  preset='full' is the exact
+    published configuration; preset='smoke' is a reduced same-family config
+    for CPU tests."""
+    mod_name = arch_id.replace("-", "_").replace(".", "_")
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.full_config() if preset == "full" else mod.smoke_config()

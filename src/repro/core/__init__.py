@@ -1,0 +1,41 @@
+"""SEIFER core: DNN partitioning & placement to minimize bottleneck latency.
+
+Reproduces Parthasarathy & Krishnamachari, "Partitioning and Deployment of
+Deep Neural Networks on Edge Clusters" (2023), adapted to TPU pods.
+"""
+
+from .api import SeiferPlan, partition_and_place
+from .baselines import (BaselineResult, exact_optimal_bottleneck,
+                        joint_greedy, random_algorithm)
+from .bottleneck import (DEFAULT_COMPRESSION, PlanEvaluation,
+                         bottleneck_latency, evaluate, theorem1_bound,
+                         transfer_latencies)
+from .cluster import (ClusterGraph, blob_cluster, grid_cluster,
+                      random_geometric_cluster, ring_cluster,
+                      shannon_bandwidth_mbps, tpu_cluster, GBPS, MBPS)
+from .graph import Layer, LayerGraph, linear_chain
+from .kpath import find_k_path
+from .partitioner import (NotPartitionable, PartitionInfeasible,
+                          PartitionPlan, build_partition_graph,
+                          min_cost_path_reference, optimal_partitions,
+                          transfer_sizes)
+from .placement import (PlacementInfeasible, PlacementResult, classify,
+                        kpath_matching, place_with_retry, subgraph_k_path)
+
+__all__ = [
+    "SeiferPlan", "partition_and_place",
+    "BaselineResult", "exact_optimal_bottleneck", "joint_greedy",
+    "random_algorithm",
+    "DEFAULT_COMPRESSION", "PlanEvaluation", "bottleneck_latency", "evaluate",
+    "theorem1_bound", "transfer_latencies",
+    "ClusterGraph", "blob_cluster", "grid_cluster",
+    "random_geometric_cluster", "ring_cluster", "shannon_bandwidth_mbps",
+    "tpu_cluster", "GBPS", "MBPS",
+    "Layer", "LayerGraph", "linear_chain",
+    "find_k_path",
+    "NotPartitionable", "PartitionInfeasible", "PartitionPlan",
+    "build_partition_graph", "min_cost_path_reference", "optimal_partitions",
+    "transfer_sizes",
+    "PlacementInfeasible", "PlacementResult", "classify", "kpath_matching",
+    "place_with_retry", "subgraph_k_path",
+]

@@ -1,0 +1,63 @@
+"""Top-level SEIFER pipeline: partition a model, place it on a cluster."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .bottleneck import DEFAULT_COMPRESSION, PlanEvaluation
+from .cluster import ClusterGraph
+from .graph import LayerGraph
+from .partitioner import PartitionPlan, optimal_partitions
+from .placement import PlacementResult, place_with_retry
+
+
+@dataclass
+class SeiferPlan:
+    partition: PartitionPlan
+    placement: PlacementResult
+
+    @property
+    def bottleneck_s(self) -> float:
+        return self.placement.bottleneck_s
+
+    @property
+    def throughput_hz(self) -> float:
+        return self.placement.evaluation.throughput_hz
+
+    @property
+    def evaluation(self) -> PlanEvaluation:
+        return self.placement.evaluation
+
+    def stage_of_node(self) -> dict[int, int]:
+        """node id -> stage index (0 = dispatcher, 1.. = compute partitions)."""
+        return {v: i for i, v in enumerate(self.placement.nodes)}
+
+    def describe(self) -> str:
+        lines = [f"SEIFER plan: {self.partition.n_partitions} partitions on "
+                 f"{len(self.placement.nodes)} nodes, "
+                 f"beta={self.bottleneck_s * 1e3:.2f} ms, "
+                 f"throughput={self.throughput_hz:.3f} Hz "
+                 f"(Theorem-1 bound {self.evaluation.theorem1_s * 1e3:.2f} ms, "
+                 f"ratio {self.evaluation.approx_ratio:.3f})"]
+        nodes = self.placement.nodes
+        lines.append(f"  dispatcher -> node {nodes[0]}")
+        for r, (i, j) in enumerate(self.partition.runs):
+            pts = self.partition.points
+            lines.append(
+                f"  stage {r}: points[{i}..{j}] ({pts[i]}..{pts[j]}) "
+                f"mem={self.partition.memory_bytes[r]/1e6:.1f}MB -> node {nodes[r+1]}"
+                f" (in-transfer {self.partition.boundary_sizes[r]/1e6:.2f}MB)")
+        return "\n".join(lines)
+
+
+def partition_and_place(graph: LayerGraph, cluster: ClusterGraph,
+                        capacity_bytes: float, n_classes: int = 3,
+                        rng: np.random.Generator | int = 0,
+                        lam: float = DEFAULT_COMPRESSION) -> SeiferPlan:
+    """The paper's full algorithm: Algorithm 1 then Algorithm 3."""
+    plan = optimal_partitions(graph, capacity_bytes, lam)
+    placement = place_with_retry(plan.boundary_sizes, cluster, n_classes, rng,
+                                 basis=plan.candidate_sizes)
+    return SeiferPlan(partition=plan, placement=placement)

@@ -1,0 +1,255 @@
+"""Layer-DAG representation and candidate partition points (paper §3.1).
+
+The paper distills a model's computation DAG ``G_m`` into a linear chain of
+*candidate partition points*: vertices v such that
+
+  (1) LP(v) — the longest-path ("topological") depth from the source — is
+      unique among all vertices, and
+  (2) AP(p_prev, v) — every path leaving the previous candidate point passes
+      through v (checked with a depth-bounded DFS).
+
+Cutting the model at such a vertex yields two halves whose only dataflow is
+v's output tensor, so the partition boundary transfer is exactly eta(v).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Layer:
+    """One vertex of the model DAG.
+
+    out_bytes    -- size of this layer's output tensor (uncompressed, bytes)
+    param_bytes  -- parameter memory attributed to this layer (bytes)
+    work_bytes   -- peak scratch/activation memory while executing (bytes)
+    flops        -- forward FLOPs (used by the emulator's compute model)
+    side_in_bytes -- bytes of *side inputs* this layer consumes from outside
+                    the linear stream (e.g. encoder output for decoder
+                    cross-attention, image embeddings for VLM cross-attention).
+                    Charged to the boundary transfer of any cut that separates
+                    the side-input producer from this layer.
+    shared_group -- optional tag: layers in the same group share parameters
+                    (zamba2-style shared blocks).  Cutting between two call
+                    sites duplicates the shared weights into both partitions;
+                    the partitioner's memory model accounts for this.
+    """
+
+    name: str
+    out_bytes: float = 0.0
+    param_bytes: float = 0.0
+    work_bytes: float = 0.0
+    flops: float = 0.0
+    side_in_bytes: float = 0.0
+    shared_group: str | None = None
+
+
+class LayerGraph:
+    """A DAG of :class:`Layer` vertices with a single source and sink."""
+
+    def __init__(self) -> None:
+        self.layers: dict[str, Layer] = {}
+        self.succ: dict[str, list[str]] = {}
+        self.pred: dict[str, list[str]] = {}
+
+    # -- construction -----------------------------------------------------
+    def add(self, layer: Layer, inputs: tuple[str, ...] | list[str] = ()) -> str:
+        if layer.name in self.layers:
+            raise ValueError(f"duplicate layer {layer.name!r}")
+        self.layers[layer.name] = layer
+        self.succ[layer.name] = []
+        self.pred[layer.name] = list(inputs)
+        for u in inputs:
+            if u not in self.layers:
+                raise ValueError(f"unknown input {u!r} for {layer.name!r}")
+            self.succ[u].append(layer.name)
+        return layer.name
+
+    def add_simple(self, name: str, inputs=(), out_bytes=0.0, param_bytes=0.0,
+                   work_bytes=0.0, flops=0.0, **kw) -> str:
+        return self.add(
+            Layer(name, out_bytes=out_bytes, param_bytes=param_bytes,
+                  work_bytes=work_bytes, flops=flops, **kw), inputs)
+
+    # -- basic structure ---------------------------------------------------
+    def source(self) -> str:
+        srcs = [v for v in self.layers if not self.pred[v]]
+        if len(srcs) != 1:
+            raise ValueError(f"graph must have exactly one source, got {srcs}")
+        return srcs[0]
+
+    def sink(self) -> str:
+        snks = [v for v in self.layers if not self.succ[v]]
+        if len(snks) != 1:
+            raise ValueError(f"graph must have exactly one sink, got {snks}")
+        return snks[0]
+
+    def topo_order(self) -> list[str]:
+        indeg = {v: len(self.pred[v]) for v in self.layers}
+        stack = [v for v in self.layers if indeg[v] == 0]
+        order: list[str] = []
+        while stack:
+            v = stack.pop()
+            order.append(v)
+            for w in self.succ[v]:
+                indeg[w] -= 1
+                if indeg[w] == 0:
+                    stack.append(w)
+        if len(order) != len(self.layers):
+            raise ValueError("graph has a cycle")
+        return order
+
+    # -- paper §3.1 ---------------------------------------------------------
+    def longest_path_depths(self) -> dict[str, int]:
+        """LP(v): length of the longest path from the source to v.
+
+        Topologically sort, then relax every out-edge (paper §3.1).
+        """
+        lp = {v: 0 for v in self.layers}
+        for v in self.topo_order():
+            for w in self.succ[v]:
+                lp[w] = max(lp[w], lp[v] + 1)
+        return lp
+
+    def all_paths_through(self, v_prev: str, v: str,
+                          lp: dict[str, int] | None = None) -> bool:
+        """AP(v_prev, v): do all paths from ``v_prev`` pass through ``v``?
+
+        Paper's modified DFS: recurse on out-edges; encountering a vertex
+        deeper than v ==> some path bypassed v ==> False.  Reaching v ends
+        that branch successfully.  Memoized, so polynomial.
+        """
+        lp = lp or self.longest_path_depths()
+        target_depth = lp[v]
+        ok: dict[str, bool] = {}
+
+        def dfs(u: str) -> bool:
+            if u == v:
+                return True
+            if lp[u] >= target_depth:   # bypassed v (deeper or parallel at depth)
+                return False
+            if u in ok:
+                return ok[u]
+            if not self.succ[u]:        # dead-ends before v
+                ok[u] = False
+                return False
+            res = all(dfs(w) for w in self.succ[u])
+            ok[u] = res
+            return res
+
+        return dfs(v_prev)
+
+    def candidate_partition_points(self) -> list[str]:
+        """All candidate partition points, in topological-depth order.
+
+        p_0 is the source; p_k is the next vertex u (by depth) with a unique
+        LP value and AP(p_{k-1}, u) = true.  Models whose DAG admits no such
+        vertex beyond the source (NASNet-style dense cross-links) yield only
+        [source, ...maybe sink] — callers treat < 2 interior points as
+        "not partitionable".
+        """
+        lp = self.longest_path_depths()
+        # Count how many vertices sit at each depth: uniqueness of LP(u).
+        depth_count: dict[int, int] = {}
+        for d in lp.values():
+            depth_count[d] = depth_count.get(d, 0) + 1
+        ordered = sorted(self.layers, key=lambda v: (lp[v], v))
+        src = self.source()
+        points = [src]
+        for u in ordered:
+            if u == src or depth_count[lp[u]] != 1:
+                continue
+            if self.all_paths_through(points[-1], u, lp):
+                points.append(u)
+        return points
+
+    # -- memory / transfer helpers ------------------------------------------
+    def segment_layers(self, points: list[str]) -> list[list[str]]:
+        """Partition all vertices into segments between consecutive candidate
+        points.  Segment k (k >= 1) holds layers with LP in
+        (LP(p_{k-1}), LP(p_k)]; segment 0 holds layers with LP <= LP(p_0)
+        (normally just the source).  Every layer belongs to exactly one
+        segment because candidate points have unique depth and dominate all
+        paths.
+        """
+        lp = self.longest_path_depths()
+        bounds = [lp[p] for p in points]
+        segs: list[list[str]] = [[] for _ in points]
+        for v in self.layers:
+            d = lp[v]
+            # first segment whose bound >= d
+            idx = None
+            for k, b in enumerate(bounds):
+                if d <= b:
+                    idx = k
+                    break
+            if idx is None:
+                # deeper than the last candidate point (sink not a candidate):
+                # attach to the final segment.
+                idx = len(points) - 1
+            segs[idx].append(v)
+        return segs
+
+    def run_memory_bytes(self, points: list[str], segs: list[list[str]],
+                         i: int, j: int) -> float:
+        """omega([p_i..p_j]): memory footprint of the partition owning
+        segments i..j — sum of param bytes (shared groups counted once per
+        partition) plus the peak working-set bytes of any owned layer.
+        """
+        params = 0.0
+        peak_work = 0.0
+        seen_groups: set[str] = set()
+        for k in range(i, j + 1):
+            for name in segs[k]:
+                ly = self.layers[name]
+                if ly.shared_group is not None:
+                    if ly.shared_group in seen_groups:
+                        pass        # shared weights already counted here
+                    else:
+                        seen_groups.add(ly.shared_group)
+                        params += ly.param_bytes
+                else:
+                    params += ly.param_bytes
+                peak_work = max(peak_work, ly.work_bytes + ly.out_bytes)
+        return params + peak_work
+
+    def boundary_side_bytes(self, segs: list[list[str]], j: int) -> float:
+        """Side-input bytes that must additionally cross a cut placed after
+        segment j: any layer in a segment > j with side inputs needs those
+        tensors forwarded through the cut (enc-dec / VLM cross-attn)."""
+        extra = 0.0
+        for k in range(j + 1, len(segs)):
+            for name in segs[k]:
+                extra = max(extra, self.layers[name].side_in_bytes)
+        return extra
+
+    def total_param_bytes(self) -> float:
+        seen: set[str] = set()
+        total = 0.0
+        for ly in self.layers.values():
+            if ly.shared_group is not None:
+                if ly.shared_group in seen:
+                    continue
+                seen.add(ly.shared_group)
+            total += ly.param_bytes
+        return total
+
+    def total_flops(self) -> float:
+        return sum(ly.flops for ly in self.layers.values())
+
+    def __len__(self) -> int:
+        return len(self.layers)
+
+
+def linear_chain(n: int, out_bytes=1.0, param_bytes=1.0) -> LayerGraph:
+    """Convenience: a purely sequential n-layer chain (every vertex is a
+    candidate partition point)."""
+    g = LayerGraph()
+    prev: tuple[str, ...] = ()
+    for i in range(n):
+        nm = f"l{i}"
+        g.add(Layer(nm, out_bytes=out_bytes, param_bytes=param_bytes), prev)
+        prev = (nm,)
+    return g

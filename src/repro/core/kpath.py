@@ -1,0 +1,204 @@
+"""Color-coding k-path (Alon, Yuster & Zwick 1995) — paper Algorithm 2's core.
+
+Finds a simple path visiting exactly ``k`` vertices in an undirected graph,
+optionally with fixed endpoints and a restricted set of usable vertices.
+
+Implementation notes (beyond-paper engineering, documented in DESIGN.md §8):
+  * trials are batched and vectorized with numpy: dp[S] is a (T, n) boolean
+    array ("some colorful path with color-set S ends at v in trial t");
+    transitions are batched boolean matmuls, so a batch of 64 trials costs
+    2^k * k matmuls of (T, n) x (n, n).
+  * adaptive early exit: feasible instances almost always succeed in the
+    first batch on the dense graphs the paper targets (complete WiFi
+    clusters, TPU cliques); infeasible instances pay the full trial budget,
+    so callers binary-searching a threshold see conservative 'False's with
+    probability <= exp(-trials/e^k).
+  * k > KMAX_EXACT falls back to a greedy maximin insertion + 2-opt repair
+    heuristic (the paper caps k <= 4 and never needs this; our 405B pipeline
+    placements can need k ~ 14).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+KMAX_COLOR = 12          # color-coding DP beyond this is not worth 2^k cost
+_DEF_BATCH = 64
+
+
+def _trial_budget(k: int) -> int:
+    # e^k trials give ~63% success for a single existing path; 3e^k => ~95%.
+    return max(1, min(int(math.ceil(3 * math.e ** min(k, 9))), 25000))
+
+
+def find_k_path(adj: np.ndarray, k: int, start: int | None = None,
+                end: int | None = None, avail: np.ndarray | None = None,
+                rng: np.random.Generator | int = 0,
+                max_trials: int | None = None) -> list[int] | None:
+    """Return a list of ``k`` distinct vertices forming a path, or None.
+
+    adj    -- (n, n) boolean adjacency (symmetric, no self loops required)
+    start  -- required first vertex (or None = free)
+    end    -- required last vertex (or None = free)
+    avail  -- boolean mask of vertices allowed on the path (must include
+              start/end if given); default all.
+    """
+    rng = np.random.default_rng(rng) if isinstance(rng, int) else rng
+    n = adj.shape[0]
+    avail = np.ones(n, dtype=bool) if avail is None else avail.astype(bool).copy()
+    if start is not None:
+        avail[start] = True
+    if end is not None:
+        avail[end] = True
+    if int(avail.sum()) < k:
+        return None
+
+    # ---- trivial sizes ----------------------------------------------------
+    if k <= 0:
+        return []
+    if k == 1:
+        if start is not None and end is not None and start != end:
+            return None
+        v = start if start is not None else (end if end is not None else
+                                             int(np.flatnonzero(avail)[0]))
+        return [v]
+    if k == 2:
+        return _two_path(adj, start, end, avail)
+
+    if k > KMAX_COLOR:
+        return _greedy_maximin_path(adj, k, start, end, avail, rng)
+
+    # ---- color-coding DP ----------------------------------------------------
+    budget = max_trials if max_trials is not None else _trial_budget(k)
+    batch = min(_DEF_BATCH, budget)
+    adj_b = (adj & avail[None, :] & avail[:, None]).astype(np.float32)
+    done = 0
+    while done < budget:
+        t = min(batch, budget - done)
+        done += t
+        path = _color_trial_batch(adj, adj_b, k, start, end, avail, rng, t)
+        if path is not None:
+            return path
+    return None
+
+
+def _two_path(adj, start, end, avail):
+    n = adj.shape[0]
+    ok = adj & avail[None, :] & avail[:, None]
+    if start is not None and end is not None:
+        return [start, end] if ok[start, end] else None
+    if start is not None:
+        js = np.flatnonzero(ok[start])
+        return [start, int(js[0])] if len(js) else None
+    if end is not None:
+        js = np.flatnonzero(ok[:, end])
+        return [int(js[0]), end] if len(js) else None
+    idx = np.argwhere(np.triu(ok, 1))
+    return [int(idx[0][0]), int(idx[0][1])] if len(idx) else None
+
+
+def _color_trial_batch(adj, adj_f32, k, start, end, avail, rng, t):
+    """One batch of ``t`` random colorings; returns a path or None."""
+    n = adj.shape[0]
+    colors = rng.integers(0, k, size=(t, n))
+    if start is not None:
+        # WLOG recolor the fixed start to color 0 (keeps uniformity of the rest)
+        colors[:, start] = 0
+    cmask = np.stack([(colors == c) & avail[None, :] for c in range(k)])  # (k,t,n)
+
+    full = (1 << k) - 1
+    dp: list[np.ndarray | None] = [None] * (1 << k)
+    if start is not None:
+        d0 = np.zeros((t, n), dtype=bool)
+        d0[:, start] = True
+        dp[1 << 0] = d0
+    else:
+        for c in range(k):
+            dp[1 << c] = cmask[c].copy()
+
+    order = sorted(range(1, full + 1), key=lambda s: s.bit_count())
+    for S in order:
+        cur = dp[S]
+        if cur is None or S == full:
+            continue
+        if not cur.any():
+            continue
+        reach = (cur.astype(np.float32) @ adj_f32) > 0          # (t, n)
+        for c in range(k):
+            if S >> c & 1:
+                continue
+            nxt = reach & cmask[c]
+            T = S | (1 << c)
+            dp[T] = nxt if dp[T] is None else (dp[T] | nxt)
+
+    final = dp[full]
+    if final is None:
+        return None
+    if end is not None:
+        hits = np.flatnonzero(final[:, end])
+        if not len(hits):
+            return None
+        trial = int(hits[0]); last = end
+    else:
+        ts, vs = np.nonzero(final)
+        if not len(ts):
+            return None
+        trial = int(ts[0]); last = int(vs[0])
+    return _reconstruct(adj, dp, colors[trial], k, trial, last, avail)
+
+
+def _reconstruct(adj, dp, colors, k, trial, last, avail):
+    """Walk the DP table backwards to emit the actual vertex sequence."""
+    path = [last]
+    S = (1 << k) - 1
+    cur = last
+    for _ in range(k - 1):
+        S2 = S & ~(1 << int(colors[cur]))
+        prev_tab = dp[S2]
+        cand = np.flatnonzero(prev_tab[trial] & adj[:, cur] & avail)
+        # cand can contain the current vertex only if colors differ; colorful
+        # paths guarantee distinctness, pick any witness.
+        cur = int(cand[0])
+        path.append(cur)
+        S = S2
+    path.reverse()
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Long-path fallback (k > KMAX_COLOR): greedy insertion + repair.
+# ---------------------------------------------------------------------------
+
+def _greedy_maximin_path(adj, k, start, end, avail, rng,
+                         restarts: int = 32) -> list[int] | None:
+    n = adj.shape[0]
+    nodes = np.flatnonzero(avail)
+    for attempt in range(restarts):
+        order = list(rng.permutation(nodes))
+        path = [start] if start is not None else [int(order.pop())]
+        if start is not None and start in order:
+            order.remove(start)
+        if end is not None and end in order:
+            order.remove(end)
+        target = k - (1 if end is not None else 0)
+        ok = True
+        while len(path) < target:
+            nxts = [v for v in order if adj[path[-1], v] and v not in path]
+            if not nxts:
+                ok = False
+                break
+            v = int(nxts[0])
+            path.append(v)
+            order.remove(v)
+        if not ok:
+            continue
+        if end is not None:
+            if adj[path[-1], end]:
+                path.append(end)
+            else:
+                continue
+        if len(path) == k:
+            return path
+    return None

@@ -1,0 +1,177 @@
+"""Placement of partitions onto the cluster graph (paper §3.2.2, Algs. 2-3).
+
+Transfer sizes are binned into classes; cluster edges are thresholded with
+tau (Eq. 8); the longest highest-class subarrays of S are matched first onto
+maximin-bandwidth k-paths found by color-coding with a binary search over the
+edge-weight threshold (Algorithm 2).  Theorem 1 gives the lower bound
+max(S)/max(E_c) that the matching tries to reach.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .bottleneck import PlanEvaluation, evaluate
+from .cluster import ClusterGraph
+from .kpath import find_k_path
+
+
+class PlacementInfeasible(Exception):
+    pass
+
+
+@dataclass
+class PlacementResult:
+    nodes: list[int]                 # N: len(S)+1 node ids; N[0] = dispatcher
+    evaluation: PlanEvaluation
+    n_classes: int
+    thresholds: list[float] = field(default_factory=list)
+
+    @property
+    def bottleneck_s(self) -> float:
+        return self.evaluation.bottleneck_s
+
+
+def classify(values, n_classes: int, basis=None) -> np.ndarray:
+    """Quantile-bin ``values`` into classes 0..n_classes-1 (higher = larger),
+    with bin edges from ``basis`` (default: the values themselves) — §5.2.1's
+    histogram-style transfer-size classes."""
+    values = np.asarray(values, dtype=float)
+    basis = values if basis is None else np.asarray(basis, dtype=float)
+    if n_classes <= 1 or len(np.unique(basis)) <= 1:
+        return np.zeros(len(values), dtype=int)
+    qs = np.quantile(basis, np.linspace(0, 1, n_classes + 1)[1:-1])
+    return np.searchsorted(qs, values, side="left").astype(int)
+
+
+def _threshold_levels(cluster: ClusterGraph, max_levels: int = 1500) -> np.ndarray:
+    """Candidate thresholds for Algorithm 2's binary search: the full sorted
+    edge list (as in the paper — needed to hit the Theorem-1 optimum, which
+    requires isolating the single best edge), quantile-coarsened only for
+    very large clusters."""
+    w = np.unique(cluster.edge_weights())
+    if len(w) > max_levels:
+        w = np.unique(np.quantile(w, np.linspace(0, 1, max_levels)))
+    return w
+
+
+def subgraph_k_path(cluster: ClusterGraph, k: int,
+                    start: int | None, end: int | None,
+                    avail: np.ndarray, rng: np.random.Generator,
+                    levels: np.ndarray | None = None):
+    """Algorithm 2 (SUBGRAPH-K-PATH): maximize the threshold t such that the
+    induced subgraph {e : w(e) >= t} contains a k-path with the required
+    endpoints; returns (path, threshold) or None."""
+    if levels is None:
+        levels = _threshold_levels(cluster)
+    # quick infeasibility check at the weakest threshold
+    adj_all = cluster.bw >= levels[0]
+    base = find_k_path(adj_all, k, start, end, avail, rng)
+    if base is None:
+        return None
+    best = (base, float(levels[0]))
+    lo, hi = 1, len(levels) - 1
+    while lo <= hi:
+        mid = (lo + hi) // 2
+        adj = cluster.bw >= levels[mid]
+        path = find_k_path(adj, k, start, end, avail, rng)
+        if path is not None:
+            best = (path, float(levels[mid]))
+            lo = mid + 1
+        else:
+            hi = mid - 1
+    return best
+
+
+def _class_subarrays(classes: np.ndarray, x: int) -> list[tuple[int, int]]:
+    """FIND-SUBARRAYS: maximal [a, b) index runs with classes[a:b] == x."""
+    runs = []
+    i = 0
+    m = len(classes)
+    while i < m:
+        if classes[i] == x:
+            j = i
+            while j < m and classes[j] == x:
+                j += 1
+            runs.append((i, j))
+            i = j
+        else:
+            i += 1
+    return runs
+
+
+def kpath_matching(sizes, cluster: ClusterGraph, n_classes: int,
+                   rng: np.random.Generator | int = 0,
+                   basis=None) -> PlacementResult:
+    """Algorithm 3 (K-PATH-MATCHING).
+
+    sizes -- boundary transfer bytes, dispatcher edge first (len m);
+             requires m+1 distinct cluster nodes.
+    basis -- distribution used for class binning (the model's candidate
+             transfer sizes, §5.2.1); default: ``sizes`` itself.
+    """
+    rng = np.random.default_rng(rng) if isinstance(rng, int) else rng
+    sizes = np.asarray(sizes, dtype=float)
+    m = len(sizes)
+    if m + 1 > cluster.n:
+        raise PlacementInfeasible(
+            f"need {m + 1} nodes for {m} boundaries, cluster has {cluster.n}")
+
+    classes = classify(sizes, n_classes, basis)
+    n = cluster.n
+    N: list[int | None] = [None] * (m + 1)
+    assigned = np.zeros(n, dtype=bool)
+    levels = _threshold_levels(cluster)
+    thresholds: list[float] = []
+
+    for x in sorted(set(classes.tolist()), reverse=True):
+        runs = _class_subarrays(classes, x)
+        runs.sort(key=lambda ab: ab[1] - ab[0], reverse=True)
+        for (a, b) in runs:
+            # S[a:b] spans node slots a..b inclusive
+            start, endv = N[a], N[b]
+            k = b - a + 1
+            avail = ~assigned
+            if start is not None:
+                avail[start] = True
+            if endv is not None:
+                avail[endv] = True
+            res = subgraph_k_path(cluster, k, start, endv, avail, rng, levels)
+            if res is None:
+                raise PlacementInfeasible(
+                    f"no {k}-path for class-{x} subarray S[{a}:{b}] "
+                    f"({int((~assigned).sum())} nodes free)")
+            path, thr = res
+            thresholds.append(thr)
+            for off, v in enumerate(path):
+                slot = a + off
+                if N[slot] is not None and N[slot] != v:
+                    raise PlacementInfeasible("endpoint mismatch")
+                N[slot] = v
+                assigned[v] = True
+
+    nodes = [int(v) for v in N]       # type: ignore[arg-type]
+    return PlacementResult(nodes=nodes,
+                           evaluation=evaluate(sizes, nodes, cluster),
+                           n_classes=n_classes, thresholds=thresholds)
+
+
+def place_with_retry(sizes, cluster: ClusterGraph, n_classes: int,
+                     rng: np.random.Generator | int = 0,
+                     basis=None) -> PlacementResult:
+    """Paper §3.2.2: 'in this case, we can re-run the algorithm with fewer
+    bandwidth classes' — halve until 1 class, then give up."""
+    rng = np.random.default_rng(rng) if isinstance(rng, int) else rng
+    nc = n_classes
+    last_err: Exception | None = None
+    while nc >= 1:
+        try:
+            return kpath_matching(sizes, cluster, nc, rng, basis)
+        except PlacementInfeasible as e:      # pragma: no cover - rare path
+            last_err = e
+            if nc == 1:
+                break
+            nc = max(1, nc // 2)
+    raise PlacementInfeasible(str(last_err))

@@ -1,0 +1,6 @@
+from .core import Event, Simulator
+from .pipeline import PipelineEmulator, EmulatorConfig
+from .faults import FaultInjector, LinkFault, NodeFault
+
+__all__ = ["Event", "Simulator", "PipelineEmulator", "EmulatorConfig",
+           "FaultInjector", "LinkFault", "NodeFault"]

@@ -1,0 +1,55 @@
+"""Fault injection schedules (the ChaosMesh analogue)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .pipeline import PipelineEmulator
+
+
+@dataclass
+class NodeFault:
+    time_s: float
+    node: int
+    recover_after_s: float | None = None     # None = permanent
+
+
+@dataclass
+class LinkFault:
+    """Temporarily zero the bandwidth of one link (network fault)."""
+    time_s: float
+    a: int
+    b: int
+    duration_s: float
+
+
+class FaultInjector:
+    def __init__(self, emu: PipelineEmulator):
+        self.emu = emu
+
+    def schedule(self, faults) -> None:
+        for f in faults:
+            if isinstance(f, NodeFault):
+                self.emu.sim.at(f.time_s,
+                                lambda f=f: self.emu.kill_node(f.node))
+                if f.recover_after_s is not None:
+                    self.emu.sim.at(f.time_s + f.recover_after_s,
+                                    lambda f=f: self.emu.revive_node(f.node))
+            elif isinstance(f, LinkFault):
+                bw = self.emu.cluster.bw
+
+                def drop(f=f, saved=None):
+                    saved = bw[f.a, f.b]
+                    bw[f.a, f.b] = bw[f.b, f.a] = 0.0
+                    self.emu.sim.note(f"link ({f.a},{f.b}) DOWN")
+
+                    def restore():
+                        bw[f.a, f.b] = bw[f.b, f.a] = saved
+                        self.emu.sim.note(f"link ({f.a},{f.b}) restored")
+                    self.emu.sim.after(f.duration_s, restore)
+
+                self.emu.sim.at(f.time_s, drop)
+            else:
+                raise TypeError(f)

@@ -1,0 +1,258 @@
+"""Cluster inference-pipeline emulator (paper §6.2 / Table 4, in software).
+
+Models the SEIFER runtime: a dispatcher node feeds batches into a chain of
+inference pods placed on cluster nodes; each hop is a token-bucket-limited
+link (the ChaosMesh TC-TBF analogue); each pod computes, then forwards the
+compressed intermediate activation.  Compute and IO overlap (the paper's
+separate inference/IO containers), so steady-state throughput is
+1 / max_k max(compute_k, transfer_k) — Equation (1) — and the paper's
+communication-dominated regime reduces it to Eq. (2).
+
+Reliability model (paper §4.4): every hop is ack'd; the sender holds each
+batch until the receiver acks, so node/link failures never lose data — the
+sender reconnects (with retry backoff) and resends, exactly like the
+paper's TCP-reconnect loops.  Node failures evict the pod; after a
+detection + reschedule delay (Kubernetes analogue) the partition restarts
+on a healthy spare node and the upstream neighbour reconnects.
+
+Straggler mitigation (beyond paper, DESIGN.md §5): when a node's observed
+service time exceeds ``straggler_factor`` x the fleet median, the runtime
+migrates its partition to the fastest spare node.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.cluster import ClusterGraph
+from .core import Simulator
+
+
+@dataclass
+class EmulatorConfig:
+    node_flops: float = 20e9          # RPi-class: ~20 GFLOP/s effective
+    detection_s: float = 2.0          # failure detection (heartbeat timeout)
+    reschedule_s: float = 8.0         # pod restart on a new node
+    retry_s: float = 0.5              # TCP reconnect retry interval
+    ack_bytes: float = 64.0
+    straggler_factor: float = 3.0
+    straggler_check_s: float = 20.0
+    enable_straggler_migration: bool = False
+
+
+class _Stage:
+    """One partition hosted on a (replaceable) node."""
+
+    def __init__(self, idx, node, compute_s, out_bytes):
+        self.idx = idx
+        self.node = node
+        self.compute_s = compute_s       # seconds per batch on nominal node
+        self.out_bytes = out_bytes       # compressed boundary bytes (0=last)
+        self.busy = False
+        self.sending = False             # the link carries one batch at a time
+        self.outbox = deque()
+        self.inbox = deque()
+        self.unacked = None              # batch held until ack (reliability)
+        self.service_times: list[float] = []
+
+
+class PipelineEmulator:
+    """Emulates one SEIFER plan on a cluster; measures throughput/E2E."""
+
+    def __init__(self, cluster: ClusterGraph, nodes: list[int],
+                 boundary_bytes: list[float], compute_flops: list[float],
+                 cfg: EmulatorConfig | None = None,
+                 rng: np.random.Generator | int = 0):
+        """nodes: dispatcher + one node per partition (len = parts + 1).
+        boundary_bytes[k]: bytes sent from stage k to k+1 (k=0 dispatcher).
+        compute_flops[k]: forward FLOPs of partition k."""
+        self.cluster = cluster
+        self.cfg = cfg or EmulatorConfig()
+        self.rng = np.random.default_rng(rng) if isinstance(rng, int) else rng
+        self.sim = Simulator()
+        self.down: set[int] = set()
+        self.spares = [n for n in range(cluster.n) if n not in nodes]
+        n_parts = len(boundary_bytes)
+        # stage 0 = dispatcher (no compute), stages 1..n = partitions
+        self.stages: list[_Stage] = []
+        for k in range(n_parts + 1):
+            comp = 0.0 if k == 0 else (
+                compute_flops[k - 1] / self.cfg.node_flops
+                / cluster.compute_scale[nodes[k]])
+            outb = boundary_bytes[k] if k < n_parts else 0.0
+            self.stages.append(_Stage(k, nodes[k], comp, outb))
+        self.completed: list[tuple[float, float]] = []   # (t_done, e2e)
+        self._next_id = 0
+
+    # -- network helpers ----------------------------------------------------
+    def _bw(self, a: int, b: int) -> float:
+        if a in self.down or b in self.down:
+            return 0.0
+        return self.cluster.bw[a, b]
+
+    # -- batch flow ---------------------------------------------------------
+    def submit(self, t_arrival: float) -> None:
+        bid = self._next_id
+        self._next_id += 1
+        self.sim.at(t_arrival,
+                    lambda: self._enqueue(0, {"id": bid, "t0": t_arrival}))
+
+    def _enqueue(self, k: int, batch) -> None:
+        st = self.stages[k]
+        st.inbox.append(batch)
+        self._try_start(k)
+
+    def _try_start(self, k: int) -> None:
+        st = self.stages[k]
+        if st.busy or not st.inbox or st.node in self.down:
+            return
+        st.busy = True
+        batch = st.inbox.popleft()
+        t0 = self.sim.now
+
+        def done():
+            st.busy = False
+            if st.node in self.down:          # died mid-compute: requeue
+                st.inbox.appendleft(batch)
+                return
+            if k > 0:
+                st.service_times.append(self.sim.now - t0)
+            if st.idx == len(self.stages) - 1:
+                self.completed.append((self.sim.now,
+                                       self.sim.now - batch["t0"]))
+            else:
+                self._send(k, batch)
+            self._try_start(k)
+
+        self.sim.after(st.compute_s, done)
+
+    def _send(self, k: int, batch) -> None:
+        st = self.stages[k]
+        st.outbox.append(batch)
+        self._pump_send(k)
+
+    def _pump_send(self, k: int) -> None:
+        st = self.stages[k]
+        if st.sending or not st.outbox:
+            return
+        st.sending = True
+        st.unacked = st.outbox.popleft()
+        self._attempt_send(k, st.unacked)
+
+    def _attempt_send(self, k: int, batch) -> None:
+        st = self.stages[k]
+        nxt = self.stages[k + 1]
+        bw = self._bw(st.node, nxt.node)
+        if bw <= 0:                            # link/node down: retry loop
+            self.sim.after(self.cfg.retry_s,
+                           lambda: self._attempt_send(k, batch))
+            return
+        dur = st.out_bytes / bw
+
+        def delivered():
+            if st.node in self.down or nxt.node in self.down:
+                self.sim.after(self.cfg.retry_s,
+                               lambda: self._attempt_send(k, batch))
+                return
+            st.unacked = None                  # ack received
+            st.sending = False
+            self._enqueue(k + 1, batch)
+            self._pump_send(k)
+
+        self.sim.after(dur, delivered)
+
+    # -- faults --------------------------------------------------------------
+    def kill_node(self, node: int) -> None:
+        self.down.add(node)
+        self.sim.note(f"node {node} FAILED")
+        hit = [s for s in self.stages if s.node == node]
+        for st in hit:
+            self.sim.after(self.cfg.detection_s + self.cfg.reschedule_s,
+                           lambda st=st: self._reschedule(st))
+
+    def revive_node(self, node: int) -> None:
+        self.down.discard(node)
+        self.sim.note(f"node {node} recovered")
+
+    def _reschedule(self, st: _Stage) -> None:
+        if not self.spares:
+            self.sim.note(f"stage {st.idx}: NO SPARE NODE — pipeline stalled")
+            return
+        # best spare by bandwidth to neighbours (placement re-run, restricted)
+        def score(n):
+            s = 0.0
+            if st.idx > 0:
+                s += self.cluster.bw[self.stages[st.idx - 1].node, n]
+            if st.idx < len(self.stages) - 1:
+                s += self.cluster.bw[n, self.stages[st.idx + 1].node]
+            return s
+        best = max(self.spares, key=score)
+        self.spares.remove(best)
+        old = st.node
+        st.node = best
+        st.busy = False
+        self.sim.note(f"stage {st.idx}: pod rescheduled {old} -> {best}")
+        # the upstream sender's retry loop (TCP reconnect) is already
+        # polling; it will resend its unacked batch to the new node.
+        self._try_start(st.idx)
+
+    # -- straggler mitigation --------------------------------------------------
+    def _straggler_sweep(self) -> None:
+        med = np.median([np.mean(s.service_times[-5:]) for s in self.stages[1:]
+                         if s.service_times]) if any(
+            s.service_times for s in self.stages[1:]) else None
+        if med:
+            for st in self.stages[1:]:
+                if (st.service_times and self.spares
+                        and np.mean(st.service_times[-5:])
+                        > self.cfg.straggler_factor * med):
+                    self.sim.note(f"stage {st.idx}: straggler on node "
+                                  f"{st.node}, migrating")
+                    self._reschedule(st)
+        if len(self.completed) < self._next_id:     # stop when drained
+            self.sim.after(self.cfg.straggler_check_s, self._straggler_sweep)
+
+    # -- driver ---------------------------------------------------------------
+    def run(self, n_batches: int, duration_s: float,
+            arrival_rate_hz: float | None = None):
+        """Feed n_batches (all at t=0 if no rate, else Poisson) and run."""
+        if self.cfg.enable_straggler_migration:
+            self.sim.after(self.cfg.straggler_check_s, self._straggler_sweep)
+        t = 0.0
+        for i in range(n_batches):
+            self.submit(t)
+            if arrival_rate_hz:
+                t += float(self.rng.exponential(1.0 / arrival_rate_hz))
+        self.sim.run(until=duration_s)
+        return self.metrics()
+
+    def metrics(self) -> dict:
+        if not self.completed:
+            return {"completed": 0, "throughput_hz": 0.0,
+                    "mean_e2e_s": float("inf"), "events": self.sim.log}
+        times = np.array([t for t, _ in self.completed])
+        e2e = np.array([l for _, l in self.completed])
+        span = times.max() - (times.min() - e2e[0])
+        # steady-state throughput: inter-completion rate over the last half
+        tail = times[len(times) // 2:]
+        thr = ((len(tail) - 1) / (tail[-1] - tail[0])
+               if len(tail) > 2 and tail[-1] > tail[0]
+               else len(times) / max(span, 1e-9))
+        return {"completed": len(self.completed),
+                "throughput_hz": float(thr),
+                "mean_e2e_s": float(e2e.mean()),
+                "p95_e2e_s": float(np.quantile(e2e, 0.95)),
+                "events": self.sim.log}
+
+
+def emulate_plan(plan, cluster: ClusterGraph, cfg: EmulatorConfig | None = None,
+                 n_batches: int = 50, duration_s: float = 10_000.0,
+                 rng=0) -> dict:
+    """Run a SeiferPlan through the emulator."""
+    return PipelineEmulator(
+        cluster, plan.placement.nodes, plan.partition.boundary_sizes,
+        plan.partition.compute_flops, cfg, rng,
+    ).run(n_batches, duration_s)

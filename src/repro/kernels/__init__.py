@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+quantize/  -- blockwise int8 activation compression: the TPU-idiomatic
+              analogue of the paper's ZFP+LZ4 boundary compression (lambda).
+attention/ -- flash attention (blocked online softmax) for long prefill.
+ssd/       -- Mamba2 SSD chunk scan.
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper; interpret=True on CPU), ref.py (pure-jnp oracle for tests).
+EXAMPLE.md documents the layout convention.
+"""

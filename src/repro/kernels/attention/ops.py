@@ -1,0 +1,43 @@
+"""Jit'd flash-attention wrapper: folds GQA heads, pads sequence."""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q, k, v, causal: bool = True):
+    """q (B,S,H,hd); k/v (B,S,KV,hd) -> (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    pad = (-s) % kernel.BQ
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sp, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, sp, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, sp, hd)
+    # padded kv rows: mask by pushing their keys to -inf is unnecessary —
+    # causal masking covers the tail for causal; for non-causal, zero-pad
+    # keys produce uniform weight on pad rows only for pad queries (sliced
+    # off below), and real queries attend to pad keys with score 0 which
+    # perturbs the softmax — so for non-causal we mask via a large negative
+    # bias folded into k's last feature... simplest correct route: require
+    # pad == 0 for non-causal (the 32k cells are all BQ-multiples).
+    if pad and not causal:
+        raise ValueError("non-causal flash path requires S % 128 == 0")
+    out = kernel.flash_attention_pallas(qf, kf, vf, causal=causal,
+                                        interpret=INTERPRET)
+    out = out.reshape(b, h, sp, hd).transpose(0, 2, 1, 3)
+    return out[:, :s]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash attention (GQA, optional causal)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q (B,S,H,hd); k/v (B,S,KV,hd); returns (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    sc = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    sc = sc / np.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return out.reshape(b, s, h, hd)

@@ -1,0 +1,3 @@
+from .ops import dequantize, fake_quantize_st, quantize
+
+__all__ = ["dequantize", "fake_quantize_st", "quantize"]

@@ -1,0 +1,60 @@
+"""Jit'd wrappers around the quantize kernels.
+
+On CPU (this container) the Pallas kernels run in interpret mode; on TPU set
+REPRO_PALLAS_INTERPRET=0.  `fake_quantize_st` is the straight-through
+compress-boundary op used at pipeline-stage boundaries and for gradient
+compression.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def quantize(x, bm: int = kernel.BM, bn: int = kernel.BN):
+    m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    xp = jnp.pad(x, ((0, pm), (0, pn))) if (pm or pn) else x
+    q, s = kernel.quantize_pallas(xp, bm, bn, interpret=INTERPRET)
+    return q[:m, :n], s
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "out_dtype"))
+def dequantize(q, scales, bm: int = kernel.BM, bn: int = kernel.BN,
+               out_dtype=jnp.bfloat16):
+    m, n = q.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    qp = jnp.pad(q, ((0, pm), (0, pn))) if (pm or pn) else q
+    x = kernel.dequantize_pallas(qp, scales, bm, bn, out_dtype=out_dtype,
+                                 interpret=INTERPRET)
+    return x[:m, :n]
+
+
+@jax.custom_vjp
+def fake_quantize_st(x):
+    """Quantize-dequantize with a straight-through gradient — drop-in
+    boundary compression for pipeline stages."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    q, s = ref.quantize_ref(x2)
+    return ref.dequantize_ref(q, s, out_dtype=x.dtype).reshape(shape)
+
+
+def _fq_fwd(x):
+    return fake_quantize_st(x), None
+
+
+def _fq_bwd(_, g):
+    return (g,)
+
+
+fake_quantize_st.defvjp(_fq_fwd, _fq_bwd)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for blockwise int8 quantization (the lambda analogue).
+
+Blocks are (BM, BN) tiles with one fp32 absmax scale each; payload int8.
+Compression vs bf16: 2x payload (scales add 4/(BM*BN) bytes/elem ~ 0.006%).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BM, BN = 256, 256
+
+
+def _pad_to(x, bm, bn):
+    m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def quantize_ref(x, bm: int = BM, bn: int = BN):
+    """x (M, N) float -> (q int8 (M, N), scales f32 (ceil(M/bm), ceil(N/bn)))."""
+    m, n = x.shape
+    xp = _pad_to(x.astype(jnp.float32), bm, bn)
+    mp, np_ = xp.shape
+    t = xp.reshape(mp // bm, bm, np_ // bn, bn).transpose(0, 2, 1, 3)
+    absmax = jnp.max(jnp.abs(t), axis=(2, 3))
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(t / scale[:, :, None, None]), -127, 127)
+    q = q.transpose(0, 2, 1, 3).reshape(mp, np_)[:m, :n].astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_ref(q, scales, bm: int = BM, bn: int = BN,
+                   out_dtype=jnp.bfloat16):
+    m, n = q.shape
+    qp = _pad_to(q.astype(jnp.float32), bm, bn)
+    mp, np_ = qp.shape
+    t = qp.reshape(mp // bm, bm, np_ // bn, bn).transpose(0, 2, 1, 3)
+    x = t * scales[:, :, None, None]
+    return x.transpose(0, 2, 1, 3).reshape(mp, np_)[:m, :n].astype(out_dtype)
+
+
+def fake_quantize(x, bits: int = 8):
+    """Quantize-dequantize roundtrip on an arbitrary-shape tensor (per-tensor
+    scale); used for gradient compression in the train step."""
+    levels = 2.0 ** (bits - 1) - 1
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.where(absmax > 0, absmax / levels, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -levels, levels)
+    return (q * scale).astype(x.dtype)

@@ -1,0 +1,32 @@
+"""Jit'd SSD wrapper matching models/ssm.py calling conventions."""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@jax.jit
+def ssd_scan(xh, dt, A, Bm, Cm):
+    """xh (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,N) ->
+    (y (B,S,H,P), final state (B,H,P,N)).  Pads S to the chunk size."""
+    b, s, h, p = xh.shape
+    pad = (-s) % kernel.Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    x_t = xh.transpose(0, 2, 1, 3)                    # (B,H,S,P)
+    dt_t = dt.transpose(0, 2, 1)[..., None]           # (B,H,S,1)
+    y, st = kernel.ssd_pallas(x_t, dt_t, A.astype(jnp.float32),
+                              Bm, Cm, interpret=INTERPRET)
+    y = y.transpose(0, 2, 1, 3)[:, :s]
+    return y, st

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the SSD chunk scan: the sequential recurrence."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_ref(xh, dt, A, Bm, Cm):
+    """xh (B,S,H,P); dt (B,S,H) (>0, post-softplus); A (H,) negative;
+    Bm/Cm (B,S,N).  Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    b, s, h, p = xh.shape
+    n = Bm.shape[-1]
+    st = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        dA = jnp.exp(dt[:, t].astype(jnp.float32) * A)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, t].astype(jnp.float32),
+                         Bm[:, t].astype(jnp.float32),
+                         xh[:, t].astype(jnp.float32))
+        st = st * dA[:, :, None, None] + dBx
+        ys.append(jnp.einsum("bn,bhpn->bhp", Cm[:, t].astype(jnp.float32), st))
+    return jnp.stack(ys, axis=1).astype(xh.dtype), st

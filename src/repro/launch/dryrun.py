@@ -1,0 +1,313 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the production meshes need 512 placeholder host devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+
+import argparse
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (cache_shardings, input_shardings,
+                                   param_shardings, replicated)
+from repro.launch.steps import (input_specs, make_decode_step,
+                                make_prefill_step, make_train_step)
+from repro.models.config import LONG_CONTEXT_OK, SHAPES
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def params_specs_for(cfg):
+    from repro.launch.steps import params_specs
+    return params_specs(cfg)
+
+
+def _sds_tokens(shp):
+    return jax.ShapeDtypeStruct((shp.global_batch, shp.seq_len), jnp.int32)
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s32|s16|s8|u32|u16|u8|pred)"
+                       r"\[([\d,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+          "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(text: str) -> float:
+    """Sum byte sizes of all tensor shapes in an HLO result-type string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES.get(dt, _BYTES.get(dt[:3], 2))
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective byte totals from the (post-SPMD, per-device) HLO."""
+    out = {k: {"count": 0, "bytes": 0.0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result-shape = op-name(...); match on the op name after '='
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*([^=(]+)\s+(\w[\w\-]*)\(",
+                     ls)
+        if not m:
+            continue
+        result_type, opname = m.group(1), m.group(2)
+        for kind in COLLECTIVES:
+            if opname.startswith(kind):
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += _shape_bytes(result_type)
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, pp: bool = False,
+               grad_compress_bits: int = 0, overrides=None,
+               variant: str = "baseline"):
+    """Returns (jitted_fn, example_args_tree) for one cell.
+
+    variant:
+      baseline   -- FSDP+TP train-style shardings everywhere.
+      serve_tp   -- weight-stationary decode (§Perf iteration 1): weights
+                    stay 2-D sharded, activations replicate over data (the
+                    partial-sum all-reduce is tiny), KV cache stays
+                    batch-sharded.  decode cells only.
+    """
+    from repro.models.layers import set_mesh_axes
+    cfg = get_config(arch, "full")
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shp = SHAPES[shape_name]
+    if variant == "serve_tp" and shp.kind == "decode":
+        set_mesh_axes(mesh.axis_names, drop_for_activations=("pod", "data"),
+                      mesh=mesh)
+    elif variant == "serve2d" and shp.kind == "decode":
+        set_mesh_axes(mesh.axis_names, mode="serve2d", mesh=mesh)
+        cfg = cfg.replace(serve_unroll=True)
+    elif variant == "moe_ep":
+        cfg = cfg.replace(moe_impl="ep")
+    elif variant == "moe_ep_savemoe":
+        cfg = cfg.replace(moe_impl="ep", remat_policy="save_moe")
+    elif variant == "moe_ep_int8":
+        cfg = cfg.replace(moe_impl="ep", moe_a2a_bits=8,
+                          remat_policy="save_moe")
+    elif variant == "moe_ep_int8_attn":
+        cfg = cfg.replace(moe_impl="ep", moe_a2a_bits=8,
+                          attn_block_threshold=2048, attn_head_shard=True)
+    elif variant == "attn_opt":
+        cfg = cfg.replace(attn_block_threshold=2048, attn_head_shard=True)
+    specs = input_specs(cfg, shp)
+
+    if variant.startswith("pp_") and shp.kind == "prefill":
+        # paper-technique cell: partitioner-planned pipeline over the pod
+        # axis, int8 (lambda) or bf16 boundaries.  Measures the PP forward.
+        from repro.launch.pp import make_pp_forward
+        bits = 8 if variant == "pp_int8" else 0
+        cfg2 = cfg.replace(remat=False)
+        fwd = make_pp_forward(cfg2, mesh, n_micro=4, compress_bits=bits)
+        ps = param_shardings(mesh, params_specs_for(cfg2))
+        jitted = jax.jit(fwd, in_shardings=(ps, replicated(
+            mesh, _sds_tokens(shp))))
+        return jitted, (params_specs_for(cfg2), _sds_tokens(shp))
+
+    if shp.kind == "train":
+        step = make_train_step(cfg, grad_compress_bits=grad_compress_bits)
+        ps = param_shardings(mesh, specs["params"])
+        from repro.optim import OptState
+        opt_sh = OptState(
+            step=replicated(mesh, specs["opt"].step),
+            m=param_shardings(mesh, specs["opt"].m),
+            v=param_shardings(mesh, specs["opt"].v))
+        bs = input_shardings(mesh, specs["batch"])
+        jitted = jax.jit(step,
+                         in_shardings=(ps, opt_sh, bs),
+                         out_shardings=(ps, opt_sh, None),
+                         donate_argnums=(0, 1))
+        args = (specs["params"], specs["opt"], specs["batch"])
+    elif shp.kind == "prefill":
+        step = make_prefill_step(cfg)
+        ps = param_shardings(mesh, specs["params"])
+        bs = input_shardings(mesh, specs["batch"])
+        cs = cache_shardings(mesh, specs["cache"])
+        jitted = jax.jit(step, in_shardings=(ps, bs, cs),
+                         out_shardings=(None, cs), donate_argnums=(2,))
+        args = (specs["params"], specs["batch"], specs["cache"])
+    else:
+        step = make_decode_step(cfg)
+        ps = param_shardings(mesh, specs["params"])
+        cs = cache_shardings(mesh, specs["cache"],
+                             seq_shard=(variant == "serve2d"))
+        if variant in ("serve_tp", "serve2d"):
+            ts = replicated(mesh, specs["tokens"])
+            es = replicated(mesh, specs["extras"])
+        else:
+            ts = input_shardings(mesh, specs["tokens"])
+            es = input_shardings(mesh, specs["extras"])
+        jitted = jax.jit(step, in_shardings=(ps, ts, cs, es),
+                         out_shardings=(None, cs), donate_argnums=(2,))
+        args = (specs["params"], specs["tokens"], specs["cache"],
+                specs["extras"])
+    return jitted, args
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             collect_hlo: bool = True, grad_compress_bits: int = 0,
+             overrides=None, variant: str = "baseline") -> dict:
+    from repro.models.layers import set_mesh_axes
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "variant": variant, "devices": int(mesh.devices.size)}
+    t0 = time.time()
+    set_mesh_axes(mesh.axis_names, mesh=mesh)
+    with mesh:
+        jitted, args = build_cell(arch, shape_name, mesh,
+                                  grad_compress_bits=grad_compress_bits,
+                                  overrides=overrides, variant=variant)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+                "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0)) or None,
+            }
+        except Exception as e:                      # pragma: no cover
+            rec["memory"] = {"error": str(e)}
+        try:
+            ca = compiled.cost_analysis()
+            rec["cost"] = {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                "transcendentals": float(ca.get("transcendentals", 0.0)),
+            }
+        except Exception as e:                      # pragma: no cover
+            rec["cost"] = {"error": str(e)}
+        if collect_hlo:
+            try:
+                hlo = compiled.as_text()
+                rec["collectives"] = collective_stats(hlo)
+                rec["hlo_bytes"] = len(hlo)
+                # loop-aware walker (benchmarks/hlo_cost): flops/traffic/
+                # collective wire bytes with while bodies x trip count
+                import sys
+                from pathlib import Path as _P
+                root = _P(__file__).resolve().parents[3]
+                if str(root) not in sys.path:
+                    sys.path.insert(0, str(root))
+                from benchmarks.hlo_cost import analyze_hlo
+                w = analyze_hlo(hlo)
+                rec["walker"] = {
+                    "flops_per_device": w.flops,
+                    "traffic_bytes_per_device": w.traffic_bytes,
+                    "collective_wire_bytes": w.collective_bytes,
+                    "collective_counts": w.collective_counts,
+                    "collective_total_bytes": w.total_collective_bytes,
+                }
+            except Exception as e:                  # pragma: no cover
+                rec["collectives"] = {"error": str(e)}
+    set_mesh_axes(None)
+    rec["ok"] = "error" not in rec.get("cost", {})
+    return rec
+
+
+def iter_cells():
+    for arch in ARCH_IDS:
+        for shape_name in SHAPES:
+            if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
+                yield arch, shape_name, "skip(full-attn)"
+                continue
+            yield arch, shape_name, None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--grad-compress-bits", type=int, default=0)
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = []
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    def done(a, s, m):
+        return any(r["arch"] == a and r["shape"] == s and r["mesh"] == m
+                   and r.get("variant", "baseline") == args.variant
+                   and r.get("ok") for r in results)
+
+    if args.all:
+        cells = [(a, s, skip) for a, s, skip in iter_cells()]
+        meshes = args.meshes.split(",")
+        for a, s, skip in cells:
+            for m in meshes:
+                if skip:
+                    if not any(r["arch"] == a and r["shape"] == s
+                               and r["mesh"] == m for r in results):
+                        results.append({"arch": a, "shape": s, "mesh": m,
+                                        "variant": "baseline",
+                                        "skipped": skip, "ok": True})
+                        out_path.write_text(json.dumps(results, indent=1))
+                    continue
+                if done(a, s, m):
+                    print(f"[skip done] {a} {s} {m}")
+                    continue
+                print(f"[run] {a} {s} {m}", flush=True)
+                try:
+                    rec = run_cell(a, s, m, variant=args.variant,
+                                   grad_compress_bits=args.grad_compress_bits)
+                except Exception as e:
+                    rec = {"arch": a, "shape": s, "mesh": m, "ok": False,
+                           "variant": args.variant,
+                           "error": f"{type(e).__name__}: {e}"}
+                results = [r for r in results
+                           if not (r["arch"] == a and r["shape"] == s
+                                   and r["mesh"] == m
+                                   and r.get("variant", "baseline")
+                                   == args.variant)]
+                results.append(rec)
+                out_path.write_text(json.dumps(results, indent=1))
+                print(json.dumps({k: rec.get(k) for k in
+                                  ("ok", "lower_s", "compile_s", "error")}),
+                      flush=True)
+        n_ok = sum(1 for r in results if r.get("ok"))
+        print(f"{n_ok}/{len(results)} cells ok")
+        return
+
+    rec = run_cell(args.arch, args.shape, args.mesh,
+                   grad_compress_bits=args.grad_compress_bits,
+                   variant=args.variant)
+    print(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""GPipe-style pipeline parallelism over the 'pod' axis (the paper's
+partition+placement executed on TPU, DESIGN.md §5).
+
+The stage boundary is the cut chosen by core.pipeline.plan_stages (for a
+uniform dense LM every block boundary transfers the same bytes, so the
+partitioner balances stage memory; for MoE/hybrid models it also avoids
+heavy blocks straddling stages).  Boundary activations are optionally
+int8-quantized before the cross-pod ppermute — the paper's ZFP+LZ4 lambda
+restated: the DCN hop carries half the bytes.
+
+Supported here for the dense family (llama3-405b is the motivating cell);
+within a stage the usual FSDP+TP shardings apply over (data, model).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.model import apply_dense_block, lm_logits
+
+
+def _quantize_rows(x):
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize_rows(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def make_pp_forward(cfg: ModelConfig, mesh, n_micro: int,
+                    compress_bits: int = 8):
+    """Returns forward(params, tokens) -> last-token logits (B, vocab),
+    executing the model as an n_stages = mesh['pod'] pipeline.
+
+    params: the standard dense-model pytree; blocks are re-stacked to
+    (n_stages, L/n_stages, ...) outside shard_map so the 'pod' axis shards
+    the stage dim.  tokens (B, S) with B % (n_micro * data) == 0."""
+    n_stages = mesh.shape["pod"]
+    assert cfg.n_layers % n_stages == 0
+    l_loc = cfg.n_layers // n_stages
+
+    def stage_params(params):
+        blocks = jax.tree.map(
+            lambda a: a.reshape(n_stages, l_loc, *a.shape[1:]),
+            params["blocks"])
+        rest = {k: v for k, v in params.items() if k != "blocks"}
+        return blocks, rest
+
+    def local(blocks_loc, rest, tokens_loc):
+        # inside shard_map the 'pod' axis is Manual: activation constraints
+        # must not mention it (trace-time toggle; restored by the caller)
+        from repro.models.layers import set_mesh_axes
+        set_mesh_axes(mesh.axis_names, drop_for_activations=("pod",),
+                      mesh=mesh)
+        # blocks_loc leaves: (1, l_loc, ...) -> (l_loc, ...)
+        blocks_loc = jax.tree.map(lambda a: a[0], blocks_loc)
+        stage = jax.lax.axis_index("pod")
+        bl, s = tokens_loc.shape
+        assert bl % n_micro == 0
+        mb = bl // n_micro
+        toks = tokens_loc.reshape(n_micro, mb, s)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (mb, s))
+        dt = jnp.dtype(cfg.param_dtype)
+        d = cfg.d_model
+
+        def run_stage(h):
+            def body(h, bp):
+                h, _ = apply_dense_block(bp, h, cfg, positions)
+                return h, None
+            h, _ = jax.lax.scan(jax.checkpoint(body) if cfg.remat else body,
+                                h, blocks_loc)
+            return h
+
+        perm_fwd = [(i, i + 1) for i in range(n_stages - 1)]
+        rounds = n_micro + n_stages - 1
+
+        def step(carry, t):
+            boundary, out_buf = carry
+            # receive previous stage's boundary (compressed on the wire)
+            if compress_bits == 8:
+                q, sc = _quantize_rows(boundary)
+                q = jax.lax.ppermute(q, "pod", perm_fwd)
+                sc = jax.lax.ppermute(sc, "pod", perm_fwd)
+                recv = _dequantize_rows(q, sc, dt)
+            else:
+                recv = jax.lax.ppermute(boundary, "pod", perm_fwd)
+            # stage 0 consumes microbatch t (if any); others consume recv
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            embedded = rest["embed"][toks[mb_idx]].astype(dt)
+            h_in = jnp.where(stage == 0, embedded, recv)
+            h_out = run_stage(h_in)
+            # last stage emits logits for microbatch (t - (n_stages-1))
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            hn = rms_norm(h_out[:, -1:], rest["final_norm"], cfg.norm_eps)
+            w = rest["lm_head"] if "lm_head" in rest else rest["embed"].T
+            logit = (hn[:, 0] @ w).astype(jnp.float32)      # (mb, V)
+            emit = (t >= n_stages - 1) & (stage == n_stages - 1)
+            out_buf = jax.lax.cond(
+                emit,
+                lambda ob: jax.lax.dynamic_update_index_in_dim(
+                    ob, logit, out_idx, 0),
+                lambda ob: ob, out_buf)
+            return (h_out, out_buf), None
+
+        h0 = jnp.zeros((mb, s, d), dt)
+        out0 = jnp.zeros((n_micro, mb, cfg.vocab), jnp.float32)
+        (_, out_buf), _ = jax.lax.scan(step, (h0, out0),
+                                       jnp.arange(rounds))
+        # replicate the result across stages (last stage holds it)
+        mask = (stage == n_stages - 1).astype(out_buf.dtype)
+        out_buf = jax.lax.psum(out_buf * mask, "pod")
+        set_mesh_axes(mesh.axis_names, mesh=mesh)      # restore
+        return out_buf.reshape(bl, cfg.vocab)
+
+    def forward(params, tokens):
+        blocks, rest = stage_params(params)
+        block_specs = jax.tree.map(lambda _: P("pod"), blocks)
+        rest_specs = jax.tree.map(lambda _: P(), rest)
+        # manual only over 'pod': intra-stage (data, model) sharding stays
+        # with GSPMD, so the usual FSDP+TP layouts apply within a stage
+        return jax.shard_map(
+            local, mesh=mesh,
+            in_specs=(block_specs, rest_specs, P(None, None)),
+            out_specs=P(None, None),
+            axis_names={"pod"},
+            check_vma=False,
+        )(blocks, rest, tokens)
+
+    return forward

@@ -1,0 +1,72 @@
+"""Serving launcher: `python -m repro.launch.serve --arch <id> [...]`.
+
+Prefill + greedy decode over batched synthetic requests; smoke presets run
+the real model on CPU.  `--plan` additionally prints the SEIFER stage plan
+for the production TPU cluster (the compile-only path for full presets is
+repro.launch.dryrun with --variant serve2d).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import decode_step, init_params, init_serve_cache, prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--plan", action="store_true",
+                    help="print the SEIFER pipeline-stage plan for the "
+                         "2-pod production cluster")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, args.preset)
+    if args.plan:
+        from repro.core.cluster import tpu_cluster
+        from repro.core.pipeline import plan_stages
+        from repro.models.config import SHAPES
+        full = get_config(args.arch, "full")
+        sp = plan_stages(full, SHAPES["prefill_32k"],
+                         cluster=tpu_cluster(n_pods=2, slots_per_pod=8),
+                         hbm_per_stage_bytes=16e9 * 32)
+        print(sp.describe())
+        return
+
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    b, pl, gl = args.batch, args.prompt_len, args.gen_len
+    batch = {"tokens": jax.random.randint(key, (b, pl), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["vision"] = jax.random.normal(
+            key, (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (b, pl, cfg.d_model),
+                                            jnp.bfloat16)
+    cache = init_serve_cache(cfg, b, pl + gl, batch=batch)
+    t0 = time.time()
+    logits, cache = prefill(cfg, params, batch, cache)
+    toks = jnp.argmax(logits, -1)
+    out = [toks]
+    for _ in range(gl - 1):
+        logits, cache = decode_step(cfg, params, toks, cache, batch)
+        toks = jnp.argmax(logits, -1)
+        out.append(toks)
+    dt = time.time() - t0
+    total = b * gl
+    print(f"[serve] {cfg.name}: {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s); sample: "
+          f"{[int(t[0, 0]) for t in out[:8]]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Sharding rules: param/batch/cache pytrees -> PartitionSpecs.
+
+Strategy (DESIGN.md §5): TP over "model", FSDP over "data", plain DP over
+"pod" (params replicated across pods, gradients all-reduced over DCN).
+Rules match parameter *names* (the trailing path component) and pad leading
+Nones for stacked-layer axes; any dim that does not divide its mesh axis
+falls back to replicated.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# name -> spec for the trailing semantic dims
+_RULES_2D = {
+    # (d_in -> fsdp, d_out -> tp)
+    "wq": ("data", "model"), "wk": ("data", "model"), "wv": ("data", "model"),
+    "wg": ("data", "model"), "wu": ("data", "model"),
+    "wdq": ("data", "model"), "wuq": ("data", "model"),
+    "wuk": ("data", "model"), "wuv": ("data", "model"),
+    "lm_head": ("data", "model"),
+    "in_proj": ("data", "model"),
+    "mtp_proj": ("data", "model"),
+    "frontend": ("data", "model"),
+    "wdkv": ("data", None),
+    "router": ("data", None),
+    # (d_in -> tp, d_out -> fsdp)
+    "wo": ("model", "data"), "wd": ("model", "data"),
+    "out_proj": ("model", "data"),
+    # embedding: vocab -> tp, d -> fsdp
+    "embed": ("model", "data"),
+    # depthwise conv (K, C): channels -> tp
+    "conv_w": (None, "model"),
+}
+
+_RULES_3D = {
+    # experts (E, d_in, d_out): E -> ep(tp axis), inner dim -> fsdp
+    "wg": ("model", "data", None), "wu": ("model", "data", None),
+    "wd": ("model", "data", None),
+}
+
+_RULES_1D = {
+    "A_log": ("model",), "D": ("model",), "dt_bias": ("model",),
+}
+
+
+def _fits(shape, spec, axis_sizes):
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        size = axis_sizes.get(ax, 1) if isinstance(ax, str) else \
+            int(np.prod([axis_sizes.get(a, 1) for a in ax]))
+        out.append(ax if dim % size == 0 and dim >= size else None)
+    return tuple(out)
+
+
+def param_spec(path, leaf, axis_sizes) -> P:
+    name = None
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            name = entry.key
+            break
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            name = entry.name
+            break
+    ndim = leaf.ndim
+    base = None
+    # expert tensors: 'wg'/'wu'/'wd' with >=3 semantic dims under 'moe'
+    in_moe = any(isinstance(e, jax.tree_util.DictKey) and e.key == "moe"
+                 for e in path)
+    shared_mlp = any(isinstance(e, jax.tree_util.DictKey) and e.key == "shared"
+                     for e in path)
+    if name in _RULES_3D and in_moe and not shared_mlp and ndim >= 3:
+        base = _RULES_3D[name]
+    elif name in _RULES_2D and ndim >= 2:
+        base = _RULES_2D[name]
+    elif name in _RULES_1D and ndim >= 1:
+        base = _RULES_1D[name]
+    if base is None:
+        return P()
+    pad = ndim - len(base)
+    spec = (None,) * pad + _fits(leaf.shape[pad:], base, axis_sizes)
+    return P(*spec)
+
+
+def param_shardings(mesh, params_shape):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, param_spec(p, l, axis_sizes)),
+        params_shape)
+
+
+# ---------------------------------------------------------------------------
+# activations / inputs / caches
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh):
+    """The composite batch axis: ('pod','data') when the pod axis exists."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _batch_spec(mesh, global_batch, extra_dims):
+    ba = batch_axes(mesh)
+    total = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                         for a in ba]))
+    first = ba if global_batch % total == 0 else None
+    return P(first, *([None] * extra_dims))
+
+
+def input_shardings(mesh, batch_shape_tree):
+    """batch dict of ShapeDtypeStructs -> NamedShardings (batch-sharded)."""
+    def spec(leaf):
+        return NamedSharding(mesh, _batch_spec(mesh, leaf.shape[0],
+                                               leaf.ndim - 1))
+    return jax.tree.map(spec, batch_shape_tree)
+
+
+def cache_spec(path, leaf, axis_sizes, batch_ax, seq_shard: bool = False):
+    """KV/SSM cache sharding: batch over (pod,data) when divisible; then
+    either the sequence dim over 'model' (seq_shard=True — flash-decoding
+    layout: attention stays local per seq shard with tiny partial-softmax
+    all-reduces) or the widest weight-like trailing dim over 'model'."""
+    name = None
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            name = entry.key
+            break
+    if name == "len":
+        return P()
+    shape = leaf.shape
+    tp = axis_sizes.get("model", 1)
+    total_batch = int(np.prod([axis_sizes.get(a, 1) for a in batch_ax]))
+    # caches may carry leading stack dims; the batch dim is the first dim
+    # divisible by the total batch extent (cache layouts are fixed per
+    # family, batch precedes seq).
+    spec = [None] * leaf.ndim
+    bidx = None
+    for i, d in enumerate(shape):
+        if d % total_batch == 0 and d >= total_batch:
+            spec[i] = batch_ax if len(batch_ax) > 1 else batch_ax[0]
+            bidx = i
+            break
+    if seq_shard and bidx is not None and bidx + 1 < leaf.ndim:
+        s = shape[bidx + 1]
+        if s >= 2048 and s % tp == 0:         # the (long) sequence dim
+            spec[bidx + 1] = "model"
+            return P(*spec)
+    # shard the last dim over model if divisible (hd / kv_lora / channels),
+    # else try the second-to-last (kv heads)
+    for j in (leaf.ndim - 1, leaf.ndim - 2):
+        if j <= 0 or spec[j] is not None:
+            continue
+        if shape[j] % tp == 0 and shape[j] >= tp:
+            spec[j] = "model"
+            break
+    return P(*spec)
+
+
+def cache_shardings(mesh, cache_shape_tree, seq_shard: bool = False):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ba = batch_axes(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, cache_spec(p, l, axis_sizes, ba,
+                                                    seq_shard)),
+        cache_shape_tree)
+
+
+def replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,45 @@
+"""Training launcher: `python -m repro.launch.train --arch <id> [...]`.
+
+Single-process engine (CPU / one accelerator); on a real fleet the same
+Trainer runs under jax.distributed per host with the heartbeat monitor fed
+by host liveness.  Smoke presets run on CPU; full presets are sized for the
+production meshes (see repro.launch.dryrun for the compile-only path).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import SyntheticTokens
+from repro.runtime import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compress-bits", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, args.preset)
+    data = SyntheticTokens(vocab=cfg.vocab, seq_len=args.seq_len,
+                           global_batch=args.global_batch)
+    tr = Trainer(cfg, data,
+                 TrainerConfig(ckpt_dir=args.ckpt_dir,
+                               ckpt_every=args.ckpt_every,
+                               grad_compress_bits=args.grad_compress_bits))
+    start = tr.init_or_restore()
+    print(f"[train] {cfg.name}: resuming at step {start}")
+    tr.run(args.steps - start)
+    for m in tr.history[-5:]:
+        print(f"  step {m['step']:5d}  loss {m['loss']:.4f}  lr {m['lr']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

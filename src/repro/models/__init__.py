@@ -1,0 +1,9 @@
+"""Composable JAX model zoo for the ten assigned architectures."""
+
+from .config import LONG_CONTEXT_OK, SHAPES, ModelConfig, ShapeConfig
+from .model import (decode_step, forward, init_params, init_serve_cache,
+                    loss_fn, prefill)
+
+__all__ = ["LONG_CONTEXT_OK", "SHAPES", "ModelConfig", "ShapeConfig",
+           "decode_step", "forward", "init_params", "init_serve_cache",
+           "loss_fn", "prefill"]

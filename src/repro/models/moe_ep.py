@@ -1,0 +1,163 @@
+"""Expert-parallel MoE via shard_map + explicit all_to_all (§Perf iter. on
+the collective-bound deepseek-v3 cell).
+
+Why: under pure GSPMD the sorted-scatter dispatch (layers.moe_ffn) gets
+resolved by replicating token buffers — measured 44 TB/device/step of
+all-gathers on deepseek-v3-671b train_4k.  Real expert parallelism moves
+each token's activation at most twice over the wire:
+
+  tokens (sharded over data x model) -> local top-k routing -> local sort
+  into per-expert quota buffers (E, Q, D) -> all_to_all over 'model'
+  (dispatch) -> local expert FFN (E_loc experts) -> all_to_all back
+  (return) -> local weighted combine.
+
+Per-device wire per layer = 2 * E*Q*D*(M-1)/M bytes — for dsv3 train_4k:
+2 x 550 MB vs the baseline's ~720 GB equivalent.
+
+Optionally the dispatch/return payloads are int8-quantized (per-slot scales)
+— the paper's boundary-compression lambda applied to EP traffic
+(moe_a2a_bits=8); gradients take the same quantized path (straight-through).
+
+Drop semantics differ slightly from the GSPMD path: capacity is enforced
+per (source shard, expert) with Q = ceil(cf * T_ep * k / E) rather than
+globally — the standard EP formulation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+
+
+def _local_dispatch(xf, probs, cfg: ModelConfig):
+    """Sort local tokens into per-expert quota buffers.
+
+    xf (T, D); probs (T, E) fp32.  Returns (buf (E*Q, D), token_of (T*k,),
+    dest (T*k,), gate_of (T*k,), keep (T*k,), Q)."""
+    t, d = xf.shape
+    e = cfg.n_experts
+    k = cfg.experts_per_tok
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    q = max(1, int(-(-cfg.moe_capacity_factor * t * k // e)))
+    flat_e = idx.reshape(-1)
+    sort_idx = jnp.argsort(flat_e)
+    sorted_e = flat_e[sort_idx]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))
+    pos = jnp.arange(t * k) - seg_start[sorted_e]
+    keep = pos < q
+    dest = jnp.where(keep, sorted_e * q + pos, e * q)
+    token_of = sort_idx // k
+    buf = jnp.zeros((e * q, d), xf.dtype).at[dest].set(xf[token_of],
+                                                       mode="drop")
+    gate_of = gates.reshape(-1)[sort_idx]
+    return buf, token_of, dest, gate_of, keep, q
+
+
+import functools
+
+
+def _q8_a2a_raw(x, split_axis, concat_axis):
+    """int8-payload all_to_all: per-row absmax scales ride along in fp32
+    (the paper's lambda compression applied to EP dispatch traffic)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    q2 = jax.lax.all_to_all(q, "model", split_axis=split_axis,
+                            concat_axis=concat_axis, tiled=True)
+    s2 = jax.lax.all_to_all(scale, "model", split_axis=split_axis,
+                            concat_axis=concat_axis, tiled=True)
+    return (q2.astype(jnp.float32) * s2).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _q8_a2a(x, split_axis, concat_axis):
+    return _q8_a2a_raw(x, split_axis, concat_axis)
+
+
+def _q8_a2a_fwd(x, split_axis, concat_axis):
+    return _q8_a2a_raw(x, split_axis, concat_axis), None
+
+
+def _q8_a2a_bwd(split_axis, concat_axis, _, g):
+    # transpose of tiled all_to_all swaps split/concat; gradients take the
+    # same int8 wire path (straight-through estimator for the rounding)
+    return (_q8_a2a_raw(g, concat_axis, split_axis),)
+
+
+_q8_a2a.defvjp(_q8_a2a_fwd, _q8_a2a_bwd)
+
+
+def _a2a(x, split_axis, concat_axis, bits: int = 0):
+    if not bits:
+        return jax.lax.all_to_all(x, "model", split_axis=split_axis,
+                                  concat_axis=concat_axis, tiled=True)
+    assert bits == 8
+    return _q8_a2a(x, split_axis, concat_axis)
+
+
+def moe_ffn_ep(params, x, cfg: ModelConfig, mesh, batch_axes):
+    """shard_map expert-parallel MoE.  x (B, S, D) batch-sharded over
+    ``batch_axes`` and sequence-sharded over 'model'.  Returns (y, aux)."""
+    m_size = mesh.shape["model"]
+    e_loc = cfg.n_experts // m_size
+    bits = getattr(cfg, "moe_a2a_bits", 0)
+
+    def local(x_loc, router, wg, wu, wd):
+        b_loc, s_loc, d = x_loc.shape
+        t = b_loc * s_loc
+        xf = x_loc.reshape(t, d)
+        logits = xf.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        # load-balance aux (Switch eq. 4), averaged over the whole mesh
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(jnp.argmax(probs, -1), cfg.n_experts,
+                                     dtype=jnp.float32), axis=0)
+        aux = cfg.n_experts * jnp.sum(me * ce)
+        axes = tuple(a for a in (*batch_axes, "model"))
+        aux = jax.lax.pmean(aux, axes)
+
+        buf, token_of, dest, gate_of, keep, q = _local_dispatch(xf, probs, cfg)
+        buf = buf.reshape(cfg.n_experts, q, d)            # (M*E_loc, Q, D)
+        recv = _a2a(buf, 0, 1, bits)                      # (E_loc, M*Q, D)
+        h = jax.nn.silu(jnp.einsum("eqd,edf->eqf", recv, wg)) \
+            * jnp.einsum("eqd,edf->eqf", recv, wu)
+        out = jnp.einsum("eqf,efd->eqd", h, wd)           # (E_loc, M*Q, D)
+        back = _a2a(out, 1, 0, bits)                      # (E, Q, D)
+        out_flat = back.reshape(cfg.n_experts * q, d)
+        safe = jnp.where(keep, dest, 0)
+        contrib = out_flat[safe] * (gate_of.astype(x_loc.dtype)
+                                    * keep)[:, None]
+        y = jnp.zeros((t, d), x_loc.dtype).at[token_of].add(contrib)
+        return y.reshape(b_loc, s_loc, d), aux
+
+    ba = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    y, aux = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(ba, "model", None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(ba, "model", None), P()),
+        check_vma=False,
+    )(x, params["router"], params["wg"], params["wu"], params["wd"])
+    from jax.ad_checkpoint import checkpoint_name
+    y = checkpoint_name(y, "moe_y")    # outside shard_map so remat policies
+    return y, aux                      # can elide the backward a2a replay
+
+
+def ep_applicable(cfg: ModelConfig, x_shape, mesh) -> bool:
+    if mesh is None or "model" not in mesh.shape:
+        return False
+    m = mesh.shape["model"]
+    b, s, _ = x_shape
+    if cfg.n_experts % m or s % m:
+        return False
+    batch_total = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            batch_total *= mesh.shape[a]
+    return b % batch_total == 0

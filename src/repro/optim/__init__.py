@@ -1,0 +1,5 @@
+from .adamw import OptState, adamw_init, adamw_update
+from .schedules import cosine_schedule, make_schedule, wsd_schedule
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "cosine_schedule",
+           "make_schedule", "wsd_schedule"]

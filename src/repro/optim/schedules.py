@@ -1,0 +1,35 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM §4)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr=3e-4, warmup=2000, total=100_000,
+                    floor_frac=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = floor_frac * peak_lr + (1 - floor_frac) * peak_lr \
+        * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr=3e-4, warmup=2000, total=100_000,
+                 decay_frac=0.1, floor_frac=0.1):
+    """Warmup -> stable plateau -> short exponential-style decay tail.
+    MiniCPM's WSD: decay over the last ~10% of steps."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total * (1.0 - decay_frac)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    tail_prog = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1), 0, 1)
+    tail = peak_lr * (floor_frac ** tail_prog)        # exp decay to floor
+    lr = jnp.where(step < warmup, warm,
+                   jnp.where(step < decay_start, peak_lr, tail))
+    return lr
+
+
+def make_schedule(kind: str, **kw):
+    if kind == "wsd":
+        return lambda s: wsd_schedule(s, **kw)
+    return lambda s: cosine_schedule(s, **kw)

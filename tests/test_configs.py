@@ -1,0 +1,60 @@
+"""Audit: every full config matches the assigned specification literally."""
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+
+SPEC = {
+    # arch: (layers, d_model, heads, kv, d_ff*, vocab)
+    "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+    "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+    "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+    "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+    "deepseek-v3-671b": (61, 7168, 128, 128, None, 129280),
+    "mamba2-1.3b": (48, 2048, None, None, 0, 50280),
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+    "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_spec_fields(arch):
+    cfg = get_config(arch, "full")
+    if arch == "llama4-maverick-400b-a17b":
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.vocab) == (48, 5120, 40, 8, 202048)
+        assert cfg.n_experts == 128 and cfg.experts_per_tok == 1
+        assert cfg.moe_d_ff == 8192
+        return
+    l, d, h, kv, ff, v = SPEC[arch]
+    assert cfg.n_layers == l and cfg.d_model == d and cfg.vocab == v
+    if h is not None:
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    if ff is not None:
+        assert cfg.d_ff == ff
+
+
+def test_dsv3_moe_spec():
+    cfg = get_config("deepseek-v3-671b", "full")
+    assert cfg.n_experts == 256 and cfg.experts_per_tok == 8
+    assert cfg.n_shared_experts == 1 and cfg.moe_d_ff == 2048
+    assert cfg.use_mla and cfg.kv_lora_rank == 512 and cfg.q_lora_rank == 1536
+    assert cfg.mtp_depth == 1
+
+
+def test_ssm_state_sizes():
+    assert get_config("mamba2-1.3b", "full").ssm_state == 128
+    assert get_config("zamba2-7b", "full").ssm_state == 64
+    assert get_config("zamba2-7b", "full").hybrid_attn_every == 6
+
+
+def test_wsd_schedule_assigned_to_minicpm():
+    assert get_config("minicpm-2b", "full").lr_schedule == "wsd"
+
+
+def test_smoke_configs_are_small():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, "smoke")
+        assert cfg.param_count() < 5e6, arch
+        assert cfg.n_layers <= 6

@@ -1,0 +1,168 @@
+"""Multi-device tests (8 host devices via subprocess: XLA locks the device
+count at first jax init, so each scenario runs in its own interpreter)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, timeout=600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.configs import get_config
+        from repro.launch.steps import make_train_step
+        from repro.launch.sharding import param_shardings, input_shardings
+        from repro.models import init_params
+        from repro.models.layers import set_mesh_axes
+        from repro.optim import adamw_init
+
+        cfg = get_config("granite-3-2b", "smoke").replace(param_dtype="float32")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab)}
+        step = make_train_step(cfg)
+
+        p1, o1, m1 = jax.jit(step)(params, opt, batch)   # single device
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        set_mesh_axes(mesh.axis_names, mesh=mesh)
+        with mesh:
+            ps = param_shardings(mesh, jax.eval_shape(lambda: params))
+            bs = input_shardings(mesh, jax.eval_shape(lambda: batch))
+            p2, o2, m2 = jax.jit(step, in_shardings=(ps, None, bs))(params, opt, batch)
+        d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+        print("LOSSDIFF", abs(float(m1["loss"]) - float(m2["loss"])))
+        print("PARAMDIFF", d)
+    """)
+    lines = dict(l.split() for l in out.strip().splitlines())
+    assert float(lines["LOSSDIFF"]) < 1e-4
+    assert float(lines["PARAMDIFF"]) < 1e-3
+
+
+def test_moe_ep_matches_gspmd_path():
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.models.layers import init_moe, moe_ffn, set_mesh_axes
+
+        cfg = get_config("deepseek-v3-671b", "smoke").replace(
+            moe_capacity_factor=64.0, n_experts=8, experts_per_tok=2)
+        p = init_moe(jax.random.PRNGKey(1), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 16, cfg.d_model),
+                              jnp.float32).astype(jnp.bfloat16)
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        set_mesh_axes(mesh.axis_names, mesh=mesh)
+        with mesh:
+            y_g, _ = jax.jit(lambda p, x: moe_ffn(p, x, cfg))(p, x)
+            cfg2 = cfg.replace(moe_impl="ep")
+            y_e, _ = jax.jit(lambda p, x: moe_ffn(p, x, cfg2))(p, x)
+        err = float(jnp.max(jnp.abs(y_g.astype(jnp.float32) - y_e.astype(jnp.float32))))
+        print("ERR", err)
+    """)
+    assert float(out.split()[-1]) < 0.08       # bf16 tolerance
+
+
+def test_pipeline_parallel_matches_forward():
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.models import init_params, forward
+        from repro.launch.pp import make_pp_forward
+        from repro.models.layers import set_mesh_axes
+
+        cfg = get_config("deepseek-7b", "smoke").replace(
+            n_layers=4, remat=False, param_dtype="float32")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
+        ref = forward(cfg, params, {"tokens": tokens}, kind="eval")[0][:, -1]
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        set_mesh_axes(mesh.axis_names, mesh=mesh)
+        with mesh:
+            out = jax.jit(make_pp_forward(cfg, mesh, 2, compress_bits=0))(params, tokens)
+        print("ERR", float(jnp.max(jnp.abs(out - ref))))
+    """)
+    assert float(out.split()[-1]) < 1e-4
+
+
+def test_checkpoint_restore_across_meshes():
+    """Elastic rescale: save on a (4,2) mesh, restore onto (2,2) subset."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint import save_checkpoint, restore_checkpoint
+        from repro.runtime import plan_rescale
+
+        tree = {"w": np.arange(64.0, dtype=np.float32).reshape(8, 8)}
+        mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+        sh_a = {"w": NamedSharding(mesh_a, P("data", "model"))}
+        dev_tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, sh_a)
+
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 3, dev_tree)
+            plan = plan_rescale(4, prefer_model=2, global_batch=8)
+            mesh_b = jax.make_mesh(plan.mesh_shape, plan.axis_names,
+                                   devices=np.array(jax.devices()[:plan.n_devices]))
+            sh_b = {"w": NamedSharding(mesh_b, P("data", "model"))}
+            out = restore_checkpoint(d, 3, tree, shardings=sh_b)
+            np.testing.assert_array_equal(np.asarray(out["w"]), tree["w"])
+            print("OK", out["w"].sharding.num_devices)
+    """)
+    assert "OK 4" in out
+
+
+def test_trainer_crash_restart_resumes_exactly():
+    out = run_py("""
+        import tempfile, jax, numpy as np
+        from repro.configs import get_config
+        from repro.data import SyntheticTokens
+        from repro.runtime import Trainer, TrainerConfig
+
+        cfg = get_config("granite-3-2b", "smoke").replace(param_dtype="float32")
+        data = SyntheticTokens(vocab=cfg.vocab, seq_len=32, global_batch=4)
+        with tempfile.TemporaryDirectory() as d:
+            tc = TrainerConfig(ckpt_dir=d, ckpt_every=5, log_every=5)
+            # run A: straight through 15 steps
+            a = Trainer(cfg, data, tc)
+            a.init_or_restore()
+            a.run(15)
+            ref = jax.tree.leaves(a.params)[0]
+
+            # run B: crash at step 12, restart from the step-10 checkpoint
+            import shutil, os
+            d2 = tempfile.mkdtemp()
+            tc2 = TrainerConfig(ckpt_dir=d2, ckpt_every=5, log_every=5)
+            b = Trainer(cfg, data, tc2)
+            b.init_or_restore()
+            try:
+                b.run(15, raise_at=12)
+            except RuntimeError:
+                pass
+            b2 = Trainer(cfg, data, tc2)
+            start = b2.init_or_restore()
+            assert start == 10, start
+            b2.run(5)
+            out = jax.tree.leaves(b2.params)[0]
+            err = float(np.max(np.abs(np.asarray(ref, np.float32)
+                                      - np.asarray(out, np.float32))))
+            print("ERR", err)
+    """)
+    assert float(out.split()[-1]) < 1e-5

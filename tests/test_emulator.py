@@ -1,0 +1,93 @@
+"""Emulator tests: Table 3 fault matrix + throughput calibration."""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnns import resnet50
+from repro.core import partition_and_place, random_geometric_cluster
+from repro.emulator import (EmulatorConfig, FaultInjector, LinkFault,
+                            NodeFault, PipelineEmulator)
+from repro.emulator.pipeline import emulate_plan
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = resnet50()
+    cluster = random_geometric_cluster(12, rng=3)
+    plan = partition_and_place(g, cluster, 60e6, n_classes=3, rng=4)
+    return g, cluster, plan
+
+
+def fresh_emu(cluster, plan, **cfg_kw):
+    return PipelineEmulator(cluster, plan.placement.nodes,
+                            plan.partition.boundary_sizes,
+                            plan.partition.compute_flops,
+                            EmulatorConfig(**cfg_kw))
+
+
+class TestThroughput:
+    def test_matches_analytic_bottleneck(self, setup):
+        _, cluster, plan = setup
+        m = emulate_plan(plan, cluster, n_batches=60)
+        assert m["completed"] == 60
+        # comm-dominated regime: steady-state throughput == 1/beta (Eq. 2)
+        assert m["throughput_hz"] == pytest.approx(1 / plan.bottleneck_s,
+                                                   rel=0.05)
+
+    def test_compute_included_when_dominant(self, setup):
+        _, cluster, plan = setup
+        emu = fresh_emu(cluster, plan, node_flops=1e6)   # absurdly slow CPU
+        m = emu.run(20, 1e9)
+        assert m["completed"] == 20
+        assert m["throughput_hz"] < 1 / plan.bottleneck_s  # Eq. 1 regime
+
+
+class TestFaultTolerance:
+    def test_single_node_failure_no_loss(self, setup):
+        _, cluster, plan = setup
+        emu = fresh_emu(cluster, plan)
+        FaultInjector(emu).schedule([NodeFault(20.0, plan.placement.nodes[1])])
+        m = emu.run(40, 1e9)
+        assert m["completed"] == 40
+        assert any("rescheduled" in e for _, e in m["events"])
+
+    def test_multi_node_failure_no_loss(self, setup):
+        _, cluster, plan = setup
+        emu = fresh_emu(cluster, plan)
+        FaultInjector(emu).schedule([
+            NodeFault(20.0, plan.placement.nodes[1]),
+            NodeFault(40.0, plan.placement.nodes[2])])
+        m = emu.run(40, 1e9)
+        assert m["completed"] == 40
+        assert sum("rescheduled" in e for _, e in m["events"]) == 2
+
+    def test_link_fault_recovery(self, setup):
+        _, cluster, plan = setup
+        emu = fresh_emu(cluster, plan)
+        FaultInjector(emu).schedule([
+            LinkFault(10.0, plan.placement.nodes[0],
+                      plan.placement.nodes[1], 20.0)])
+        m = emu.run(30, 1e9)
+        assert m["completed"] == 30
+
+    def test_transient_node_recovery(self, setup):
+        _, cluster, plan = setup
+        emu = fresh_emu(cluster, plan)
+        FaultInjector(emu).schedule([
+            NodeFault(15.0, plan.placement.nodes[2], recover_after_s=30.0)])
+        m = emu.run(30, 1e9)
+        assert m["completed"] == 30
+
+    def test_straggler_migration_improves(self, setup):
+        _, cluster, plan = setup
+        slow = fresh_emu(cluster, plan)
+        slow.stages[1].compute_s *= 50           # persistent straggler
+        m_slow = slow.run(30, 1e9)
+
+        mig = fresh_emu(cluster, plan, enable_straggler_migration=True,
+                        straggler_check_s=5.0)
+        mig.stages[1].compute_s *= 50
+        m_mig = mig.run(30, 1e9)
+        assert m_mig["completed"] == 30
+        assert any("straggler" in e for _, e in m_mig["events"])
+        assert m_mig["mean_e2e_s"] < m_slow["mean_e2e_s"]

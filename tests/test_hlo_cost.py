@@ -1,0 +1,56 @@
+"""HLO cost-walker validation against XLA's own cost analysis."""
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.hlo_cost import analyze_hlo, parse_hlo  # noqa: E402
+
+
+def test_loop_free_dot_matches_xla():
+    def f(a, b):
+        return jnp.tanh(a @ b)
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((256, 512), jnp.float32),
+        jax.ShapeDtypeStruct((512, 128), jnp.float32)).compile()
+    c = analyze_hlo(comp.as_text())
+    assert c.flops == comp.cost_analysis().get("flops")
+
+
+def test_scan_multiplies_trip_count():
+    def g(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        return jax.lax.scan(body, x, None, length=10)[0]
+    comp = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile()
+    c = analyze_hlo(comp.as_text())
+    assert c.flops == pytest.approx(2 * 128 * 128 * 128 * 10, rel=0.01)
+    # xla's own analysis counts the body once — the walker must exceed it
+    assert c.flops > comp.cost_analysis().get("flops") * 5
+
+
+def test_parse_structure():
+    def f(a):
+        return (a * 2).sum()
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    comps = parse_hlo(comp.as_text())
+    assert any(n.startswith("main") for n in comps)
+
+
+def test_traffic_positive_and_bounded():
+    def f(a, b):
+        return jax.nn.relu(a @ b) @ b.T
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+        jax.ShapeDtypeStruct((256, 256), jnp.float32)).compile()
+    c = analyze_hlo(comp.as_text())
+    # at least inputs+outputs once, at most a loose multiple
+    lo = 3 * 256 * 256 * 4
+    assert lo <= c.traffic_bytes <= 100 * lo

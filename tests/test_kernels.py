@@ -1,0 +1,145 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.attention.ref import attention_ref
+from repro.kernels.quantize.ops import dequantize, fake_quantize_st, quantize
+from repro.kernels.quantize.ref import dequantize_ref, fake_quantize, quantize_ref
+from repro.kernels.ssd.ops import ssd_scan
+from repro.kernels.ssd.ref import ssd_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+class TestQuantize:
+    @pytest.mark.parametrize("shape", [(256, 256), (300, 520), (64, 1024),
+                                       (1024, 64), (257, 129)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, shape, dtype):
+        x = jax.random.normal(KEY, shape, jnp.float32).astype(dtype)
+        q, s = quantize(x)
+        qr, sr = quantize_ref(x)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+    def test_roundtrip_error_bound(self):
+        x = jax.random.normal(KEY, (512, 512), jnp.float32)
+        q, s = quantize(x)
+        xd = dequantize(q, s, out_dtype=jnp.float32)
+        # per-block absmax scaling: |err| <= scale/2 <= absmax/254
+        assert float(jnp.max(jnp.abs(xd - x))) <= float(jnp.max(jnp.abs(x))) / 127
+
+    def test_zero_block_safe(self):
+        x = jnp.zeros((256, 256), jnp.float32)
+        q, s = quantize(x)
+        assert float(jnp.abs(dequantize(q, s)).max()) == 0.0
+
+    def test_straight_through_grad(self):
+        x = jax.random.normal(KEY, (8, 256), jnp.float32)
+        g = jax.grad(lambda t: jnp.sum(fake_quantize_st(t) ** 2))(x)
+        # straight-through: d/dx sum(q(x)^2) ~ 2*q(x)
+        np.testing.assert_allclose(np.asarray(g),
+                                   2 * np.asarray(fake_quantize_st(x)),
+                                   rtol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 300), st.integers(1, 300), st.integers(0, 2 ** 31))
+    def test_property_roundtrip(self, m, n, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (m, n), jnp.float32)
+        q, s = quantize_ref(x)
+        xd = dequantize_ref(q, s, out_dtype=jnp.float32)
+        assert xd.shape == x.shape
+        bound = np.maximum(np.abs(np.asarray(x)).max() / 127, 1e-6)
+        assert float(jnp.max(jnp.abs(xd - x))) <= bound * 1.01
+
+    def test_fake_quantize_bits(self):
+        x = jax.random.normal(KEY, (64, 64), jnp.float32)
+        e8 = float(jnp.max(jnp.abs(fake_quantize(x, 8) - x)))
+        e4 = float(jnp.max(jnp.abs(fake_quantize(x, 4) - x)))
+        assert e8 < e4
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("s", [128, 256, 384])
+    @pytest.mark.parametrize("h,kv", [(4, 4), (4, 2), (8, 1)])
+    @pytest.mark.parametrize("hd", [32, 64])
+    def test_causal_sweep(self, s, h, kv, hd):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (2, s, h, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (2, s, kv, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (2, s, kv, hd), jnp.float32)
+        out = flash_attention(q, k, v, causal=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_non_causal(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(flash_attention(q, k, v, causal=False)),
+            np.asarray(attention_ref(q, k, v, causal=False)),
+            rtol=2e-5, atol=2e-5)
+
+    def test_bfloat16(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 128, 2, 64), jnp.float32).astype(jnp.bfloat16)
+        k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.float32).astype(jnp.bfloat16)
+        v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.float32).astype(jnp.bfloat16)
+        out = flash_attention(q, k, v, causal=True).astype(jnp.float32)
+        ref = attention_ref(q, k, v, causal=True).astype(jnp.float32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_padding_path(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 200, 2, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 200, 2, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 200, 2, 32), jnp.float32)
+        out = flash_attention(q, k, v, causal=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("s", [128, 200, 384])
+    @pytest.mark.parametrize("p,n", [(16, 32), (64, 128), (32, 16)])
+    def test_sweep(self, s, p, n):
+        ks = jax.random.split(KEY, 5)
+        b, h = 2, 3
+        xh = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (b, s, n)) * 0.5
+        Cm = jax.random.normal(ks[4], (b, s, n)) * 0.5
+        y, st = ssd_scan(xh, dt, A, Bm, Cm)
+        yr, sr = ssd_ref(xh, dt, A, Bm, Cm)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(sr),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_matches_model_chunked_path(self):
+        """Kernel == the model's jnp chunked implementation."""
+        from repro.models.ssm import ssd_chunked
+        ks = jax.random.split(KEY, 5)
+        b, s, h, p, n = 1, 256, 2, 16, 32
+        xh = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (b, s, n)) * 0.5
+        Cm = jax.random.normal(ks[4], (b, s, n)) * 0.5
+        y1, st1 = ssd_scan(xh, dt, A, Bm, Cm)
+        y2, st2 = ssd_chunked(xh, dt, A, Bm, Cm, chunk=128)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(st1), np.asarray(st2),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,42 @@
+"""Paper §5.2/§5.3 statistics reproduced as assertions."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.transfer_classes import (doane_bins, high_class_connectivity,
+                                         model_bins, rgg_stats)
+
+
+def test_rgg_mean_bandwidth_eq18():
+    mu, sigma, cv = rgg_stats(n_samples=100_000, seed=1)
+    assert mu == pytest.approx(4.766, abs=0.02)      # paper Eq. 18
+    assert sigma == pytest.approx(1.398, abs=0.02)
+    assert cv == pytest.approx(0.293, abs=0.01)
+
+
+def test_h_subgraph_connected():
+    assert high_class_connectivity(trials=10) == 1.0  # paper P(alpha) = 1
+
+
+def test_doane_bins_sane():
+    assert doane_bins(np.ones(10)) == 1
+    assert doane_bins(np.arange(100.0)) >= 5
+
+
+def test_model_transfer_classes_in_paper_range():
+    for name, bins in model_bins():
+        assert 3 <= bins <= 15, (name, bins)
+
+
+def test_resnet_avg_transfer_matches_intro():
+    """Paper §1: ~10.2 Mbits average inter-layer transfer for ResNet50."""
+    from repro.configs.paper_cnns import resnet50
+    g = resnet50()
+    pts = g.candidate_partition_points()
+    mbits = [g.layers[p].out_bytes * 8 / 1e6 for p in pts]
+    assert np.mean(mbits) == pytest.approx(10.2, rel=0.1)

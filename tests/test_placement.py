@@ -1,0 +1,172 @@
+"""Tests for Algorithms 2-3 (k-path placement) and the color-coding k-path."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ClusterGraph, classify, evaluate, find_k_path,
+                        kpath_matching, place_with_retry,
+                        random_geometric_cluster, subgraph_k_path,
+                        theorem1_bound, tpu_cluster)
+from repro.core.placement import PlacementInfeasible, _class_subarrays
+
+
+def path_graph_adj(n):
+    adj = np.zeros((n, n), dtype=bool)
+    for i in range(n - 1):
+        adj[i, i + 1] = adj[i + 1, i] = True
+    return adj
+
+
+class TestKPath:
+    def test_complete_graph_any_k(self):
+        n = 10
+        adj = ~np.eye(n, dtype=bool)
+        for k in range(1, n + 1):
+            p = find_k_path(adj, k, rng=0)
+            assert p is not None and len(p) == k
+            assert len(set(p)) == k
+            assert all(adj[p[i], p[i + 1]] for i in range(k - 1))
+
+    def test_path_graph_forced(self):
+        adj = path_graph_adj(6)
+        p = find_k_path(adj, 6, start=0, end=5, rng=1)
+        assert p == [0, 1, 2, 3, 4, 5]
+
+    def test_infeasible_returns_none(self):
+        adj = path_graph_adj(4)
+        adj[1, 2] = adj[2, 1] = False      # disconnect
+        assert find_k_path(adj, 4, start=0, end=3, rng=0) is None
+
+    def test_endpoints_respected(self):
+        n = 8
+        adj = ~np.eye(n, dtype=bool)
+        p = find_k_path(adj, 5, start=3, end=7, rng=2)
+        assert p[0] == 3 and p[-1] == 7 and len(set(p)) == 5
+
+    def test_avail_mask(self):
+        n = 8
+        adj = ~np.eye(n, dtype=bool)
+        avail = np.zeros(n, dtype=bool)
+        avail[:4] = True
+        p = find_k_path(adj, 4, avail=avail, rng=3)
+        assert p is not None and all(v < 4 for v in p)
+        assert find_k_path(adj, 5, avail=avail, rng=3) is None
+
+    def test_k1_and_k2(self):
+        adj = ~np.eye(4, dtype=bool)
+        assert find_k_path(adj, 1, start=2, rng=0) == [2]
+        assert find_k_path(adj, 2, start=0, end=3, rng=0) == [0, 3]
+        adj2 = np.zeros((4, 4), dtype=bool)
+        assert find_k_path(adj2, 2, start=0, end=3, rng=0) is None
+
+    def test_long_path_fallback(self):
+        n = 20
+        adj = ~np.eye(n, dtype=bool)
+        p = find_k_path(adj, 16, rng=4)     # beyond KMAX_COLOR
+        assert p is not None and len(set(p)) == 16
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.data())
+    def test_random_graphs_valid_paths(self, data):
+        n = data.draw(st.integers(4, 12))
+        k = data.draw(st.integers(2, min(n, 6)))
+        seed = data.draw(st.integers(0, 10 ** 6))
+        rng = np.random.default_rng(seed)
+        adj = rng.random((n, n)) < 0.5
+        adj = adj | adj.T
+        np.fill_diagonal(adj, False)
+        p = find_k_path(adj, k, rng=rng)
+        if p is not None:
+            assert len(p) == k and len(set(p)) == k
+            assert all(adj[p[i], p[i + 1]] for i in range(k - 1))
+
+
+class TestClassify:
+    def test_single_class(self):
+        assert (classify([1, 5, 9], 1) == 0).all()
+
+    def test_three_classes_ordering(self):
+        c = classify([1, 2, 3, 10, 11, 12, 100, 101, 102], 3)
+        assert list(c) == [0, 0, 0, 1, 1, 1, 2, 2, 2]
+
+    def test_basis_binning(self):
+        basis = np.arange(100.0)
+        c = classify([5.0, 55.0, 95.0], 3, basis=basis)
+        assert list(c) == [0, 1, 2]
+
+    def test_subarrays(self):
+        cls = np.array([2, 2, 0, 1, 1, 2])
+        assert _class_subarrays(cls, 2) == [(0, 2), (5, 6)]
+        assert _class_subarrays(cls, 1) == [(3, 5)]
+        assert _class_subarrays(cls, 0) == [(2, 3)]
+
+
+class TestSubgraphKPath:
+    def test_maximizes_threshold(self):
+        # 4-clique with one golden triangle (bw 100), rest bw 1
+        bw = np.ones((4, 4)) * 1.0
+        for i, j in [(0, 1), (1, 2), (0, 2)]:
+            bw[i, j] = bw[j, i] = 100.0
+        np.fill_diagonal(bw, 0)
+        c = ClusterGraph(bw=bw)
+        path, thr = subgraph_k_path(c, 3, None, None,
+                                    np.ones(4, dtype=bool),
+                                    np.random.default_rng(0))
+        assert thr == 100.0
+        assert set(path) == {0, 1, 2}
+
+
+class TestKPathMatching:
+    def test_assigns_distinct_nodes(self):
+        cluster = random_geometric_cluster(12, rng=0)
+        sizes = [8e6, 2e6, 5e6, 1e6]
+        res = kpath_matching(sizes, cluster, n_classes=3, rng=1)
+        assert len(res.nodes) == 5
+        assert len(set(res.nodes)) == 5
+        assert res.bottleneck_s >= theorem1_bound(sizes, cluster)
+
+    def test_biggest_transfer_gets_good_link(self):
+        # with 1 boundary, the matching must find the max-bandwidth edge
+        cluster = random_geometric_cluster(10, rng=2)
+        sizes = [42e6]
+        res = kpath_matching(sizes, cluster, n_classes=1, rng=3)
+        assert res.bottleneck_s == pytest.approx(
+            theorem1_bound(sizes, cluster))
+
+    def test_infeasible_too_few_nodes(self):
+        cluster = random_geometric_cluster(3, rng=0)
+        with pytest.raises(PlacementInfeasible):
+            kpath_matching([1.0] * 5, cluster, n_classes=2, rng=0)
+
+    def test_retry_reduces_classes(self):
+        cluster = random_geometric_cluster(6, rng=5)
+        sizes = [3e6, 2e6, 1e6, 4e6, 2e6]     # needs all 6 nodes
+        res = place_with_retry(sizes, cluster, n_classes=5, rng=6)
+        assert len(set(res.nodes)) == 6
+
+    def test_tpu_cluster_crosspod_boundary_is_smallest(self):
+        """DESIGN.md §2: on a 2-pod cluster the smallest transfer should be
+        routed over the DCN link (the paper's max-S<->max-E matching)."""
+        cluster = tpu_cluster(n_pods=2, slots_per_pod=4)
+        # 7 boundaries for 8 slots: one tiny, six large
+        sizes = [4e9, 4e9, 4e9, 1e6, 4e9, 4e9, 4e9]
+        res = kpath_matching(sizes, cluster, n_classes=2, rng=0)
+        pods = [v // 4 for v in res.nodes]
+        # find where the pod changes; it must be at the tiny boundary
+        changes = [i for i in range(7) if pods[i] != pods[i + 1]]
+        assert changes == [3]
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.data())
+    def test_matching_beats_or_equals_random(self, data):
+        seed = data.draw(st.integers(0, 10 ** 5))
+        rng = np.random.default_rng(seed)
+        cluster = random_geometric_cluster(14, rng=rng)
+        m = data.draw(st.integers(2, 6))
+        sizes = [float(s) for s in rng.integers(1, 100, size=m) * 1e5]
+        res = kpath_matching(sizes, cluster, n_classes=3, rng=rng)
+        # random placement for comparison
+        rand_nodes = list(rng.choice(14, size=m + 1, replace=False))
+        rand_beta = evaluate(sizes, [int(v) for v in rand_nodes], cluster).bottleneck_s
+        assert res.bottleneck_s <= rand_beta * 1.75  # matching is near-always better

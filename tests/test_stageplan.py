@@ -1,0 +1,60 @@
+"""core.pipeline: the paper's partitioner applied to the assigned archs."""
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.cluster import tpu_cluster
+from repro.core.pipeline import lm_block_graph, plan_stages
+from repro.models.config import SHAPES
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_block_graph_partitionable(arch):
+    cfg = get_config(arch, "full")
+    g = lm_block_graph(cfg, SHAPES["prefill_32k"])
+    pts = g.candidate_partition_points()
+    # every transformer block boundary is a candidate point
+    assert len(pts) >= cfg.n_layers
+
+
+@pytest.mark.parametrize("arch", ["llama3-405b", "deepseek-v3-671b",
+                                  "zamba2-7b"])
+def test_stage_plan_fits_budget(arch):
+    cfg = get_config(arch, "full")
+    budget = 16e9 * 64          # 64-chip stage slot
+    sp = plan_stages(cfg, SHAPES["prefill_32k"],
+                     cluster=tpu_cluster(n_pods=2, slots_per_pod=8),
+                     hbm_per_stage_bytes=budget)
+    assert all(m < budget for m in sp.plan.partition.memory_bytes)
+    assert sp.n_stages >= 1
+    # all blocks are assigned to exactly one stage
+    total = sum(len(p) for p in sp.plan.partition.partition_layers)
+    g = lm_block_graph(cfg, SHAPES["prefill_32k"])
+    assert total == len(g)
+
+
+def test_zamba_shared_weights_charged_once_per_stage():
+    cfg = get_config("zamba2-7b", "full")
+    g = lm_block_graph(cfg, SHAPES["train_4k"])
+    # shared attention counted once in a single stage even though there are
+    # ~14 call sites (param-only accounting; work bytes are per-layer peaks)
+    n_sites = sum(1 for n in g.layers if n.startswith("shared_attn"))
+    assert n_sites >= 13
+    per_site = g.layers["shared_attn@0"].param_bytes
+    naive = sum(l.param_bytes for l in g.layers.values())
+    deduped = g.total_param_bytes()
+    assert naive - deduped == pytest.approx((n_sites - 1) * per_site,
+                                            rel=1e-6)
+
+
+def test_min_cut_crosses_dcn_for_moe():
+    """llama4's MoE blocks are ~16x heavier than dense blocks, so the
+    partitioner's stage split + the k-path placement put stage boundaries
+    where they balance memory, and the placement is feasible on 2 pods."""
+    cfg = get_config("llama4-maverick-400b-a17b", "full")
+    sp = plan_stages(cfg, SHAPES["prefill_32k"],
+                     cluster=tpu_cluster(n_pods=2, slots_per_pod=4),
+                     hbm_per_stage_bytes=16e9 * 64)
+    assert sp.n_stages <= 8
+    assert len(set(sp.plan.placement.nodes)) == sp.n_stages + 1

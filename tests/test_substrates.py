@@ -1,0 +1,154 @@
+"""Tests: checkpoint store, data pipeline, optimizer, runtime components."""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.data import SyntheticTokens, make_batch_iterator
+from repro.optim import adamw_init, adamw_update, make_schedule
+from repro.runtime import HeartbeatMonitor, plan_rescale
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": np.arange(12.0).reshape(3, 4),
+                "b": {"c": np.ones((2,), np.int32)}}
+        save_checkpoint(tmp_path, 5, tree)
+        assert latest_step(tmp_path) == 5
+        out = restore_checkpoint(tmp_path, 5, tree)
+        np.testing.assert_array_equal(out["a"], tree["a"])
+        np.testing.assert_array_equal(out["b"]["c"], tree["b"]["c"])
+
+    def test_keep_gc(self, tmp_path):
+        tree = {"x": np.zeros(3)}
+        for s in (1, 2, 3, 4, 5):
+            save_checkpoint(tmp_path, s, tree, keep=2)
+        steps = sorted(p.name for p in tmp_path.glob("step_*"))
+        assert len(steps) == 2 and latest_step(tmp_path) == 5
+
+    def test_atomic_no_partial(self, tmp_path):
+        tree = {"x": np.zeros(3)}
+        save_checkpoint(tmp_path, 1, tree)
+        # a stale tmp dir from a crashed save must not break the next save
+        (tmp_path / "step_00000002.tmp").mkdir()
+        save_checkpoint(tmp_path, 2, tree)
+        assert latest_step(tmp_path) == 2
+
+    def test_async(self, tmp_path):
+        ck = AsyncCheckpointer(tmp_path)
+        ck.save(7, {"w": np.ones((64, 64))})
+        ck.wait()
+        assert latest_step(tmp_path) == 7
+
+    def test_restore_dtype_cast(self, tmp_path):
+        tree = {"w": np.ones((4, 4), np.float32)}
+        save_checkpoint(tmp_path, 1, tree)
+        like = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+        out = restore_checkpoint(tmp_path, 1, like)
+        assert out["w"].dtype == jnp.bfloat16
+
+
+class TestData:
+    def test_deterministic(self):
+        src = SyntheticTokens(vocab=100, seq_len=16, global_batch=8)
+        b1, b2 = src.batch(3), src.batch(3)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        assert not np.array_equal(src.batch(4)["tokens"], b1["tokens"])
+
+    def test_rank_shards_differ(self):
+        a = SyntheticTokens(100, 16, 8, dp_rank=0, dp_size=2)
+        b = SyntheticTokens(100, 16, 8, dp_rank=1, dp_size=2)
+        assert a.local_batch == 4
+        assert not np.array_equal(a.batch(0)["tokens"], b.batch(0)["tokens"])
+
+    def test_vocab_bounds(self):
+        src = SyntheticTokens(vocab=50, seq_len=64, global_batch=4)
+        t = src.batch(0)["tokens"]
+        assert t.min() >= 0 and t.max() < 50
+
+    def test_prefetch_iterator(self):
+        src = SyntheticTokens(100, 8, 4)
+        it = make_batch_iterator(src, start_step=10)
+        step, batch = next(it)
+        assert step == 10
+        np.testing.assert_array_equal(batch["tokens"],
+                                      src.batch(10)["tokens"])
+        it.close()
+
+
+class TestOptim:
+    def test_adamw_reduces_quadratic(self):
+        w = {"w": jnp.array([3.0, -2.0])}
+        opt = adamw_init(w)
+        loss = lambda p: jnp.sum(p["w"] ** 2)
+        for _ in range(200):
+            g = jax.grad(loss)(w)
+            w, opt, _ = adamw_update(w, g, opt, lr=0.1, weight_decay=0.0)
+        assert float(loss(w)) < 1e-2
+
+    def test_grad_clipping(self):
+        w = {"w": jnp.ones(4)}
+        opt = adamw_init(w)
+        g = {"w": jnp.full(4, 1e9)}
+        w2, opt, m = adamw_update(w, g, opt, lr=0.1, clip_norm=1.0)
+        assert float(m["grad_norm"]) > 1.0
+        assert bool(jnp.isfinite(w2["w"]).all())
+
+    def test_bf16_states(self):
+        w = {"w": jnp.ones(8, jnp.bfloat16)}
+        opt = adamw_init(w, state_dtype=jnp.bfloat16)
+        assert opt.m["w"].dtype == jnp.bfloat16
+        g = {"w": jnp.ones(8, jnp.bfloat16)}
+        w2, opt2, _ = adamw_update(w, g, opt, lr=0.01)
+        assert opt2.v["w"].dtype == jnp.bfloat16
+
+    def test_schedules(self):
+        wsd = make_schedule("wsd", peak_lr=1e-3, warmup=10, total=100)
+        cos = make_schedule("cosine", peak_lr=1e-3, warmup=10, total=100)
+        assert float(wsd(0)) == 0.0
+        assert float(wsd(50)) == pytest.approx(1e-3)          # plateau
+        assert float(wsd(99)) < 5e-4                          # decay tail
+        assert float(cos(99)) < float(cos(50)) < float(cos(10)) * 1.01
+
+
+class TestRuntime:
+    def test_heartbeat_detects_death(self):
+        t = [0.0]
+        mon = HeartbeatMonitor(["a", "b"], timeout_s=5.0, clock=lambda: t[0])
+        t[0] = 3.0
+        mon.beat("a")
+        t[0] = 7.0
+        dead = mon.sweep()
+        assert dead == ["b"]
+        assert mon.healthy() == ["a"]
+
+    def test_flapping_quarantine(self):
+        t = [0.0]
+        mon = HeartbeatMonitor(["a"], timeout_s=1.0, max_restarts=2,
+                               clock=lambda: t[0])
+        for i in range(4):
+            t[0] += 2.0
+            mon.sweep()
+            mon.beat("a")
+        assert "a" in mon.quarantined
+
+    def test_plan_rescale_keeps_model_axis(self):
+        p = plan_rescale(192, prefer_model=16, global_batch=384)
+        assert p.mesh_shape == (12, 16)
+        assert p.n_devices == 192
+
+    def test_plan_rescale_drops_ranks_for_divisibility(self):
+        p = plan_rescale(192, prefer_model=16, global_batch=256)
+        assert p.mesh_shape[1] == 16
+        assert 256 % p.mesh_shape[0] == 0
+
+    def test_plan_rescale_shrinks_model_when_needed(self):
+        p = plan_rescale(24, prefer_model=16, global_batch=48)
+        assert p.mesh_shape[0] * p.mesh_shape[1] <= 24
+        assert "shrunk" in p.note or p.mesh_shape[1] == 16
