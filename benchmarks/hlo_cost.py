@@ -2,7 +2,7 @@
 optimized (post-SPMD) HLO text, with while-loop bodies multiplied by their
 parsed trip counts.
 
-Why not ``compiled.cost_analysis()``: XLA's cost analysis visits a while
+Why not XLA's own analysis (``repro.compat.cost_analysis``): it visits a while
 body once, so scan-over-layers models under-report by ~n_layers (measured
 9.4x for mamba2-1.3b).  This walker:
 
@@ -16,7 +16,7 @@ body once, so scan-over-layers models under-report by ~n_layers (measured
     non-trivial ops (post-fusion HLO, so fusion boundaries ~ materialization
     boundaries).
 
-Cross-validated against cost_analysis() on loop-free modules
+Cross-validated against compat.cost_analysis on loop-free modules
 (tests/test_hlo_cost.py).
 """
 

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the full test suite plus a quickstart smoke run.
+#
+#   scripts/ci.sh          # from anywhere; cd's to the repo root itself
+#
+# pyproject.toml's pytest pythonpath puts src/ on sys.path, so pytest
+# needs no PYTHONPATH; the example is run the way the docs show it
+# (PYTHONPATH=src) to keep that invocation covered too.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pytest -x -q
+
+echo "--- smoke: examples/quickstart.py"
+PYTHONPATH=src python examples/quickstart.py > /dev/null
+echo "ci: OK"

@@ -109,6 +109,7 @@ class AsyncCheckpointer:
         self.ckpt_dir = Path(ckpt_dir)
         self.keep = keep
         self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
         self.last_saved: int | None = None
 
     def save(self, step: int, tree) -> None:
@@ -116,13 +117,21 @@ class AsyncCheckpointer:
         host_tree = jax.tree.map(lambda a: np.asarray(a), tree)
 
         def work():
-            save_checkpoint(self.ckpt_dir, step, host_tree, self.keep)
-            self.last_saved = step
+            try:
+                save_checkpoint(self.ckpt_dir, step, host_tree, self.keep)
+                self.last_saved = step
+            except Exception as e:          # surfaced by the next wait()
+                self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
+        """Join the in-flight save; re-raises a failed write rather than
+        letting the train loop believe the checkpoint is durable."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,23 @@
+"""Version-portability layer (see README.md in this directory).
+
+Everything version-sensitive goes through here:
+
+  * :func:`shard_map` — new-JAX calling convention, runs on 0.4.x too.
+  * :func:`cost_analysis` — flat-dict ``Compiled.cost_analysis()``.
+  * :mod:`repro.compat.testing` — ``hypothesis`` or the vendored fallback.
+
+No module outside this package may call ``jax.shard_map``,
+``jax.experimental.shard_map`` or ``Compiled.cost_analysis()`` directly
+(enforced by tests/test_compat.py).
+"""
+
+from repro.compat.jax_api import (HAS_NATIVE_SHARD_MAP, JAX_VERSION,
+                                  cost_analysis, legacy_shard_map_kwargs,
+                                  native_shard_map_kwargs,
+                                  normalize_cost_analysis,
+                                  pallas_tpu_compiler_params, shard_map)
+
+__all__ = ["JAX_VERSION", "HAS_NATIVE_SHARD_MAP", "shard_map",
+           "cost_analysis", "normalize_cost_analysis",
+           "legacy_shard_map_kwargs", "native_shard_map_kwargs",
+           "pallas_tpu_compiler_params"]

@@ -1,0 +1,139 @@
+"""Vendored, deterministic mini-``hypothesis`` (offline fallback).
+
+Implements the subset the test suite uses — ``@given``, ``@settings``, and
+``strategies.integers/lists/data`` — with *replay* semantics instead of
+search: example ``i`` of a test is drawn from ``random.Random(crc32(f"{test
+qualname}:{i}"))``, so every run (any process, any machine, any
+PYTHONHASHSEED) executes the identical example corpus.  There is no
+shrinking and no example database; a failing example is reported with its
+drawn values so it can be reproduced as a plain unit test.
+
+Import through :mod:`repro.compat.testing`, which prefers the real
+``hypothesis`` when installed.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+__all__ = ["given", "settings", "integers", "lists", "data",
+           "DEFAULT_MAX_EXAMPLES", "Strategy", "DataObject"]
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class Strategy:
+    """A value generator: ``example_from(rng)`` draws one value."""
+
+    def __init__(self, draw, label: str):
+        self._draw = draw
+        self.label = label
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return self.label
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value),
+                    f"integers({min_value}, {max_value})")
+
+
+def lists(elements: Strategy, *, min_size: int = 0,
+          max_size: int | None = None) -> Strategy:
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng):
+        n = rng.randint(min_size, hi)
+        return [elements.example_from(rng) for _ in range(n)]
+
+    return Strategy(draw, f"lists({elements!r}, min_size={min_size}, "
+                          f"max_size={max_size})")
+
+
+class DataObject:
+    """Interactive drawing handle for ``strategies.data()`` tests."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+        self.drawn: list = []
+
+    def draw(self, strategy: Strategy, label: str | None = None):
+        value = strategy.example_from(self._rng)
+        self.drawn.append(value)
+        return value
+
+    def __repr__(self):
+        return f"data(drawn={self.drawn!r})"
+
+
+def data() -> Strategy:
+    return Strategy(lambda rng: DataObject(rng), "data()")
+
+
+class settings:
+    """Decorator subset: only ``max_examples`` is honored; ``deadline`` and
+    other knobs are accepted and ignored (the corpus is fixed anyway)."""
+
+    def __init__(self, max_examples: int | None = None, deadline=None,
+                 **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._mh_max_examples = self.max_examples
+        return fn
+
+
+def _example_rng(test_name: str, index: int) -> random.Random:
+    seed = zlib.crc32(f"{test_name}:{index}".encode())
+    return random.Random(seed)
+
+
+def given(*strategies):
+    """Replay-mode ``@given``: runs the test once per corpus example."""
+
+    def decorate(fn):
+        test_name = f"{fn.__module__}.{fn.__qualname__}"
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        if len(strategies) > len(params):
+            raise TypeError(
+                f"{test_name} takes {len(params)} parameter(s) but "
+                f"@given got {len(strategies)} strategies")
+        # strategies bind to the trailing params; by *name*, so pytest
+        # fixtures passed as keywords (tmp_path, ...) don't collide
+        bound_names = [p.name for p in
+                       params[len(params) - len(strategies):]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = (getattr(wrapper, "_mh_max_examples", None)
+                 or getattr(fn, "_mh_max_examples", None)
+                 or DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = _example_rng(test_name, i)
+                drawn = {name: s.example_from(rng)
+                         for name, s in zip(bound_names, strategies)}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example {i}/{n} for {test_name}: "
+                        f"{drawn!r}") from e
+
+        # pytest resolves fixtures from the signature: strip the
+        # strategy-bound parameters so only e.g. ``self`` remains, and drop
+        # __wrapped__ so inspect does not see the original signature.
+        wrapper.__signature__ = sig.replace(
+            parameters=params[:len(params) - len(strategies)])
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.is_hypothesis_fallback = True
+        return wrapper
+
+    return decorate

@@ -1,0 +1,151 @@
+"""JAX version portability: one calling convention across API generations.
+
+The repo is written against the *new* JAX surface (``jax.shard_map`` with
+``check_vma``/``axis_names``, flat-dict ``Compiled.cost_analysis()``) and
+this module back-translates to the 0.4.x conventions when running on old
+JAX (``jax.experimental.shard_map.shard_map`` with ``check_rep``/``auto``,
+list-of-dicts cost analysis).  Call sites must not touch the raw APIs —
+tests/test_compat.py greps for violations.
+
+Translation table (new -> legacy):
+
+  check_vma=<bool>        ->  check_rep=<bool>
+  axis_names={manual...}  ->  auto=frozenset(mesh.axis_names) - manual
+  cost_analysis(): dict   ->  [dict][0]
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+__all__ = ["JAX_VERSION", "HAS_NATIVE_SHARD_MAP", "shard_map",
+           "cost_analysis", "normalize_cost_analysis",
+           "legacy_shard_map_kwargs", "native_shard_map_kwargs",
+           "pallas_tpu_compiler_params"]
+
+
+def _version_tuple(v: str) -> tuple:
+    parts = []
+    for p in v.split(".")[:3]:
+        digits = "".join(ch for ch in p if ch.isdigit())
+        parts.append(int(digits) if digits else 0)
+    return tuple(parts)
+
+
+JAX_VERSION = _version_tuple(jax.__version__)
+
+
+def _native_shard_map_ok() -> bool:
+    # mere existence isn't enough: jax.shard_map was exported (~0.5.3)
+    # before the check_vma/axis_names spelling landed — detect by signature
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        return False
+    try:
+        return "check_vma" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):     # pragma: no cover
+        return False
+
+
+HAS_NATIVE_SHARD_MAP = _native_shard_map_ok()
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+def legacy_shard_map_kwargs(mesh_axis_names, axis_names, check):
+    """New-style (axis_names, check_vma) -> 0.4.x (auto, check_rep) kwargs.
+
+    ``axis_names`` is the set of *manual* axes (None = all axes manual);
+    legacy shard_map instead takes ``auto`` = the complement: axes left to
+    GSPMD."""
+    kwargs = {"check_rep": check}
+    if axis_names is not None:
+        auto = frozenset(mesh_axis_names) - frozenset(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    return kwargs
+
+
+def native_shard_map_kwargs(axis_names, check):
+    """Kwargs for new-JAX ``jax.shard_map`` from the shared convention."""
+    kwargs = {"check_vma": check}
+    if axis_names is not None:
+        kwargs["axis_names"] = set(axis_names)
+    return kwargs
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=True):
+    """Version-portable ``shard_map``.
+
+    Args follow the new-JAX convention: ``axis_names`` is the set of axes to
+    treat as Manual (None = every mesh axis); ``check_vma`` toggles the
+    replication/varying-manual-axes check (``check_rep`` on 0.4.x).
+
+    Legacy caveat: with a *partial* ``axis_names`` on 0.4.x the mapped
+    function must run under ``jax.jit`` — the legacy eager impl rejects
+    ``auto`` axes (bare NotImplementedError); the wrapper below re-raises
+    that with a message.  Every in-repo call site jits.
+    """
+    if HAS_NATIVE_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             **native_shard_map_kwargs(axis_names, check_vma))
+    from jax.experimental.shard_map import shard_map as _legacy
+    kwargs = legacy_shard_map_kwargs(mesh.axis_names, axis_names, check_vma)
+    mapped = _legacy(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kwargs)
+    if "auto" not in kwargs:
+        return mapped
+
+    def wrapped(*args, **kwargs):
+        try:
+            return mapped(*args, **kwargs)
+        except NotImplementedError as e:
+            if str(e):          # a real NIE from the mapped function body
+                raise
+            # the legacy eager dispatch rejects auto axes with a bare NIE
+            raise NotImplementedError(
+                "legacy (0.4.x) shard_map only supports partial axis_names "
+                "under jax.jit — wrap the call in jit, or pass "
+                "axis_names=None for a fully-Manual map") from e
+
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# Compiled.cost_analysis()
+# ---------------------------------------------------------------------------
+
+def normalize_cost_analysis(ca) -> dict:
+    """Normalize a raw cost_analysis result to one flat dict.
+
+    Old JAX returns a list with one per-device dict; new JAX returns the
+    dict directly; some backends return None."""
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)
+
+
+def cost_analysis(compiled) -> dict:
+    """Flat {metric: value} cost analysis for a jax ``Compiled`` object."""
+    return normalize_cost_analysis(compiled.cost_analysis())
+
+
+# ---------------------------------------------------------------------------
+# pallas TPU compiler params (CompilerParams on new JAX, TPUCompilerParams
+# on 0.4.x; the kwargs — dimension_semantics etc. — are identical)
+# ---------------------------------------------------------------------------
+
+def pallas_tpu_compiler_params(**kwargs):
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

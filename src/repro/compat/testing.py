@@ -1,0 +1,20 @@
+"""Property-testing facade: real ``hypothesis`` when installed, the
+vendored deterministic fallback otherwise.
+
+Test modules import from here instead of ``hypothesis`` directly::
+
+    from repro.compat.testing import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies
+    HYPOTHESIS_IS_FALLBACK = False
+except ImportError:                                  # offline environment
+    from repro.compat import hypothesis_fallback as strategies
+    from repro.compat.hypothesis_fallback import given, settings
+    HYPOTHESIS_IS_FALLBACK = True
+
+__all__ = ["given", "settings", "strategies", "HYPOTHESIS_IS_FALLBACK"]

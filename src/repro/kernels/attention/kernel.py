@@ -28,6 +28,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_tpu_compiler_params
+
 BQ = 128
 BK = 128
 NEG = -1e30
@@ -95,7 +97,7 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
             pltpu.VMEM((BQ, 1), jnp.float32),
             pltpu.VMEM((BQ, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -22,8 +22,12 @@ BM, BN = 256, 256
 def _quantize_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)
     absmax = jnp.max(jnp.abs(x))
-    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
-    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    # explicit recip-multiplies, bit-identical to ref.quantize_ref: a bare
+    # `absmax / 127.0` is rewritten to a 1-ULP-off reciprocal multiply under
+    # jit on some backends, which flips round() on exact .5 ties
+    scale = jnp.where(absmax > 0, absmax * jnp.float32(1.0 / 127.0), 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x * (1.0 / scale)),
+                          -127, 127).astype(jnp.int8)
     s_ref[0, 0] = scale
 
 

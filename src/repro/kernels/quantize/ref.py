@@ -27,8 +27,9 @@ def quantize_ref(x, bm: int = BM, bn: int = BN):
     mp, np_ = xp.shape
     t = xp.reshape(mp // bm, bm, np_ // bn, bn).transpose(0, 2, 1, 3)
     absmax = jnp.max(jnp.abs(t), axis=(2, 3))
-    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(t / scale[:, :, None, None]), -127, 127)
+    # same expression as kernel._quantize_kernel — see the ULP note there
+    scale = jnp.where(absmax > 0, absmax * jnp.float32(1.0 / 127.0), 1.0)
+    q = jnp.clip(jnp.round(t * (1.0 / scale)[:, :, None, None]), -127, 127)
     q = q.transpose(0, 2, 1, 3).reshape(mp, np_)[:m, :n].astype(jnp.int8)
     return q, scale.astype(jnp.float32)
 
@@ -41,6 +42,17 @@ def dequantize_ref(q, scales, bm: int = BM, bn: int = BN,
     t = qp.reshape(mp // bm, bm, np_ // bn, bn).transpose(0, 2, 1, 3)
     x = t * scales[:, :, None, None]
     return x.transpose(0, 2, 1, 3).reshape(mp, np_)[:m, :n].astype(out_dtype)
+
+
+def rowwise_quantize(x):
+    """Per-row int8 quantization for wire compression (pipeline-stage
+    boundaries, EP all_to_all payloads).  Same scale expression as the
+    blockwise kernel — see the ULP note in kernel._quantize_kernel."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax * jnp.float32(1.0 / 127.0), 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) * (1.0 / scale)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
 
 
 def fake_quantize(x, bits: int = 8):

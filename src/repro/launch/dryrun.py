@@ -20,6 +20,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+from repro.compat import cost_analysis as compat_cost_analysis
 from repro.configs import ARCH_IDS, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.sharding import (cache_shardings, input_shardings,
@@ -197,7 +198,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         except Exception as e:                      # pragma: no cover
             rec["memory"] = {"error": str(e)}
         try:
-            ca = compiled.cost_analysis()
+            ca = compat_cost_analysis(compiled)
             rec["cost"] = {
                 "flops": float(ca.get("flops", 0.0)),
                 "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

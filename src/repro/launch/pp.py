@@ -21,17 +21,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import HAS_NATIVE_SHARD_MAP, shard_map
+from repro.kernels.quantize.ref import rowwise_quantize as _quantize_rows
 from repro.models.config import ModelConfig
 from repro.models.layers import rms_norm
 from repro.models.model import apply_dense_block, lm_logits
-
-
-def _quantize_rows(x):
-    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
-                 -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32)
 
 
 def _dequantize_rows(q, scale, dtype):
@@ -49,6 +43,12 @@ def make_pp_forward(cfg: ModelConfig, mesh, n_micro: int,
     n_stages = mesh.shape["pod"]
     assert cfg.n_layers % n_stages == 0
     l_loc = cfg.n_layers // n_stages
+    # new JAX: Manual over 'pod' only, intra-stage (data, model) sharding
+    # stays with GSPMD.  Old JAX's SPMD pass aborts on ppermute inside a
+    # partially-auto region, so there the whole map goes Manual — the specs
+    # below shard nothing over (data, model), so semantics coincide and only
+    # intra-stage GSPMD parallelism is lost.
+    partial_manual = HAS_NATIVE_SHARD_MAP
 
     def stage_params(params):
         blocks = jax.tree.map(
@@ -57,15 +57,22 @@ def make_pp_forward(cfg: ModelConfig, mesh, n_micro: int,
         rest = {k: v for k, v in params.items() if k != "blocks"}
         return blocks, rest
 
-    def local(blocks_loc, rest, tokens_loc):
+    def local(blocks_loc, rest, stage_ids, tokens_loc):
         # inside shard_map the 'pod' axis is Manual: activation constraints
-        # must not mention it (trace-time toggle; restored by the caller)
+        # must not mention it (trace-time toggle; restored by the caller);
+        # fully-manual fallback disables constraints altogether
         from repro.models.layers import set_mesh_axes
-        set_mesh_axes(mesh.axis_names, drop_for_activations=("pod",),
-                      mesh=mesh)
+        if partial_manual:
+            set_mesh_axes(mesh.axis_names, drop_for_activations=("pod",),
+                          mesh=mesh)
+        else:
+            set_mesh_axes(None)
         # blocks_loc leaves: (1, l_loc, ...) -> (l_loc, ...)
         blocks_loc = jax.tree.map(lambda a: a[0], blocks_loc)
-        stage = jax.lax.axis_index("pod")
+        # stage id rides in as a pod-sharded iota: axis_index would lower to
+        # a PartitionId op, which old JAX's SPMD pass rejects when 'data'/
+        # 'model' stay auto inside this shard_map
+        stage = stage_ids[0]
         bl, s = tokens_loc.shape
         assert bl % n_micro == 0
         mb = bl // n_micro
@@ -129,12 +136,13 @@ def make_pp_forward(cfg: ModelConfig, mesh, n_micro: int,
         rest_specs = jax.tree.map(lambda _: P(), rest)
         # manual only over 'pod': intra-stage (data, model) sharding stays
         # with GSPMD, so the usual FSDP+TP layouts apply within a stage
-        return jax.shard_map(
+        stage_ids = jnp.arange(n_stages, dtype=jnp.int32)
+        return shard_map(
             local, mesh=mesh,
-            in_specs=(block_specs, rest_specs, P(None, None)),
+            in_specs=(block_specs, rest_specs, P("pod"), P(None, None)),
             out_specs=P(None, None),
-            axis_names={"pod"},
+            axis_names={"pod"} if partial_manual else None,
             check_vma=False,
-        )(blocks, rest, tokens)
+        )(blocks, rest, stage_ids, tokens)
 
     return forward

@@ -29,6 +29,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+from repro.kernels.quantize.ref import rowwise_quantize
+
 from .config import ModelConfig
 
 
@@ -63,10 +66,7 @@ import functools
 def _q8_a2a_raw(x, split_axis, concat_axis):
     """int8-payload all_to_all: per-row absmax scales ride along in fp32
     (the paper's lambda compression applied to EP dispatch traffic)."""
-    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
-                 -127, 127).astype(jnp.int8)
+    q, scale = rowwise_quantize(x)
     q2 = jax.lax.all_to_all(q, "model", split_axis=split_axis,
                             concat_axis=concat_axis, tiled=True)
     s2 = jax.lax.all_to_all(scale, "model", split_axis=split_axis,
@@ -136,7 +136,7 @@ def moe_ffn_ep(params, x, cfg: ModelConfig, mesh, batch_axes):
         return y.reshape(b_loc, s_loc, d), aux
 
     ba = batch_axes if len(batch_axes) > 1 else batch_axes[0]
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         local, mesh=mesh,
         in_specs=(P(ba, "model", None), P(None, None),
                   P("model", None, None), P("model", None, None),

@@ -1,0 +1,246 @@
+"""Tests for the repro.compat version-portability layer."""
+
+import os
+import re
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.compat import hypothesis_fallback as mh
+from repro.compat.jax_api import (legacy_shard_map_kwargs,
+                                  native_shard_map_kwargs,
+                                  normalize_cost_analysis)
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# shard_map kwarg translation
+# ---------------------------------------------------------------------------
+
+class TestShardMapKwargs:
+    def test_legacy_auto_is_complement_of_manual(self):
+        kw = legacy_shard_map_kwargs(("pod", "data", "model"), {"pod"}, False)
+        assert kw == {"check_rep": False, "auto": frozenset({"data", "model"})}
+
+    def test_legacy_all_manual_omits_auto(self):
+        kw = legacy_shard_map_kwargs(("data", "model"), None, True)
+        assert kw == {"check_rep": True}
+        kw = legacy_shard_map_kwargs(("pod",), {"pod"}, True)
+        assert kw == {"check_rep": True}
+
+    def test_native_passes_manual_set_through(self):
+        kw = native_shard_map_kwargs({"pod"}, False)
+        assert kw == {"check_vma": False, "axis_names": {"pod"}}
+        assert native_shard_map_kwargs(None, True) == {"check_vma": True}
+
+    def test_live_shard_map_runs_on_installed_jax(self):
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("model",))
+        f = compat.shard_map(
+            lambda x: jax.lax.psum(x, "model"), mesh=mesh,
+            in_specs=(jax.sharding.PartitionSpec(),),
+            out_specs=jax.sharding.PartitionSpec(),
+            check_vma=False)
+        out = jax.jit(f)(jnp.arange(4.0))
+        np.testing.assert_array_equal(np.asarray(out), np.arange(4.0))
+
+    def test_live_shard_map_with_axis_names(self):
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("model",))
+        f = compat.shard_map(
+            lambda x: x * 2, mesh=mesh,
+            in_specs=(jax.sharding.PartitionSpec(),),
+            out_specs=jax.sharding.PartitionSpec(),
+            axis_names={"model"}, check_vma=False)
+        out = jax.jit(f)(jnp.ones((4,)))
+        np.testing.assert_array_equal(np.asarray(out), 2 * np.ones(4))
+
+    @pytest.mark.skipif(compat.HAS_NATIVE_SHARD_MAP,
+                        reason="legacy-only eager restriction")
+    def test_legacy_partial_axis_names_eager_error_is_descriptive(self):
+        mesh = jax.sharding.Mesh(
+            np.array(jax.devices()[:1]).reshape(1, 1), ("a", "b"))
+        f = compat.shard_map(
+            lambda x: x, mesh=mesh,
+            in_specs=(jax.sharding.PartitionSpec(),),
+            out_specs=jax.sharding.PartitionSpec(),
+            axis_names={"a"}, check_vma=False)
+        with pytest.raises(NotImplementedError, match="jax.jit"):
+            f(jnp.ones((4,)))           # eager: legacy impl rejects auto
+        out = jax.jit(f)(jnp.ones((4,)))     # jitted: works
+        np.testing.assert_array_equal(np.asarray(out), np.ones(4))
+
+
+# ---------------------------------------------------------------------------
+# cost_analysis normalization
+# ---------------------------------------------------------------------------
+
+class _CompiledStub:
+    def __init__(self, payload):
+        self._payload = payload
+
+    def cost_analysis(self):
+        return self._payload
+
+
+class TestCostAnalysis:
+    def test_old_jax_list_of_dicts(self):
+        got = compat.cost_analysis(_CompiledStub([{"flops": 2.0, "bytes": 7}]))
+        assert got == {"flops": 2.0, "bytes": 7}
+
+    def test_new_jax_flat_dict(self):
+        got = compat.cost_analysis(_CompiledStub({"flops": 2.0}))
+        assert got == {"flops": 2.0}
+
+    def test_degenerate_shapes(self):
+        assert normalize_cost_analysis(None) == {}
+        assert normalize_cost_analysis([]) == {}
+        assert normalize_cost_analysis(()) == {}
+
+    def test_pallas_compiler_params_resolves(self):
+        cp = compat.pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"))
+        assert tuple(cp.dimension_semantics) == ("parallel", "arbitrary")
+
+    def test_live_compiled_has_flops(self):
+        comp = jax.jit(lambda a, b: a @ b).lower(
+            jax.ShapeDtypeStruct((16, 16), jnp.float32),
+            jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+        ca = compat.cost_analysis(comp)
+        assert isinstance(ca, dict)
+        assert ca.get("flops", 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fallback: deterministic corpus replay
+# ---------------------------------------------------------------------------
+
+class TestHypothesisFallback:
+    def test_replays_identical_corpus(self):
+        seen = []
+
+        @mh.given(mh.integers(0, 10 ** 9))
+        def probe(n):
+            seen.append(n)
+
+        probe()
+        first = list(seen)
+        assert len(first) == mh.DEFAULT_MAX_EXAMPLES
+        seen.clear()
+        probe()
+        assert seen == first
+
+    def test_settings_max_examples(self):
+        seen = []
+
+        @mh.settings(max_examples=7, deadline=None)
+        @mh.given(mh.integers(1, 5))
+        def probe(n):
+            seen.append(n)
+
+        probe()
+        assert len(seen) == 7
+        assert all(1 <= n <= 5 for n in seen)
+
+    def test_lists_respect_sizes(self):
+        @mh.settings(max_examples=25)
+        @mh.given(mh.lists(mh.integers(1, 9), min_size=3, max_size=5))
+        def probe(xs):
+            assert 3 <= len(xs) <= 5
+            assert all(1 <= x <= 9 for x in xs)
+
+        probe()
+
+    def test_data_draw_is_deterministic(self):
+        rounds = []
+
+        @mh.settings(max_examples=10)
+        @mh.given(mh.data())
+        def probe(data):
+            n = data.draw(mh.integers(2, 9))
+            xs = data.draw(mh.lists(mh.integers(0, 50),
+                                    min_size=n, max_size=n))
+            rounds.append((n, tuple(xs)))
+
+        probe()
+        first = list(rounds)
+        rounds.clear()
+        probe()
+        assert rounds == first
+
+    def test_failure_reports_falsifying_example(self):
+        @mh.settings(max_examples=30)
+        @mh.given(mh.integers(0, 100))
+        def probe(n):
+            assert n < 101  # never fails
+
+        probe()
+
+        @mh.settings(max_examples=30)
+        @mh.given(mh.integers(0, 100))
+        def bad(n):
+            assert n % 2 == 0
+
+        with pytest.raises(AssertionError, match="falsifying example"):
+            bad()
+
+    def test_pytest_signature_is_stripped(self):
+        # pytest must not see the strategy-bound params as fixtures
+        import inspect
+
+        @mh.given(mh.integers(0, 1))
+        def probe(self, n):
+            pass
+
+        assert list(inspect.signature(probe).parameters) == ["self"]
+
+    def test_facade_importable(self):
+        from repro.compat.testing import given, settings, strategies as st
+        assert callable(given) and callable(settings)
+        assert hasattr(st, "integers") and hasattr(st, "lists")
+        assert hasattr(st, "data")
+
+
+# ---------------------------------------------------------------------------
+# enforcement: no raw version-sensitive JAX APIs outside repro.compat
+# ---------------------------------------------------------------------------
+
+RAW_SHARD_MAP = re.compile(r"jax\.shard_map|jax\.experimental\.shard_map")
+RAW_COST = re.compile(r"\.cost_analysis\(\)")
+RAW_PLTPU_PARAMS = re.compile(r"pltpu\.(?:TPU)?CompilerParams")
+# import forms that would bypass the dotted-attribute patterns above
+RAW_IMPORT = re.compile(
+    r"from\s+jax[\w.]*\s+import\s+[^\n]*\b(shard_map|CompilerParams)\b")
+
+
+def _py_files():
+    for base in ("src", "benchmarks", "examples", "tests"):
+        yield from sorted((ROOT / base).rglob("*.py"))
+
+
+def test_no_raw_version_sensitive_api_outside_compat():
+    me = Path(__file__).resolve()
+    offenders = []
+    for path in _py_files():
+        if path.resolve() == me:
+            continue
+        rel = path.relative_to(ROOT)
+        if rel.parts[:3] == ("src", "repro", "compat"):
+            continue
+        text = path.read_text()
+        for lineno, line in enumerate(text.splitlines(), 1):
+            code = line.split("#", 1)[0]
+            if RAW_SHARD_MAP.search(code):
+                offenders.append(f"{rel}:{lineno}: raw shard_map")
+            if RAW_COST.search(code) and "def cost_analysis" not in code:
+                offenders.append(f"{rel}:{lineno}: raw cost_analysis()")
+            if RAW_PLTPU_PARAMS.search(code):
+                offenders.append(f"{rel}:{lineno}: raw pltpu CompilerParams")
+            if RAW_IMPORT.search(code):
+                offenders.append(f"{rel}:{lineno}: raw version-sensitive "
+                                 "import from jax")
+    assert not offenders, \
+        "use repro.compat instead of raw JAX APIs:\n" + "\n".join(offenders)

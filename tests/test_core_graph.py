@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.compat.testing import given, settings, strategies as st
 
 from repro.core import Layer, LayerGraph, linear_chain
 

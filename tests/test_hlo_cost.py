@@ -1,14 +1,12 @@
 """HLO cost-walker validation against XLA's own cost analysis."""
 
-import os
-import sys
-
 import jax
 import jax.numpy as jnp
 import pytest
 
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-from benchmarks.hlo_cost import analyze_hlo, parse_hlo  # noqa: E402
+# repo root and src/ are on sys.path via pyproject [tool.pytest.ini_options]
+from benchmarks.hlo_cost import analyze_hlo, parse_hlo
+from repro.compat import cost_analysis
 
 
 def test_loop_free_dot_matches_xla():
@@ -18,7 +16,7 @@ def test_loop_free_dot_matches_xla():
         jax.ShapeDtypeStruct((256, 512), jnp.float32),
         jax.ShapeDtypeStruct((512, 128), jnp.float32)).compile()
     c = analyze_hlo(comp.as_text())
-    assert c.flops == comp.cost_analysis().get("flops")
+    assert c.flops == cost_analysis(comp).get("flops")
 
 
 def test_scan_multiplies_trip_count():
@@ -32,7 +30,7 @@ def test_scan_multiplies_trip_count():
     c = analyze_hlo(comp.as_text())
     assert c.flops == pytest.approx(2 * 128 * 128 * 128 * 10, rel=0.01)
     # xla's own analysis counts the body once — the walker must exceed it
-    assert c.flops > comp.cost_analysis().get("flops") * 5
+    assert c.flops > cost_analysis(comp).get("flops") * 5
 
 
 def test_parse_structure():

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.compat.testing import given, settings, strategies as st
 
 from repro.kernels.attention.ops import flash_attention
 from repro.kernels.attention.ref import attention_ref

@@ -4,7 +4,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.compat.testing import given, settings, strategies as st
 
 from repro.core import (Layer, LayerGraph, NotPartitionable,
                         PartitionInfeasible, build_partition_graph,
