@@ -1,0 +1,307 @@
+"""Tracked planner-latency benchmark (BENCH_planner.json).
+
+Times the two planner hot paths at production scale:
+
+  * ``optimal_partitions`` (Algorithm 1) on the paper's biggest CNN DAGs and
+    the large-LLM block graphs (llama3-405b: 129 candidate points,
+    deepseek-v3-671b), cold-cache per rep, against the naive
+    O(K^2 * L) reference (the pre-index implementation, kept inline here);
+  * end-to-end ``partition_and_place`` across the paper grid (5-50 nodes)
+    against the unpruned threshold search + naive DP.
+
+Usage:
+  python -m benchmarks.planner_scale --update [--reps N]  # re-measure + write
+  python -m benchmarks.planner_scale --check  [--reps N]  # CI: fail on >2x
+  python -m benchmarks.planner_scale                      # print, no write
+
+``--check`` re-times the optimized paths only and fails when any entry's
+median exceeds CHECK_RATIO x the committed median (ratio-of-medians, so
+machine noise on one rep doesn't trip it).  ``--update`` is the only mode
+that runs the (slow) naive baselines; run it when the planner changes and
+commit the refreshed BENCH_planner.json alongside.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+from contextlib import contextmanager
+
+from repro.configs import get_config
+from repro.configs.paper_cnns import PAPER_MODELS
+from repro.core import partition_and_place, random_geometric_cluster
+from repro.core.equivalence import stage_budget_bytes
+from repro.core.partitioner import (NotPartitionable, PartitionInfeasible,
+                                    optimal_partitions)
+from repro.core.pipeline import lm_block_graph
+from repro.models.config import SHAPES
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_planner.json")
+CHECK_RATIO = 2.0           # --check fails on >2x regression vs committed
+DEFAULT_REPS = 5
+
+# Algorithm-1 cases: (name, graph factory, capacity bytes, lambda)
+def _cnn(name):
+    return PAPER_MODELS[name]()
+
+
+def _llm(arch, shape="prefill_32k"):
+    cfg = get_config(arch, "full")
+    return lm_block_graph(cfg, SHAPES[shape])
+
+
+def _llm_cap(arch, shape="prefill_32k", frac=0.25, floor=1.35):
+    cfg = get_config(arch, "full")
+    return stage_budget_bytes(cfg, SHAPES[shape], frac, floor)
+
+
+def partition_cases():
+    from repro.core.bottleneck import DEFAULT_COMPRESSION
+    return [
+        ("ResNet50", lambda: _cnn("ResNet50"), 30e6, DEFAULT_COMPRESSION),
+        ("InceptionResNetV2", lambda: _cnn("InceptionResNetV2"), 30e6,
+         DEFAULT_COMPRESSION),
+        ("BERT-Large", lambda: _cnn("BERT-Large"), 200e6, DEFAULT_COMPRESSION),
+        ("llama3-405b", lambda: _llm("llama3-405b"),
+         _llm_cap("llama3-405b", floor=1.6), 2.0),
+        ("deepseek-v3-671b", lambda: _llm("deepseek-v3-671b"),
+         _llm_cap("deepseek-v3-671b"), 2.0),
+    ]
+
+
+# End-to-end cases: (name, model, cap bytes, nodes) on the paper grid
+def e2e_cases():
+    cases = [(f"InceptionResNetV2/n{n}", "InceptionResNetV2", 30e6, n)
+             for n in (10, 15, 20, 50)]     # 9 runs need 10 nodes minimum
+    cases.append(("ResNet50/n50", "ResNet50", 30e6, 50))
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# naive baselines (pre-optimization behavior, timed by --update only)
+# ---------------------------------------------------------------------------
+
+def _optimal_partitions_naive(graph, capacity_bytes, lam, points=None):
+    """The pre-index Algorithm 1: every DP cell rescans its layers.  Returns
+    a full PartitionPlan (like the optimized function) so the end-to-end
+    naive baseline pays exactly the pre-PR cost — nothing optimized."""
+    from repro.core.partitioner import PartitionPlan
+    if points is None:
+        points = graph.candidate_partition_points()
+    if len(points) < 2:
+        raise NotPartitionable("no interior candidate points")
+    segs = graph.segment_layers(points)
+    tsizes = [(graph.layers[p].out_bytes + graph.boundary_side_bytes(segs, c))
+              / lam for c, p in enumerate(points)]
+    k = len(points)
+    inf = float("inf")
+    best = [inf] * (k + 1)
+    choice = [-1] * k
+    best[k] = 0.0
+    for i in range(k - 1, -1, -1):
+        for j in range(i, k):
+            if graph.run_memory_bytes(points, segs, i, j) >= capacity_bytes:
+                break
+            cand = (0.0 if j == k - 1 else tsizes[j]) + best[j + 1]
+            if cand < best[i]:
+                best[i], choice[i] = cand, j
+    if best[0] == inf:
+        raise PartitionInfeasible("no feasible segmentation")
+    runs, i = [], 0
+    while i < k:
+        runs.append((i, choice[i]))
+        i = choice[i] + 1
+    boundary = [graph.layers[points[0]].out_bytes / lam]
+    for (i, j) in runs[:-1]:
+        boundary.append(tsizes[j])
+    part_layers = [sum((segs[s] for s in range(i, j + 1)), [])
+                   for (i, j) in runs]
+    mems = [graph.run_memory_bytes(points, segs, i, j) for (i, j) in runs]
+    flops = [sum(graph.layers[nm].flops for nm in names)
+             for names in part_layers]
+    return PartitionPlan(points=points, runs=runs, boundary_sizes=boundary,
+                         partition_layers=part_layers, memory_bytes=mems,
+                         candidate_sizes=tsizes, compute_flops=flops,
+                         total_cost=best[0])
+
+
+@contextmanager
+def naive_planner():
+    """Swap in the unpruned threshold search and the naive DP so
+    partition_and_place exhibits its pre-optimization latency."""
+    from repro.core import api, placement
+
+    saved = (placement.subgraph_k_path, api.optimal_partitions)
+    placement.subgraph_k_path = placement.subgraph_k_path_reference
+    api.optimal_partitions = _optimal_partitions_naive
+    try:
+        yield
+    finally:
+        placement.subgraph_k_path, api.optimal_partitions = saved
+
+
+# ---------------------------------------------------------------------------
+# timing
+# ---------------------------------------------------------------------------
+
+def _time_us(fn, reps):
+    """(median, min) microseconds over reps.  The median is the tracked
+    number; the min is what --check compares, because it is far more robust
+    to CPU contention (a deterministic code path's best-of-N is a stable
+    estimator, while any single rep can be 2x+ off on a noisy host)."""
+    out = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        out.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(out), min(out)
+
+
+def measure(reps: int, with_naive: bool) -> dict:
+    """Methodology: per rep the accounting index cache is cleared (its build
+    cost is part of the optimized number) while the graph-structure caches
+    (topo order / depths / candidate points) stay warm for BOTH the
+    optimized and naive paths — that is the production steady state
+    (replanning the same model), it is shared fairly by both sides, and
+    keeping it out of the ratio makes the reported speedups conservative."""
+    entries: dict[str, dict] = {}
+    for name, build, cap, lam in partition_cases():
+        g = build()
+
+        def run_opt():
+            g._acc_cache.clear()            # cold index: count its build cost
+            optimal_partitions(g, cap, lam)
+
+        med, lo = _time_us(run_opt, reps)
+        e = {"median_us": med, "min_us": lo}
+        if with_naive:
+            e["naive_median_us"], _ = _time_us(
+                lambda: _optimal_partitions_naive(g, cap, lam), reps)
+            e["speedup"] = round(e["naive_median_us"] / e["median_us"], 2)
+            # sanity: same plan either way
+            ref = _optimal_partitions_naive(g, cap, lam)
+            plan = optimal_partitions(g, cap, lam)
+            assert plan.runs == ref.runs and plan.total_cost == ref.total_cost
+        entries[f"optimal_partitions/{name}"] = e
+
+    for name, model, cap, n in e2e_cases():
+        g = PAPER_MODELS[model]()
+        cluster = random_geometric_cluster(n, rng=n)
+
+        def run_opt():
+            g._acc_cache.clear()
+            return partition_and_place(g, cluster, cap, n_classes=3, rng=0)
+
+        med, lo = _time_us(run_opt, reps)
+        e = {"median_us": med, "min_us": lo}
+        if with_naive:
+            def run_naive():
+                g._acc_cache.clear()
+                with naive_planner():
+                    return partition_and_place(g, cluster, cap,
+                                               n_classes=3, rng=0)
+            e["naive_median_us"], _ = _time_us(run_naive, reps)
+            e["speedup"] = round(e["naive_median_us"] / e["median_us"], 2)
+            a, b = run_opt(), run_naive()
+            assert (a.partition.runs == b.partition.runs
+                    and a.placement.nodes == b.placement.nodes
+                    and a.bottleneck_s == b.bottleneck_s)
+        entries[f"partition_and_place/{name}"] = e
+    return entries
+
+
+def load_committed() -> dict | None:
+    if not os.path.exists(BENCH_PATH):
+        return None
+    with open(BENCH_PATH) as f:
+        return json.load(f)
+
+
+def check(reps: int) -> int:
+    committed = load_committed()
+    if committed is None:
+        print("planner_scale: no committed BENCH_planner.json; "
+              "run --update first", file=sys.stderr)
+        return 1
+    entries = measure(reps, with_naive=False)
+    worst = 0.0
+    failed = []
+    for name, e in entries.items():
+        base = committed["entries"].get(name, {}).get("median_us")
+        if base is None:
+            print(f"planner_scale: {name}: NEW (no committed baseline)")
+            continue
+        # best-of-reps vs committed median: robust to host contention while
+        # still catching real (asymptotic) regressions
+        ratio = e["min_us"] / base
+        worst = max(worst, ratio)
+        flag = "FAIL" if ratio > CHECK_RATIO else "ok"
+        print(f"planner_scale: {name}: best {e['min_us']:.0f}us "
+              f"vs committed median {base:.0f}us (x{ratio:.2f}) {flag}")
+        if ratio > CHECK_RATIO:
+            failed.append(name)
+    if failed:
+        print(f"planner_scale: REGRESSION >{CHECK_RATIO}x in: "
+              f"{', '.join(failed)}", file=sys.stderr)
+        return 1
+    print(f"planner_scale: ok (worst ratio x{worst:.2f})")
+    return 0
+
+
+def update(reps: int) -> None:
+    entries = measure(reps, with_naive=True)
+    doc = {
+        "meta": {
+            "reps": reps,
+            "tool": "benchmarks/planner_scale.py --update",
+            "note": ("median microseconds per call; naive = pre-index DP + "
+                     "unpruned threshold search; --check compares medians "
+                     f"with a {CHECK_RATIO}x ratio tolerance"),
+        },
+        "entries": entries,
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    for name, e in sorted(entries.items()):
+        print(f"{name}: {e['median_us']:.0f}us "
+              f"(naive {e['naive_median_us']:.0f}us, x{e['speedup']})")
+
+
+def run(reps: int = 3):
+    """benchmarks.run entry point: optimized timings + committed speedups."""
+    committed = load_committed() or {"entries": {}}
+    rows = []
+    for name, e in measure(reps, with_naive=False).items():
+        derived = committed["entries"].get(name, {}).get("speedup", "")
+        rows.append({"name": f"planner_scale/{name}",
+                     "us_per_call": e["median_us"],
+                     "derived": f"committed_speedup={derived}"})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="measure optimized + naive, write BENCH_planner.json")
+    ap.add_argument("--check", action="store_true",
+                    help=f"fail on >{CHECK_RATIO}x regression vs committed")
+    ap.add_argument("--reps", type=int, default=None)
+    args = ap.parse_args()
+    reps = args.reps or (DEFAULT_REPS if (args.update or args.check) else 3)
+    if args.update:
+        update(reps)
+    elif args.check:
+        sys.exit(check(reps))
+    else:
+        for r in run(reps):
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@
   Table 3  fault_tolerance      live fault-injection matrix
   Table 4  emulator_bench       throughput/E2E by cluster shape
   (ours)   roofline             3-term roofline per dry-run cell
+  (ours)   planner_scale        planner latency vs BENCH_planner.json
 """
 
 import argparse
@@ -25,10 +26,11 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (approx_ratio, emulator_bench, fault_tolerance,
-                   latency_grid, partition_points, roofline,
+                   latency_grid, partition_points, planner_scale, roofline,
                    transfer_classes, vs_joint, vs_random)
 
     suites = {
+        "planner_scale": lambda: planner_scale.run(args.reps or 3),
         "partition_points": lambda: partition_points.run(),
         "transfer_classes": lambda: transfer_classes.run(),
         "latency_grid": lambda: latency_grid.run(args.reps or 4),

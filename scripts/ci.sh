@@ -13,4 +13,12 @@ python -m pytest -x -q
 
 echo "--- smoke: examples/quickstart.py"
 PYTHONPATH=src python examples/quickstart.py > /dev/null
+
+echo "--- smoke: planner latency vs BENCH_planner.json"
+# compares this host's best-of-reps against the committed medians with a 2x
+# ratio tolerance.  The baseline is machine-specific: on a host that is
+# uniformly >2x slower than the one that ran --update, regenerate it
+# (benchmarks/planner_scale.py --update) rather than chasing phantom
+# regressions.
+PYTHONPATH=src python -m benchmarks.planner_scale --check --reps 3
 echo "ci: OK"

@@ -1,0 +1,25 @@
+#!/usr/bin/env python
+"""Regenerate the planner-equivalence fixture.
+
+    PYTHONPATH=src python scripts/gen_equivalence_fixture.py
+
+Only run this when a PR *intentionally* changes planner output (and say so in
+the PR description); perf-only PRs must leave the fixture byte-stable — that
+is the equivalence contract tests/test_planner_equivalence.py enforces.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.equivalence import write_fixture  # noqa: E402
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "..",
+                       "tests", "data", "planner_equivalence.json")
+
+if __name__ == "__main__":
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    fix = write_fixture(FIXTURE)
+    errors = sum(1 for v in fix.values() if "error" in v)
+    print(f"wrote {len(fix)} scenarios ({errors} infeasible) -> {FIXTURE}")

@@ -13,14 +13,15 @@ from .bottleneck import (DEFAULT_COMPRESSION, PlanEvaluation,
 from .cluster import (ClusterGraph, blob_cluster, grid_cluster,
                       random_geometric_cluster, ring_cluster,
                       shannon_bandwidth_mbps, tpu_cluster, GBPS, MBPS)
-from .graph import Layer, LayerGraph, linear_chain
-from .kpath import find_k_path
+from .graph import Layer, LayerGraph, RunAccounting, linear_chain
+from .kpath import find_k_path, replay_infeasible
 from .partitioner import (NotPartitionable, PartitionInfeasible,
                           PartitionPlan, build_partition_graph,
                           min_cost_path_reference, optimal_partitions,
                           transfer_sizes)
 from .placement import (PlacementInfeasible, PlacementResult, classify,
-                        kpath_matching, place_with_retry, subgraph_k_path)
+                        kpath_matching, place_with_retry, subgraph_k_path,
+                        subgraph_k_path_reference)
 
 __all__ = [
     "SeiferPlan", "partition_and_place",
@@ -31,11 +32,11 @@ __all__ = [
     "ClusterGraph", "blob_cluster", "grid_cluster",
     "random_geometric_cluster", "ring_cluster", "shannon_bandwidth_mbps",
     "tpu_cluster", "GBPS", "MBPS",
-    "Layer", "LayerGraph", "linear_chain",
-    "find_k_path",
+    "Layer", "LayerGraph", "RunAccounting", "linear_chain",
+    "find_k_path", "replay_infeasible",
     "NotPartitionable", "PartitionInfeasible", "PartitionPlan",
     "build_partition_graph", "min_cost_path_reference", "optimal_partitions",
     "transfer_sizes",
     "PlacementInfeasible", "PlacementResult", "classify", "kpath_matching",
-    "place_with_retry", "subgraph_k_path",
+    "place_with_retry", "subgraph_k_path", "subgraph_k_path_reference",
 ]

@@ -21,11 +21,16 @@ def transfer_latencies(sizes: list[float], nodes: list[int],
     """
     if len(nodes) != len(sizes) + 1:
         raise ValueError(f"need len(sizes)+1 nodes, got {len(nodes)} for {len(sizes)}")
-    out = np.empty(len(sizes))
-    for k, t in enumerate(sizes):
-        b = cluster.bw[nodes[k], nodes[k + 1]]
-        out[k] = t / b if b > 0 else np.inf
-    return out
+    if not len(sizes):
+        return np.empty(0)
+    # called per placement evaluation and per fault-tolerance replan, so one
+    # fancy-indexed gather instead of a python loop; zero-bandwidth edges
+    # (partitioned clusters, failed links) stay +inf
+    t = np.asarray(sizes, dtype=float)
+    nd = np.asarray(nodes)
+    bw = cluster.bw[nd[:-1], nd[1:]]
+    ok = bw > 0
+    return np.where(ok, t / np.where(ok, bw, 1.0), np.inf)
 
 
 def bottleneck_latency(sizes, nodes, cluster: ClusterGraph,

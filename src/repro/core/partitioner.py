@@ -67,12 +67,10 @@ def transfer_sizes(graph: LayerGraph, points: list[str],
                    segs: list[list[str]],
                    lam: float = DEFAULT_COMPRESSION) -> list[float]:
     """t_k for every candidate point (Eq. 4), including side-input bytes that
-    a cut after p_k would have to carry (enc-dec / VLM, DESIGN.md §4)."""
-    out = []
-    for k, p in enumerate(points):
-        eta = graph.layers[p].out_bytes + graph.boundary_side_bytes(segs, k)
-        out.append(eta / lam)
-    return out
+    a cut after p_k would have to carry (enc-dec / VLM, DESIGN.md §4).
+    ``segs`` must be ``graph.segment_layers(points)`` (all callers'); the
+    side-input charge comes from the O(1) suffix-max index."""
+    return graph.accounting(points, segs).transfer_sizes(lam)
 
 
 def build_partition_graph(graph: LayerGraph, points: list[str],
@@ -80,25 +78,26 @@ def build_partition_graph(graph: LayerGraph, points: list[str],
     """Explicit G_p (Eqs. 6-7): vertices = contiguous runs fitting capacity;
     edge (u, v) iff u ends right before v starts.  Returns (vertices, edges)
     with vertices as (i, j) tuples and edges as {(u, v): cut_index}."""
+    acc = graph.accounting(points, segs)
     k = len(points)
     vertices = []
     mem = {}
+    mm = acc.memory_matrix()
+    stops = acc.fit_stops(capacity_bytes).tolist()
     for i in range(k):
-        for j in range(i, k):
-            m = graph.run_memory_bytes(points, segs, i, j)
-            if m < capacity_bytes:
-                vertices.append((i, j))
-                mem[(i, j)] = m
-            else:
-                # memory is non-decreasing in j for fixed i (params only
-                # accumulate; shared groups are counted once per run), so no
-                # larger run starting at i can fit either.
-                break
+        # memory is non-decreasing in j for fixed i (params only accumulate;
+        # shared groups are counted once per run), so runs starting at i fit
+        # exactly up to the first unfit j.
+        for j in range(i, stops[i]):
+            vertices.append((i, j))
+            mem[(i, j)] = float(mm[i, j])
     edges = {}
+    starts: dict[int, list[tuple[int, int]]] = {}
+    for v in vertices:
+        starts.setdefault(v[0], []).append(v)
     for (i, j) in vertices:
-        for (i2, j2) in vertices:
-            if i2 == j + 1:
-                edges[((i, j), (i2, j2))] = j   # cut after points[j]
+        for v2 in starts.get(j + 1, ()):
+            edges[((i, j), v2)] = j             # cut after points[j]
     return vertices, edges, mem
 
 
@@ -118,25 +117,32 @@ def optimal_partitions(graph: LayerGraph, capacity_bytes: float,
         raise NotPartitionable(
             f"model has {len(points)} candidate partition point(s); "
             "NASNet-style cross-links admit no single-cut vertices")
-    segs = graph.segment_layers(points)
-    tsizes = transfer_sizes(graph, points, segs, lam)
+    acc = graph.accounting(points)
+    segs = acc.segs
+    tsizes = acc.transfer_sizes(lam)
     k = len(points)
 
     INF = float("inf")
-    best = [INF] * (k + 1)
+    # All capacity breaks come from one O(K^2) vectorized memory matrix
+    # (RunAccounting.fit_stops); the suffix DP itself is then a tight scalar
+    # scan over the feasible windows only — sum(window sizes) float adds,
+    # with the same ascending-j strict-< tie-break as ever.
+    stops = acc.fit_stops(capacity_bytes).tolist()
+    cut = list(tsizes)
+    cut[k - 1] = 0.0                    # the final run has no outgoing cut
+    best: list[float] = [INF] * (k + 1)
     choice = [-1] * k
     best[k] = 0.0
-    # memory of run (i, j) is monotone in j for fixed i => early break
     for i in range(k - 1, -1, -1):
-        for j in range(i, k):
-            m = graph.run_memory_bytes(points, segs, i, j)
-            if m >= capacity_bytes:
-                break           # memory is non-decreasing in j for fixed i
-            cut_cost = 0.0 if j == k - 1 else tsizes[j]
-            cand = cut_cost + best[j + 1]
-            if cand < best[i]:
-                best[i] = cand
-                choice[i] = j
+        b = INF
+        ch = -1
+        for j in range(i, stops[i]):
+            cand = cut[j] + best[j + 1]
+            if cand < b:
+                b = cand
+                ch = j
+        best[i] = b
+        choice[i] = ch
     if best[0] == INF:
         raise PartitionInfeasible(
             f"no segmentation of {k} candidate points fits capacity "
@@ -154,12 +160,12 @@ def optimal_partitions(graph: LayerGraph, capacity_bytes: float,
     for (i, j) in runs[:-1]:
         boundary.append(tsizes[j])
     part_layers = [sum((segs[s] for s in range(i, j + 1)), []) for (i, j) in runs]
-    mems = [graph.run_memory_bytes(points, segs, i, j) for (i, j) in runs]
+    mems = [acc.run_memory_bytes(i, j) for (i, j) in runs]
     flops = [sum(graph.layers[n].flops for n in names) for names in part_layers]
     return PartitionPlan(
         points=points, runs=runs, boundary_sizes=boundary,
         partition_layers=part_layers, memory_bytes=mems,
-        candidate_sizes=tsizes, compute_flops=flops, total_cost=best[0])
+        candidate_sizes=tsizes, compute_flops=flops, total_cost=float(best[0]))
 
 
 def min_cost_path_reference(graph: LayerGraph, capacity_bytes: float,

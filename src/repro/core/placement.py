@@ -15,7 +15,7 @@ import numpy as np
 
 from .bottleneck import PlanEvaluation, evaluate
 from .cluster import ClusterGraph
-from .kpath import find_k_path
+from .kpath import find_k_path, replay_infeasible
 
 
 class PlacementInfeasible(Exception):
@@ -57,32 +57,166 @@ def _threshold_levels(cluster: ClusterGraph, max_levels: int = 1500) -> np.ndarr
     return w
 
 
+def _uf_prune_level(cluster: ClusterGraph, levels: np.ndarray, k: int,
+                    start: int | None, end: int | None,
+                    avail: np.ndarray | None) -> int:
+    """Union-find feasibility curve over the sorted edge list: the index of
+    the *highest* threshold level at which a k-path is not ruled out by cheap
+    necessary conditions, or -1 if every level is ruled out.
+
+    Conditions checked on the avail-induced subgraph {e : w(e) >= level}
+    (each monotone as the threshold drops, so the curve is a single cutoff):
+      * some component holds >= k available vertices — containing start/end
+        (in the same component) when those are pinned;
+      * >= k available vertices of degree >= 1 and >= k-2 of degree >= 2
+        (a simple k-path needs k endpoints-or-interiors, k-2 interiors).
+
+    The conditions are *necessary*, never sufficient: a level above the
+    returned index provably has no k-path, so the caller may skip the
+    color-coding search there (replaying its rng draws); levels at or below
+    it still need the real search.
+    """
+    n = cluster.n
+    avail = np.ones(n, dtype=bool) if avail is None else avail.astype(bool).copy()
+    if start is not None:
+        avail[start] = True
+    if end is not None:
+        avail[end] = True
+    iu, ju = np.triu_indices(n, k=1)
+    keep = avail[iu] & avail[ju]
+    w = cluster.bw[iu, ju]
+    keep &= w > 0
+    iu, ju, w = iu[keep], ju[keep], w[keep]
+    order = np.argsort(-w, kind="stable")
+    iu, ju, w = iu[order], ju[order], w[order]
+
+    parent = list(range(n))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    size = avail.astype(int).tolist()       # available vertices per component
+    deg = [0] * n
+    n_deg1 = n_deg2 = 0
+    maxcomp = 1 if avail.any() else 0
+    need_deg2 = max(0, k - 2)
+    edge_pos = 0
+    for idx in range(len(levels) - 1, -1, -1):
+        thr = levels[idx]
+        while edge_pos < len(w) and w[edge_pos] >= thr:
+            a, b = int(iu[edge_pos]), int(ju[edge_pos])
+            edge_pos += 1
+            for v in (a, b):
+                deg[v] += 1
+                if deg[v] == 1:
+                    n_deg1 += 1
+                elif deg[v] == 2:
+                    n_deg2 += 1
+            ra, rb = find(a), find(b)
+            if ra != rb:
+                if size[ra] < size[rb]:
+                    ra, rb = rb, ra
+                parent[rb] = ra
+                size[ra] += size[rb]
+                maxcomp = max(maxcomp, size[ra])
+        if n_deg1 < k or n_deg2 < need_deg2:
+            continue
+        if start is not None and end is not None:
+            rs = find(start)
+            ok = rs == find(end) and size[rs] >= k
+        elif start is not None:
+            ok = size[find(start)] >= k
+        elif end is not None:
+            ok = size[find(end)] >= k
+        else:
+            ok = maxcomp >= k
+        if ok:
+            return idx
+    return -1
+
+
 def subgraph_k_path(cluster: ClusterGraph, k: int,
                     start: int | None, end: int | None,
                     avail: np.ndarray, rng: np.random.Generator,
-                    levels: np.ndarray | None = None):
+                    levels: np.ndarray | None = None,
+                    adj_cache: dict | None = None,
+                    prune: bool = True):
     """Algorithm 2 (SUBGRAPH-K-PATH): maximize the threshold t such that the
     induced subgraph {e : w(e) >= t} contains a k-path with the required
-    endpoints; returns (path, threshold) or None."""
+    endpoints; returns (path, threshold) or None.
+
+    Incremental engineering on top of the paper's binary search (the probe
+    sequence and rng stream are untouched, so results are bit-identical to
+    ``prune=False``):
+      * a union-find feasibility curve caps the level range that can hold a
+        k-path; probes above the cap skip the color-coding DP and just
+        replay its rng draws (on min-endpoint geometric clusters the
+        thresholded graph is a clique on the fast nodes, making the bound
+        exact — every failing probe is skipped);
+      * thresholded adjacency matrices are memoized in ``adj_cache``, which
+        kpath_matching shares across all subarray searches of one call;
+      * cluster bandwidths steer the k > KMAX_COLOR greedy fallback
+        (maximin extension) via find_k_path's ``weights``.
+    """
     if levels is None:
         levels = _threshold_levels(cluster)
+    cache: dict = {} if adj_cache is None else adj_cache
+
+    def adj_at(idx: int) -> np.ndarray:
+        a = cache.get(idx)
+        if a is None:
+            a = cache[idx] = cluster.bw >= levels[idx]
+        return a
+
+    if prune and k > 2:
+        prune_max = _uf_prune_level(cluster, levels, k, start, end, avail)
+    else:
+        prune_max = len(levels) - 1     # k <= 2 probes are rng-free and cheap
+
+    def probe(idx: int) -> list[int] | None:
+        if idx > prune_max:
+            replay_infeasible(cluster.n, k, start, end, avail, rng)
+            return None
+        return find_k_path(adj_at(idx), k, start, end, avail, rng,
+                           weights=cluster.bw)
+
     # quick infeasibility check at the weakest threshold
-    adj_all = cluster.bw >= levels[0]
-    base = find_k_path(adj_all, k, start, end, avail, rng)
+    base = probe(0)
     if base is None:
         return None
     best = (base, float(levels[0]))
     lo, hi = 1, len(levels) - 1
     while lo <= hi:
         mid = (lo + hi) // 2
-        adj = cluster.bw >= levels[mid]
-        path = find_k_path(adj, k, start, end, avail, rng)
+        path = probe(mid)
         if path is not None:
             best = (path, float(levels[mid]))
             lo = mid + 1
         else:
             hi = mid - 1
     return best
+
+
+def subgraph_k_path_reference(cluster: ClusterGraph, k: int,
+                              start: int | None, end: int | None,
+                              avail: np.ndarray, rng: np.random.Generator,
+                              levels: np.ndarray | None = None,
+                              adj_cache: dict | None = None):
+    """The unpruned binary search (pre-optimization behavior): every probe
+    runs the full color-coding budget and rebuilds its thresholded adjacency
+    (``adj_cache`` is accepted for signature compatibility but deliberately
+    unused).  Kept as the equivalence oracle for
+    tests/test_threshold_search.py and the planner benchmark's baseline."""
+    return _subgraph_k_path_impl(cluster, k, start, end, avail, rng, levels,
+                                 adj_cache=None, prune=False)
+
+
+# early binding so the reference stays correct even when benchmarks swap the
+# module-level ``subgraph_k_path`` for the reference itself
+_subgraph_k_path_impl = subgraph_k_path
 
 
 def _class_subarrays(classes: np.ndarray, x: int) -> list[tuple[int, int]]:
@@ -124,6 +258,7 @@ def kpath_matching(sizes, cluster: ClusterGraph, n_classes: int,
     N: list[int | None] = [None] * (m + 1)
     assigned = np.zeros(n, dtype=bool)
     levels = _threshold_levels(cluster)
+    adj_cache: dict = {}        # thresholded adjacency, shared across searches
     thresholds: list[float] = []
 
     for x in sorted(set(classes.tolist()), reverse=True):
@@ -138,7 +273,8 @@ def kpath_matching(sizes, cluster: ClusterGraph, n_classes: int,
                 avail[start] = True
             if endv is not None:
                 avail[endv] = True
-            res = subgraph_k_path(cluster, k, start, endv, avail, rng, levels)
+            res = subgraph_k_path(cluster, k, start, endv, avail, rng, levels,
+                                  adj_cache)
             if res is None:
                 raise PlacementInfeasible(
                     f"no {k}-path for class-{x} subarray S[{a}:{b}] "

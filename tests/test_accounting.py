@@ -1,0 +1,173 @@
+"""Property tests for the O(1) accounting index (RunAccounting).
+
+Random DAGs with shared groups and side inputs; every index query must match
+the naive per-layer reference exactly (byte quantities are integer-valued, so
+prefix-sum reassociation introduces no float error)."""
+
+import numpy as np
+import pytest
+from repro.compat.testing import given, settings, strategies as st
+
+from repro.core import (Layer, LayerGraph, RunAccounting, linear_chain,
+                        min_cost_path_reference, optimal_partitions,
+                        transfer_sizes, PartitionInfeasible)
+
+
+def random_dag(rng, n, n_groups=2, p_shared=0.3, p_side=0.2):
+    """Single-source DAG with random skip edges, shared groups, side inputs."""
+    g = LayerGraph()
+    g.add(Layer("v0", out_bytes=float(rng.integers(1, 50))))
+    for i in range(1, n):
+        n_in = int(rng.integers(1, min(i, 3) + 1))
+        ins = rng.choice(i, size=n_in, replace=False)
+        shared = (f"grp{int(rng.integers(n_groups))}"
+                  if rng.random() < p_shared else None)
+        side = float(rng.integers(1, 40)) if rng.random() < p_side else 0.0
+        g.add(Layer(f"v{i}",
+                    out_bytes=float(rng.integers(1, 50)),
+                    param_bytes=float(rng.integers(0, 100)),
+                    work_bytes=float(rng.integers(0, 60)),
+                    side_in_bytes=side,
+                    shared_group=shared),
+              [f"v{int(j)}" for j in ins])
+    sinks = [v for v in g.layers if not g.succ[v]]
+    if len(sinks) > 1:
+        g.add(Layer("vsink", out_bytes=1.0), sinks)
+    return g
+
+
+class TestRunAccounting:
+    @settings(max_examples=40, deadline=None)
+    @given(st.data())
+    def test_matches_naive_reference(self, data):
+        n = data.draw(st.integers(4, 18))
+        rng = np.random.default_rng(data.draw(st.integers(0, 10 ** 6)))
+        g = random_dag(rng, n)
+        pts = g.candidate_partition_points()
+        segs = g.segment_layers(pts)
+        acc = g.accounting(pts)
+        k = len(pts)
+        mm = acc.memory_matrix()
+        for i in range(k):
+            for j in range(i, k):
+                want = g.run_memory_bytes(pts, segs, i, j)
+                assert acc.run_memory_bytes(i, j) == want, (i, j)
+                assert mm[i, j] == want, (i, j)     # the DP reads this view
+        for j in range(k):
+            assert acc.boundary_side_bytes(j) == g.boundary_side_bytes(segs, j)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.data())
+    def test_memory_matrix_rows_monotone(self, data):
+        """fit_stops' first-breach argmax is only a valid early-break if
+        every row of the memory matrix is non-decreasing over j >= i."""
+        n = data.draw(st.integers(4, 16))
+        rng = np.random.default_rng(data.draw(st.integers(0, 10 ** 6)))
+        g = random_dag(rng, n)
+        pts = g.candidate_partition_points()
+        acc = g.accounting(pts)
+        mm = acc.memory_matrix()
+        assert mm.shape == (acc.K, acc.K)
+        for i in range(acc.K):
+            assert (np.diff(mm[i, i:]) >= 0).all()
+            cap = float(mm[i, i:].mean()) if acc.K - i > 1 else 1.0
+            stop = int(acc.fit_stops(cap)[i])
+            assert all(mm[i, j] < cap for j in range(i, stop))
+            assert stop == acc.K or mm[i, stop] >= cap
+
+    def test_shared_group_counted_once_per_run(self):
+        g = LayerGraph()
+        g.add(Layer("a", param_bytes=10))
+        g.add(Layer("b", param_bytes=7, shared_group="sh"), ["a"])
+        g.add(Layer("c", param_bytes=10), ["b"])
+        g.add(Layer("d", param_bytes=7, shared_group="sh"), ["c"])
+        pts = g.candidate_partition_points()
+        acc = g.accounting(pts)
+        assert acc.run_memory_bytes(0, acc.K - 1) == 10 + 7 + 10
+        # a run covering only the second call site still pays the weights
+        assert acc.run_memory_bytes(acc.K - 1, acc.K - 1) == 7
+
+    def test_custom_segs_never_poison_the_cache(self):
+        """A non-canonical segs argument (public build_partition_graph /
+        transfer_sizes signatures allow one) gets a one-off index and must
+        not corrupt later canonical queries — in either call order."""
+        g = linear_chain(4, out_bytes=1.0, param_bytes=10.0)
+        pts = g.candidate_partition_points()
+        segs = g.segment_layers(pts)
+        weird = [segs[0] + segs[1], [], segs[2], segs[3]]   # l1 moved to seg 0
+        acc_weird = g.accounting(pts, weird)                # first call: custom
+        acc_canon = g.accounting(pts)                       # then canonical
+        assert acc_canon.segs == segs
+        assert acc_canon.run_memory_bytes(1, 1) == \
+            g.run_memory_bytes(pts, segs, 1, 1)
+        assert acc_weird.run_memory_bytes(0, 0) == \
+            g.run_memory_bytes(pts, weird, 0, 0) == 21.0
+        # reverse order: canonical cached first, custom still not served stale
+        g2 = linear_chain(4, out_bytes=1.0, param_bytes=10.0)
+        pts2 = g2.candidate_partition_points()
+        acc2 = g2.accounting(pts2)
+        acc2_weird = g2.accounting(pts2, weird)
+        assert acc2_weird is not acc2
+        assert g2.accounting(pts2) is acc2                  # cache intact
+
+    def test_cache_invalidated_on_add(self):
+        g = linear_chain(4)
+        pts = g.candidate_partition_points()
+        acc1 = g.accounting(pts)
+        assert g.accounting(pts) is acc1            # cached
+        g.add(Layer("extra", param_bytes=5.0), ["l3"])
+        pts2 = g.candidate_partition_points()
+        acc2 = g.accounting(pts2)
+        assert acc2 is not acc1
+        segs2 = g.segment_layers(pts2)
+        assert acc2.run_memory_bytes(0, acc2.K - 1) == \
+            g.run_memory_bytes(pts2, segs2, 0, acc2.K - 1)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.data())
+    def test_segment_layers_unchanged_by_vectorization(self, data):
+        """searchsorted segmentation == the first-fit scan, in layer order."""
+        n = data.draw(st.integers(4, 16))
+        rng = np.random.default_rng(data.draw(st.integers(0, 10 ** 6)))
+        g = random_dag(rng, n)
+        pts = g.candidate_partition_points()
+        lp = g.longest_path_depths()
+        bounds = [lp[p] for p in pts]
+        expect = [[] for _ in pts]
+        for v in g.layers:
+            idx = next((kk for kk, b in enumerate(bounds) if lp[v] <= b),
+                       len(pts) - 1)
+            expect[idx].append(v)
+        assert g.segment_layers(pts) == expect
+
+
+class TestOptimalPartitionsStillOptimal:
+    @settings(max_examples=30, deadline=None)
+    @given(st.data())
+    def test_dp_matches_paper_recursion_on_random_dags(self, data):
+        n = data.draw(st.integers(4, 14))
+        rng = np.random.default_rng(data.draw(st.integers(0, 10 ** 6)))
+        g = random_dag(rng, n)
+        if len(g.candidate_partition_points()) < 2:
+            return
+        cap = float(data.draw(st.integers(60, 400)))
+        try:
+            plan = optimal_partitions(g, cap, lam=1.0)
+        except PartitionInfeasible:
+            with pytest.raises(PartitionInfeasible):
+                min_cost_path_reference(g, cap, lam=1.0)
+            return
+        _, cost_ref = min_cost_path_reference(g, cap, lam=1.0)
+        assert cost_ref == pytest.approx(plan.total_cost)
+        assert all(m < cap for m in plan.memory_bytes)
+
+    def test_transfer_sizes_include_side_inputs(self):
+        g = LayerGraph()
+        g.add(Layer("a", out_bytes=10))
+        g.add(Layer("b", out_bytes=10), ["a"])
+        g.add(Layer("c", out_bytes=10, side_in_bytes=30), ["b"])
+        pts = g.candidate_partition_points()
+        segs = g.segment_layers(pts)
+        tsz = transfer_sizes(g, pts, segs, lam=1.0)
+        # cuts before c carry its 30-byte side input on top of the stream
+        assert tsz[0] == 40.0 and tsz[1] == 40.0 and tsz[2] == 10.0

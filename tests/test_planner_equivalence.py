@@ -1,0 +1,40 @@
+"""Planner-equivalence contract: plans are bit-identical across perf PRs.
+
+The fixture (tests/data/planner_equivalence.json) pins (runs, nodes,
+bottleneck_s, total cost, thresholds, boundary sizes) — floats as hex — for
+the canonical scenario grid in repro.core.equivalence.  Optimization PRs must
+keep every entry byte-stable; only a PR that *intentionally* changes planner
+output may regenerate it (scripts/gen_equivalence_fixture.py) and must say so.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core import equivalence
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "planner_equivalence.json")
+
+with open(FIXTURE) as f:
+    FIX = json.load(f)
+SCN = {sc["id"]: sc for sc in equivalence.scenarios()}
+
+
+def test_fixture_matches_scenario_grid():
+    assert set(SCN) == set(FIX), (
+        "scenario grid and fixture diverged; regenerate via "
+        "scripts/gen_equivalence_fixture.py and justify in the PR")
+
+
+def test_fixture_exercises_the_planner():
+    multi = [v for v in FIX.values() if "runs" in v and len(v["runs"]) >= 5]
+    infeasible = [v for v in FIX.values() if "error" in v]
+    assert len(multi) >= 10, "fixture must contain many-run plans"
+    assert len(infeasible) >= 5, "fixture must cover infeasible paths"
+
+
+@pytest.mark.parametrize("sid", sorted(SCN))
+def test_plan_bit_identical(sid):
+    assert equivalence.run_scenario(SCN[sid]) == FIX[sid]

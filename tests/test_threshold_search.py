@@ -1,0 +1,223 @@
+"""Incremental threshold search (Algorithm 2) equivalence + the k > KMAX_COLOR
+greedy maximin fallback + the vectorized latency gather."""
+
+import numpy as np
+import pytest
+from repro.compat.testing import given, settings, strategies as st
+
+from repro.core import (ClusterGraph, find_k_path, random_geometric_cluster,
+                        subgraph_k_path, subgraph_k_path_reference,
+                        transfer_latencies, tpu_cluster)
+from repro.core.kpath import KMAX_COLOR, _greedy_maximin_path, replay_infeasible
+from repro.core.placement import _threshold_levels, _uf_prune_level
+
+
+def _identical_searches(cluster, k, start, end, avail, seed):
+    """Run pruned and reference searches from identical rng states; both the
+    result AND the post-call rng state must agree (successive subarray
+    searches share one stream, so state divergence would change plans)."""
+    r1, r2 = np.random.default_rng(seed), np.random.default_rng(seed)
+    got = subgraph_k_path(cluster, k, start, end, avail, r1)
+    want = subgraph_k_path_reference(cluster, k, start, end, avail, r2)
+    assert (got is None) == (want is None)
+    if got is not None:
+        assert got[0] == want[0], "path diverged"
+        assert got[1] == want[1], "threshold diverged"
+    s1 = r1.bit_generator.state
+    s2 = r2.bit_generator.state
+    assert s1 == s2, "rng stream diverged (replay_infeasible out of lockstep)"
+    return got
+
+
+class TestIncrementalThresholdSearch:
+    @pytest.mark.parametrize("n", [5, 10, 15, 20])
+    @pytest.mark.parametrize("k", [3, 4, 6])
+    def test_matches_reference_on_paper_grid(self, n, k):
+        cluster = random_geometric_cluster(n, rng=n * 131 + k)
+        avail = np.ones(n, dtype=bool)
+        res = _identical_searches(cluster, k, None, None, avail, seed=k)
+        if k <= n:
+            assert res is not None      # complete geometric graphs: feasible
+        else:
+            assert res is None          # more path vertices than nodes
+
+    @pytest.mark.parametrize("k", [3, 5])
+    def test_matches_reference_with_endpoints(self, k):
+        cluster = random_geometric_cluster(12, rng=7)
+        avail = np.ones(12, dtype=bool)
+        _identical_searches(cluster, k, 0, 5, avail, seed=3)
+
+    def test_matches_reference_infeasible_avail(self):
+        # fewer available nodes than k: both must return None without
+        # touching the rng
+        cluster = random_geometric_cluster(10, rng=3)
+        avail = np.zeros(10, dtype=bool)
+        avail[:3] = True
+        assert _identical_searches(cluster, 5, None, None, avail, 9) is None
+
+    def test_matches_reference_disconnected(self):
+        # two clusters with zero inter-cluster bandwidth: a 4-path across
+        # them is impossible, every probe is provably infeasible
+        bw = np.zeros((6, 6))
+        bw[:3, :3] = 50.0
+        bw[3:, 3:] = 50.0
+        np.fill_diagonal(bw, 0.0)
+        cluster = ClusterGraph(bw=bw)
+        avail = np.ones(6, dtype=bool)
+        assert _identical_searches(cluster, 4, 0, 4, avail, 1) is None
+
+    def test_matches_reference_jittered_tpu(self):
+        cluster = tpu_cluster(n_pods=2, slots_per_pod=4, jitter=0.4, rng=11)
+        avail = np.ones(8, dtype=bool)
+        _identical_searches(cluster, 6, None, None, avail, seed=2)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.data())
+    def test_matches_reference_random(self, data):
+        n = data.draw(st.integers(5, 14))
+        k = data.draw(st.integers(3, min(n, 8)))
+        seed = data.draw(st.integers(0, 10 ** 6))
+        cluster = random_geometric_cluster(n, rng=seed)
+        avail = np.ones(n, dtype=bool)
+        # random unavailability
+        drop = data.draw(st.integers(0, max(0, n - k)))
+        if drop:
+            avail[np.random.default_rng(seed + 1).choice(n, drop,
+                                                         replace=False)] = False
+        _identical_searches(cluster, k, None, None, avail, seed)
+
+    def test_uf_prune_is_sound(self):
+        """No real k-path may exist above the union-find cutoff level."""
+        for seed in range(4):
+            cluster = random_geometric_cluster(10, rng=seed)
+            levels = _threshold_levels(cluster)
+            avail = np.ones(10, dtype=bool)
+            k = 4
+            cutoff = _uf_prune_level(cluster, levels, k, None, None, avail)
+            rng = np.random.default_rng(0)
+            for idx in range(cutoff + 1, len(levels)):
+                adj = cluster.bw >= levels[idx]
+                assert find_k_path(adj, k, None, None, avail, rng) is None
+
+    def test_replay_consumes_exactly_like_a_failed_search(self):
+        """replay_infeasible leaves the rng in the same state as a genuinely
+        exhausted find_k_path on a provably infeasible instance."""
+        n = 8
+        adj = np.zeros((n, n), dtype=bool)      # empty graph: no 3-path
+        avail = np.ones(n, dtype=bool)
+        for k in (3, 6, KMAX_COLOR + 2):
+            r1, r2 = np.random.default_rng(5), np.random.default_rng(5)
+            assert find_k_path(adj, k, None, None, avail, r1) is None
+            replay_infeasible(n, k, None, None, avail, r2)
+            assert r1.bit_generator.state == r2.bit_generator.state, k
+
+
+class TestGreedyMaximin:
+    def _golden_path_cluster(self, n):
+        """Complete graph; the edges of the path 0-1-...-n-1 have weight 100,
+        everything else weight 1."""
+        w = np.ones((n, n))
+        for i in range(n - 1):
+            w[i, i + 1] = w[i + 1, i] = 100.0
+        np.fill_diagonal(w, 0.0)
+        return w
+
+    def test_extension_takes_maximin_edge(self):
+        n = KMAX_COLOR + 2                  # forces the greedy fallback
+        w = self._golden_path_cluster(n)
+        adj = w > 0
+        p = find_k_path(adj, n, start=0, end=n - 1, rng=0, weights=w)
+        assert p == list(range(n))          # follows the weight-100 chain
+        # bottleneck edge of the returned path is the golden weight
+        assert min(w[p[i], p[i + 1]] for i in range(n - 1)) == 100.0
+
+    def test_unweighted_falls_back_to_first_admissible(self):
+        n = 20
+        adj = ~np.eye(n, dtype=bool)
+        p = find_k_path(adj, 16, rng=4)     # beyond KMAX_COLOR, no weights
+        assert p is not None and len(set(p)) == 16
+
+    def test_insertion_repair_rescues_dead_end(self):
+        # 0-1-2-3 path plus vertex 4 reachable only via 0/1: extending from 3
+        # dead-ends, repair must splice 4 between 0 and 1
+        n = 5
+        adj = np.zeros((n, n), dtype=bool)
+        for a, b in [(0, 1), (1, 2), (2, 3), (0, 4), (4, 1)]:
+            adj[a, b] = adj[b, a] = True
+        w = adj.astype(float)
+        w[0, 1] = w[1, 0] = 9.0             # extension prefers 1 over 4
+        w[1, 2] = w[2, 1] = 9.0
+        p = _greedy_maximin_path(adj, 5, 0, None, np.ones(n, dtype=bool),
+                                 np.random.default_rng(0), weights=w)
+        assert p is not None
+        assert p == [0, 4, 1, 2, 3]
+        assert all(adj[p[i], p[i + 1]] for i in range(4))
+
+    def test_two_opt_suffix_reversal_reaches_end(self):
+        # edges 0-1, 1-2, 1-3, 3-0; forced end=2: greedy reaches 0,1,3 and
+        # must reverse the suffix (0,3,1) before appending 2
+        n = 4
+        adj = np.zeros((n, n), dtype=bool)
+        for a, b in [(0, 1), (1, 2), (1, 3), (3, 0)]:
+            adj[a, b] = adj[b, a] = True
+        w = adj.astype(float)
+        w[0, 1] = w[1, 0] = 9.0             # prefer 1 first from 0
+        p = _greedy_maximin_path(adj, 4, 0, 2, np.ones(n, dtype=bool),
+                                 np.random.default_rng(0), weights=w)
+        assert p is not None and p[0] == 0 and p[-1] == 2
+        assert len(set(p)) == 4
+        assert all(adj[p[i], p[i + 1]] for i in range(3))
+
+    def test_free_start_pinned_end_never_duplicates_end(self):
+        """With start free and end pinned, the permutation seed may draw
+        ``end`` — the path must still be simple and end exactly once."""
+        n = KMAX_COLOR + 2
+        adj = ~np.eye(n, dtype=bool)
+        avail = np.ones(n, dtype=bool)
+        for seed in range(60):
+            p = _greedy_maximin_path(adj, n, None, n - 1, avail,
+                                     np.random.default_rng(seed))
+            assert p is not None
+            assert len(p) == n and len(set(p)) == n
+            assert p[-1] == n - 1
+
+    def test_maximin_beats_first_fit_bottleneck(self):
+        """On the golden-path cluster the maximin greedy achieves the
+        Theorem-1-style bottleneck the first-fit version almost surely
+        misses."""
+        n = 16
+        w = self._golden_path_cluster(n)
+        adj = w > 0
+        avail = np.ones(n, dtype=bool)
+        best = _greedy_maximin_path(adj, n, 0, n - 1, avail,
+                                    np.random.default_rng(2), weights=w)
+        worst = _greedy_maximin_path(adj, n, 0, n - 1, avail,
+                                     np.random.default_rng(2), weights=None)
+        def bottleneck(p):
+            return min(w[p[i], p[i + 1]] for i in range(len(p) - 1))
+        assert bottleneck(best) == 100.0
+        assert bottleneck(best) >= bottleneck(worst)
+
+
+class TestTransferLatenciesVectorized:
+    def test_matches_scalar_reference(self):
+        cluster = random_geometric_cluster(8, rng=0)
+        sizes = [3e6, 1e6, 8e6]
+        nodes = [0, 3, 5, 7]
+        got = transfer_latencies(sizes, nodes, cluster)
+        for i in range(3):
+            assert got[i] == sizes[i] / cluster.bw[nodes[i], nodes[i + 1]]
+
+    def test_zero_bandwidth_is_inf(self):
+        bw = np.zeros((3, 3))
+        bw[0, 1] = bw[1, 0] = 10.0
+        cluster = ClusterGraph(bw=bw)
+        got = transfer_latencies([5.0, 5.0], [0, 1, 2], cluster)
+        assert got[0] == 0.5
+        assert np.isinf(got[1])
+
+    def test_empty_and_mismatch(self):
+        cluster = random_geometric_cluster(4, rng=1)
+        assert len(transfer_latencies([], [2], cluster)) == 0
+        with pytest.raises(ValueError):
+            transfer_latencies([1.0], [0, 1, 2], cluster)
