@@ -2,6 +2,10 @@
 
 from __future__ import annotations
 
+import json
+import os
+import statistics
+import sys
 import time
 
 import numpy as np
@@ -29,3 +33,61 @@ def timed(fn, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)
     return out, (time.perf_counter() - t0) * 1e6     # us
+
+
+# ---------------------------------------------------------------------------
+# tracked-benchmark scaffolding (BENCH_planner.json / BENCH_emulator.json):
+# one methodology, shared by every --update/--check gate
+# ---------------------------------------------------------------------------
+
+def time_us(fn, reps):
+    """(median, min) microseconds over reps.  The median is the tracked
+    number; the min is what --check compares, because it is far more robust
+    to CPU contention (a deterministic code path's best-of-N is a stable
+    estimator, while any single rep can be 2x+ off on a noisy host)."""
+    out = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        out.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(out), min(out)
+
+
+def load_bench(path) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_bench(label: str, bench_path: str, entries: dict,
+                ratio: float) -> int:
+    """Compare freshly measured entries ({name: {"min_us", ...}}) against
+    the committed medians; fail (1) on any >ratio regression.  Best-of-reps
+    vs committed median: robust to host contention while still catching
+    real (asymptotic) regressions."""
+    committed = load_bench(bench_path)
+    if committed is None:
+        print(f"{label}: no committed {os.path.basename(bench_path)}; "
+              f"run --update first", file=sys.stderr)
+        return 1
+    worst = 0.0
+    failed = []
+    for name, e in entries.items():
+        base = committed["entries"].get(name, {}).get("median_us")
+        if base is None:
+            print(f"{label}: {name}: NEW (no committed baseline)")
+            continue
+        r = e["min_us"] / base
+        worst = max(worst, r)
+        flag = "FAIL" if r > ratio else "ok"
+        print(f"{label}: {name}: best {e['min_us']:.0f}us "
+              f"vs committed median {base:.0f}us (x{r:.2f}) {flag}")
+        if r > ratio:
+            failed.append(name)
+    if failed:
+        print(f"{label}: REGRESSION >{ratio}x in: {', '.join(failed)}",
+              file=sys.stderr)
+        return 1
+    print(f"{label}: ok (worst ratio x{worst:.2f})")
+    return 0

@@ -1,15 +1,215 @@
-"""Paper Table 4: emulator throughput / end-to-end latency by cluster shape
-(ring vs grid vs blob-cluster) and size (5 / 9 / 20 nodes)."""
+"""Tracked emulator benchmark (BENCH_emulator.json) + paper Table 4.
+
+Times the fast emulator engines at fleet scale against the reference
+closure-based event loop (``engine="reference"``):
+
+* ``fastpath/*``  — the vectorized calendar engine on fault-free traces
+  (the paper's 20-node scale with 5k-batch traces, plus a 100-node fleet);
+* ``eventpath/*`` — the flat (closure-free) event engine on a single-fault
+  trace;
+* ``sweep/*``     — Monte-Carlo (fault-seed x arrival-rate) grids on
+  240-500 node clusters with 2k-50k-batch traces
+  (``repro.emulator.sweep``).  ``--update`` times one scaled-down
+  reference cell per grid, extrapolates linearly (events per batch are
+  constant), and records the projection against the ``BUDGET_S`` budget:
+  the largest grid (64 cells x 50k batches) is far beyond what the
+  reference engine can finish and is marked DNF; the smaller fault grids
+  stay within budget and are tracked for the event-path speedup.
+
+Every timed fast run is asserted metrics-identical to the reference on the
+spots where both are run (the equivalence contract, live).
+
+Usage:
+  python -m benchmarks.emulator_bench --update [--reps N]  # re-measure + write
+  python -m benchmarks.emulator_bench --check  [--reps N]  # CI: fail on >2x
+  python -m benchmarks.emulator_bench                      # print, no write
+
+``--check`` re-times the fast engines only and fails when any entry's
+best-of-reps exceeds CHECK_RATIO x the committed median (same tolerance and
+methodology as benchmarks/planner_scale.py; regenerate on a uniformly
+slower host rather than chasing phantom regressions).
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
+import time
+
 import numpy as np
 
-from repro.core import partition_and_place, ring_cluster, grid_cluster, blob_cluster
+from repro.configs.paper_cnns import PAPER_MODELS
+from repro.core import (blob_cluster, grid_cluster, partition_and_place,
+                        random_geometric_cluster, ring_cluster)
+from repro.emulator import (NodeFault, RandomNodeFaults, evaluate_cells,
+                            metrics_identical, simulate)
 from repro.emulator.pipeline import emulate_plan
 
-from .common import build_model, timed
+from .common import check_bench, load_bench, time_us
 
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_emulator.json")
+CHECK_RATIO = 2.0           # --check fails on >2x regression vs committed
+DEFAULT_REPS = 5
+BUDGET_S = 30.0             # reference budget per sweep entry (projected)
+
+# (key, model, cap, n_nodes, n_batches, arrival_rate_hz)
+FASTPATH_CASES = [
+    ("ResNet50/n20/b5000", "ResNet50", 30e6, 20, 5000, None),
+    ("ResNet50/n100/b10000", "ResNet50", 30e6, 100, 10000, None),
+    ("InceptionResNetV2/n20/b2000", "InceptionResNetV2", 30e6, 20, 2000,
+     None),
+]
+
+# (key, model, cap, n_nodes, n_batches)  -- one mid-trace node kill+recover
+EVENTPATH_CASES = [
+    ("ResNet50/n20/b1000/kill1", "ResNet50", 30e6, 20, 1000),
+]
+
+# (key, model, cap, n_nodes, n_seeds, rates, n_batches, fault_model)
+SWEEP_CASES = [
+    ("ResNet50/n240/seeds32x2/b50000", "ResNet50", 30e6, 240, 32,
+     (None, 4.0), 50000, None),
+    ("ResNet50/n240/seeds16/b2000/kill1", "ResNet50", 30e6, 240, 16,
+     (None,), 2000,
+     RandomNodeFaults(n_faults=1, window_s=(10.0, 60.0),
+                      recover_after_s=40.0)),
+    ("ResNet50/n500/seeds8/b5000/kill2", "ResNet50", 30e6, 500, 8,
+     (None,), 5000,
+     RandomNodeFaults(n_faults=2, window_s=(10.0, 120.0),
+                      recover_after_s=60.0)),
+]
+
+
+def _plan_cache():
+    plans: dict = {}
+
+    def get(model, cap, n):
+        key = (model, cap, n)
+        if key not in plans:
+            g = PAPER_MODELS[model]()
+            cluster = random_geometric_cluster(n, rng=n)
+            p = partition_and_place(g, cluster, cap, n_classes=3, rng=0)
+            plans[key] = (cluster, p.placement.nodes,
+                          p.partition.boundary_sizes,
+                          p.partition.compute_flops)
+        return plans[key]
+    return get
+
+
+def _assert_identical(a: dict, b: dict) -> None:
+    assert metrics_identical(a, b), \
+        "fast engine diverged from reference (equivalence contract)"
+
+
+def measure(reps: int, with_naive: bool) -> dict:
+    entries: dict[str, dict] = {}
+    get = _plan_cache()
+
+    for key, model, cap, n, nb, rate in FASTPATH_CASES:
+        cluster, nodes, bounds, flops = get(model, cap, n)
+        kw = dict(n_batches=nb, duration_s=1e9, arrival_rate_hz=rate, rng=0)
+
+        def fast():
+            return simulate(cluster, nodes, bounds, flops,
+                            engine="calendar", **kw)
+        med, lo = time_us(fast, reps)
+        e = {"median_us": med, "min_us": lo}
+        if with_naive:
+            def ref():
+                return simulate(cluster, nodes, bounds, flops,
+                                engine="reference", **kw)
+            e["naive_median_us"], _ = time_us(ref, reps)
+            e["speedup"] = round(e["naive_median_us"] / e["median_us"], 2)
+            _assert_identical(fast(), ref())
+        entries[f"fastpath/{key}"] = e
+
+    for key, model, cap, n, nb in EVENTPATH_CASES:
+        cluster, nodes, bounds, flops = get(model, cap, n)
+        faults = [NodeFault(20.0, nodes[1], recover_after_s=30.0)]
+        kw = dict(n_batches=nb, duration_s=1e9, faults=faults, rng=0)
+
+        def fast():
+            return simulate(cluster, nodes, bounds, flops,
+                            engine="events", **kw)
+        med, lo = time_us(fast, reps)
+        e = {"median_us": med, "min_us": lo}
+        if with_naive:
+            def ref():
+                return simulate(cluster, nodes, bounds, flops,
+                                engine="reference", **kw)
+            e["naive_median_us"], _ = time_us(ref, reps)
+            e["speedup"] = round(e["naive_median_us"] / e["median_us"], 2)
+            _assert_identical(fast(), ref())
+        entries[f"eventpath/{key}"] = e
+
+    for key, model, cap, n, n_seeds, rates, nb, fm in SWEEP_CASES:
+        cluster, nodes, bounds, flops = get(model, cap, n)
+        n_cells = n_seeds * len(rates)
+
+        def fast():
+            return evaluate_cells(cluster, nodes, bounds, flops,
+                                  seeds=range(n_seeds), arrival_rates=rates,
+                                  n_batches=nb, fault_model=fm)
+        med, lo = time_us(fast, reps)
+        e = {"median_us": med, "min_us": lo, "cells": n_cells,
+             "batches_per_cell": nb}
+        if with_naive:
+            # one scaled-down reference cell, extrapolated linearly: the
+            # event count per batch is constant along the trace
+            scale = 10
+            t0 = time.perf_counter()
+            simulate(cluster, nodes, bounds, flops,
+                     n_batches=nb // scale, duration_s=1e9,
+                     arrival_rate_hz=rates[-1],
+                     faults=fm.draw(0, nodes) if fm else (),
+                     rng=0, engine="reference")
+            cell_s = (time.perf_counter() - t0) * scale
+            projected = cell_s * n_cells
+            e["naive_projected_s"] = round(projected, 1)
+            e["naive_budget_s"] = BUDGET_S
+            e["naive_status"] = ("DNF" if projected > BUDGET_S
+                                 else "within-budget")
+        entries[f"sweep/{key}"] = e
+    return entries
+
+
+def check(reps: int) -> int:
+    return check_bench("emulator_bench", BENCH_PATH,
+                       measure(reps, with_naive=False), CHECK_RATIO)
+
+
+def update(reps: int) -> None:
+    entries = measure(reps, with_naive=True)
+    doc = {
+        "meta": {
+            "reps": reps,
+            "tool": "benchmarks/emulator_bench.py --update",
+            "note": ("median microseconds per call; naive = reference "
+                     "closure-based event loop (sweep entries: one "
+                     "scaled-down reference cell extrapolated linearly, "
+                     f"DNF when projected > {BUDGET_S}s budget); --check "
+                     f"compares best-of-reps with a {CHECK_RATIO}x ratio "
+                     "tolerance"),
+        },
+        "entries": entries,
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    for name, e in sorted(entries.items()):
+        extra = (f"naive {e['naive_median_us']:.0f}us, x{e['speedup']}"
+                 if "naive_median_us" in e else
+                 f"naive projected {e.get('naive_projected_s', '?')}s "
+                 f"({e.get('naive_status', '?')})")
+        print(f"{name}: {e['median_us']:.0f}us ({extra})")
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.run entry point: Table 4 + tracked timings
+# ---------------------------------------------------------------------------
 
 def make_cluster(shape: str, n: int):
     if shape == "ring":
@@ -19,27 +219,65 @@ def make_cluster(shape: str, n: int):
         while n % rows:
             rows -= 1
         return grid_cluster(rows, n // rows)
-    return blob_cluster(n, n_blobs=max(2, n // 4))
+    if shape == "cluster":
+        return blob_cluster(n, n_blobs=max(2, n // 4))
+    return random_geometric_cluster(n, rng=n)
 
 
-def run(reps: int = 1):
+def run(reps: int = 3):
+    """Paper Table 4 (ring/grid/cluster at 5/9/20 nodes, via the fast
+    engine, now with 2k-batch traces) extended with fleet-scale geometric
+    clusters, plus the tracked timing entries."""
     rows = []
-    g = build_model("ResNet50")
-    for n in (5, 9, 20):
-        for shape in ("ring", "grid", "cluster"):
-            cluster = make_cluster(shape, n)
-            try:
-                plan = partition_and_place(g, cluster, 64e6, n_classes=3,
-                                           rng=0)
-                m, us = timed(emulate_plan, plan, cluster, None, 40, 1e6)
-                rows.append({"name": f"emulator/{shape}/n{n}/throughput_hz",
-                             "us_per_call": us,
-                             "derived": round(m["throughput_hz"], 4)})
-                rows.append({"name": f"emulator/{shape}/n{n}/e2e_s",
-                             "us_per_call": us,
-                             "derived": round(m["mean_e2e_s"], 2)})
-            except Exception as e:
-                rows.append({"name": f"emulator/{shape}/n{n}",
-                             "us_per_call": 0.0,
-                             "derived": f"infeasible({type(e).__name__})"})
+    g = PAPER_MODELS["ResNet50"]()
+    table4 = ([(s, n, 2000) for n in (5, 9, 20)
+               for s in ("ring", "grid", "cluster")]
+              + [("geo", 100, 10000), ("geo", 240, 10000),
+                 ("geo", 500, 10000)])
+    for shape, n, nb in table4:
+        cluster = make_cluster(shape, n)
+        try:
+            plan = partition_and_place(g, cluster, 64e6, n_classes=3, rng=0)
+            t0 = time.perf_counter()
+            m = emulate_plan(plan, cluster, None, nb, 1e9)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append({"name": f"emulator/{shape}/n{n}/throughput_hz",
+                         "us_per_call": us,
+                         "derived": round(m["throughput_hz"], 4)})
+            rows.append({"name": f"emulator/{shape}/n{n}/e2e_s",
+                         "us_per_call": us,
+                         "derived": round(m["mean_e2e_s"], 2)})
+        except Exception as e:
+            rows.append({"name": f"emulator/{shape}/n{n}",
+                         "us_per_call": 0.0,
+                         "derived": f"infeasible({type(e).__name__})"})
+    committed = load_bench(BENCH_PATH) or {"entries": {}}
+    for name, e in measure(reps, with_naive=False).items():
+        c = committed["entries"].get(name, {})
+        derived = c.get("speedup", c.get("naive_status", ""))
+        rows.append({"name": f"emulator_bench/{name}",
+                     "us_per_call": e["median_us"],
+                     "derived": f"committed={derived}"})
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="measure fast + reference, write BENCH_emulator.json")
+    ap.add_argument("--check", action="store_true",
+                    help=f"fail on >{CHECK_RATIO}x regression vs committed")
+    ap.add_argument("--reps", type=int, default=None)
+    args = ap.parse_args()
+    reps = args.reps or (DEFAULT_REPS if (args.update or args.check) else 3)
+    if args.update:
+        update(reps)
+    elif args.check:
+        sys.exit(check(reps))
+    else:
+        for r in run(reps):
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,85 +2,79 @@
 
 Each scenario must complete ALL batches (no data loss) — system IO /
 network / single-node / multi-node fault tolerance, plus the beyond-paper
-straggler-migration feature.
+straggler-migration feature.  Every scenario now runs on BOTH the flat
+fast event engine and the closure-based reference engine, and the row only
+PASSes if their metrics agree exactly (the emulator equivalence contract,
+exercised live on every benchmark run).
 """
 
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import partition_and_place, random_geometric_cluster
-from repro.emulator import (EmulatorConfig, FaultInjector, LinkFault,
-                            NodeFault, PipelineEmulator)
+from repro.emulator import (EmulatorConfig, LinkFault, NodeFault,
+                            metrics_identical, simulate)
 
 from .common import build_model, timed
 
-
-def _fresh(n_classes=3, straggler=False, slow_node=None):
-    g = build_model("ResNet50")
-    cluster = random_geometric_cluster(14, rng=11)
-    if slow_node is not None:
-        cluster.compute_scale[slow_node] = 0.05
-    plan = partition_and_place(g, cluster, 64e6, n_classes=n_classes, rng=2)
-    cfg = EmulatorConfig(enable_straggler_migration=straggler)
-    emu = PipelineEmulator(cluster, plan.placement.nodes,
-                           plan.partition.boundary_sizes,
-                           plan.partition.compute_flops, cfg)
-    return plan, emu
-
-
 N_BATCH = 40
 
-
-def scenario_network_fault():
-    plan, emu = _fresh()
-    FaultInjector(emu).schedule([
-        LinkFault(10.0, plan.placement.nodes[0], plan.placement.nodes[1], 15.0)])
-    return emu.run(N_BATCH, 1e6)
-
-
-def scenario_single_node():
-    plan, emu = _fresh()
-    FaultInjector(emu).schedule([NodeFault(15.0, plan.placement.nodes[1])])
-    return emu.run(N_BATCH, 1e6)
-
-
-def scenario_multi_node():
-    plan, emu = _fresh()
-    FaultInjector(emu).schedule([
-        NodeFault(15.0, plan.placement.nodes[1]),
-        NodeFault(30.0, plan.placement.nodes[2]),
-        NodeFault(45.0, plan.placement.nodes[3])])
-    return emu.run(N_BATCH, 1e6)
-
-
-def scenario_straggler():
-    plan, emu = _fresh(straggler=True,
-                       slow_node=None)
-    # make the stage-1 node a 20x straggler after placement
-    emu.cluster.compute_scale[emu.stages[1].node] = 0.05
-    for st in emu.stages[1:]:
-        st.compute_s = st.compute_s  # recompute below
-    emu.stages[1].compute_s /= 0.05
-    return emu.run(N_BATCH, 1e6)
-
-
+# name -> {faults: [(kind, stage(s), args...)], cfg: {...}, slow_stage}
 SCENARIOS = {
-    "network_fault": scenario_network_fault,
-    "single_node_fault": scenario_single_node,
-    "multi_node_fault": scenario_multi_node,
-    "straggler_migration": scenario_straggler,
+    "network_fault": {
+        "faults": [{"link_stages": (0, 1), "t": 10.0, "duration": 15.0}]},
+    "single_node_fault": {
+        "faults": [{"node_stage": 1, "t": 15.0}]},
+    "multi_node_fault": {
+        "faults": [{"node_stage": 1, "t": 15.0},
+                   {"node_stage": 2, "t": 30.0},
+                   {"node_stage": 3, "t": 45.0}]},
+    "straggler_migration": {
+        "faults": [], "slow_stage": 1, "slow_scale": 0.05,
+        "cfg": {"enable_straggler_migration": True}},
 }
+
+
+def _build(spec):
+    g = build_model("ResNet50")
+    cluster = random_geometric_cluster(14, rng=11)
+    plan = partition_and_place(g, cluster, 64e6, n_classes=3, rng=2)
+    nodes = list(plan.placement.nodes)
+    if spec.get("slow_stage") is not None:
+        cluster.compute_scale[nodes[spec["slow_stage"]]] = spec["slow_scale"]
+    faults = []
+    for f in spec["faults"]:
+        if "node_stage" in f:
+            faults.append(NodeFault(f["t"], nodes[f["node_stage"]],
+                                    f.get("recover")))
+        else:
+            a, b = f["link_stages"]
+            faults.append(LinkFault(f["t"], nodes[a], nodes[b],
+                                    f["duration"]))
+    cfg = EmulatorConfig(**spec.get("cfg", {}))
+    return (cluster, nodes, plan.partition.boundary_sizes,
+            plan.partition.compute_flops, faults, cfg)
 
 
 def run(reps: int = 1):
     rows = []
-    for name, fn in SCENARIOS.items():
-        m, us = timed(fn)
-        ok = m["completed"] == N_BATCH
+    for name, spec in SCENARIOS.items():
+        # one plan feeds both engines (simulate() never mutates the inputs)
+        built = _build(spec)
+
+        def sim(engine, built=built):
+            cluster, nodes, bounds, flops, faults, cfg = built
+            return simulate(cluster, nodes, bounds, flops, cfg,
+                            n_batches=N_BATCH, duration_s=1e6, faults=faults,
+                            rng=0, engine=engine)
+
+        m, us = timed(sim, "events")
+        ref = sim("reference")
+        agree = metrics_identical(m, ref)
+        ok = m["completed"] == N_BATCH and agree
         rows.append({"name": f"fault_tolerance/{name}",
                      "us_per_call": us,
                      "derived": f"{'PASS' if ok else 'FAIL'} "
                                 f"({m['completed']}/{N_BATCH}, "
-                                f"{m['throughput_hz']:.3f} Hz)"})
+                                f"{m['throughput_hz']:.3f} Hz, "
+                                f"engines {'agree' if agree else 'DISAGREE'})"})
     return rows

@@ -26,9 +26,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import statistics
 import sys
-import time
 from contextlib import contextmanager
 
 from repro.configs import get_config
@@ -39,6 +37,8 @@ from repro.core.partitioner import (NotPartitionable, PartitionInfeasible,
                                     optimal_partitions)
 from repro.core.pipeline import lm_block_graph
 from repro.models.config import SHAPES
+
+from .common import check_bench, load_bench, time_us
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_planner.json")
@@ -149,19 +149,6 @@ def naive_planner():
 # timing
 # ---------------------------------------------------------------------------
 
-def _time_us(fn, reps):
-    """(median, min) microseconds over reps.  The median is the tracked
-    number; the min is what --check compares, because it is far more robust
-    to CPU contention (a deterministic code path's best-of-N is a stable
-    estimator, while any single rep can be 2x+ off on a noisy host)."""
-    out = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        out.append((time.perf_counter() - t0) * 1e6)
-    return statistics.median(out), min(out)
-
-
 def measure(reps: int, with_naive: bool) -> dict:
     """Methodology: per rep the accounting index cache is cleared (its build
     cost is part of the optimized number) while the graph-structure caches
@@ -177,10 +164,10 @@ def measure(reps: int, with_naive: bool) -> dict:
             g._acc_cache.clear()            # cold index: count its build cost
             optimal_partitions(g, cap, lam)
 
-        med, lo = _time_us(run_opt, reps)
+        med, lo = time_us(run_opt, reps)
         e = {"median_us": med, "min_us": lo}
         if with_naive:
-            e["naive_median_us"], _ = _time_us(
+            e["naive_median_us"], _ = time_us(
                 lambda: _optimal_partitions_naive(g, cap, lam), reps)
             e["speedup"] = round(e["naive_median_us"] / e["median_us"], 2)
             # sanity: same plan either way
@@ -197,7 +184,7 @@ def measure(reps: int, with_naive: bool) -> dict:
             g._acc_cache.clear()
             return partition_and_place(g, cluster, cap, n_classes=3, rng=0)
 
-        med, lo = _time_us(run_opt, reps)
+        med, lo = time_us(run_opt, reps)
         e = {"median_us": med, "min_us": lo}
         if with_naive:
             def run_naive():
@@ -205,7 +192,7 @@ def measure(reps: int, with_naive: bool) -> dict:
                 with naive_planner():
                     return partition_and_place(g, cluster, cap,
                                                n_classes=3, rng=0)
-            e["naive_median_us"], _ = _time_us(run_naive, reps)
+            e["naive_median_us"], _ = time_us(run_naive, reps)
             e["speedup"] = round(e["naive_median_us"] / e["median_us"], 2)
             a, b = run_opt(), run_naive()
             assert (a.partition.runs == b.partition.runs
@@ -215,42 +202,9 @@ def measure(reps: int, with_naive: bool) -> dict:
     return entries
 
 
-def load_committed() -> dict | None:
-    if not os.path.exists(BENCH_PATH):
-        return None
-    with open(BENCH_PATH) as f:
-        return json.load(f)
-
-
 def check(reps: int) -> int:
-    committed = load_committed()
-    if committed is None:
-        print("planner_scale: no committed BENCH_planner.json; "
-              "run --update first", file=sys.stderr)
-        return 1
-    entries = measure(reps, with_naive=False)
-    worst = 0.0
-    failed = []
-    for name, e in entries.items():
-        base = committed["entries"].get(name, {}).get("median_us")
-        if base is None:
-            print(f"planner_scale: {name}: NEW (no committed baseline)")
-            continue
-        # best-of-reps vs committed median: robust to host contention while
-        # still catching real (asymptotic) regressions
-        ratio = e["min_us"] / base
-        worst = max(worst, ratio)
-        flag = "FAIL" if ratio > CHECK_RATIO else "ok"
-        print(f"planner_scale: {name}: best {e['min_us']:.0f}us "
-              f"vs committed median {base:.0f}us (x{ratio:.2f}) {flag}")
-        if ratio > CHECK_RATIO:
-            failed.append(name)
-    if failed:
-        print(f"planner_scale: REGRESSION >{CHECK_RATIO}x in: "
-              f"{', '.join(failed)}", file=sys.stderr)
-        return 1
-    print(f"planner_scale: ok (worst ratio x{worst:.2f})")
-    return 0
+    return check_bench("planner_scale", BENCH_PATH,
+                       measure(reps, with_naive=False), CHECK_RATIO)
 
 
 def update(reps: int) -> None:
@@ -275,7 +229,7 @@ def update(reps: int) -> None:
 
 def run(reps: int = 3):
     """benchmarks.run entry point: optimized timings + committed speedups."""
-    committed = load_committed() or {"entries": {}}
+    committed = load_bench(BENCH_PATH) or {"entries": {}}
     rows = []
     for name, e in measure(reps, with_naive=False).items():
         derived = committed["entries"].get(name, {}).get("speedup", "")

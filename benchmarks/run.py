@@ -6,8 +6,10 @@
   Fig. 16  vs_random            ~10x over the random algorithm
   Fig. 17  vs_joint             vs greedy joint optimization (35% @ 50 nodes)
   Table 2  approx_ratio         approximation ratios + 5.4% optimality
-  Table 3  fault_tolerance      live fault-injection matrix
-  Table 4  emulator_bench       throughput/E2E by cluster shape
+  Table 3  fault_tolerance      live fault-injection matrix (both engines)
+  Table 4  emulator_bench       throughput/E2E by cluster shape + fleet
+                                scale; fast-engine latency vs
+                                BENCH_emulator.json
   (ours)   roofline             3-term roofline per dry-run cell
   (ours)   planner_scale        planner latency vs BENCH_planner.json
 """
@@ -39,7 +41,7 @@ def main() -> None:
         "approx_ratio": lambda: approx_ratio.run(args.reps or 10,
                                                  args.trials),
         "fault_tolerance": lambda: fault_tolerance.run(),
-        "emulator_bench": lambda: emulator_bench.run(),
+        "emulator_bench": lambda: emulator_bench.run(args.reps or 3),
         "roofline": lambda: roofline.run(),
     }
     print("name,us_per_call,derived")

@@ -21,4 +21,8 @@ echo "--- smoke: planner latency vs BENCH_planner.json"
 # (benchmarks/planner_scale.py --update) rather than chasing phantom
 # regressions.
 PYTHONPATH=src python -m benchmarks.planner_scale --check --reps 3
+
+echo "--- smoke: emulator latency vs BENCH_emulator.json"
+# same methodology and 2x best-of-reps tolerance as the planner gate above
+PYTHONPATH=src python -m benchmarks.emulator_bench --check --reps 3
 echo "ci: OK"

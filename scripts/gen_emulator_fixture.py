@@ -1,0 +1,29 @@
+#!/usr/bin/env python
+"""Regenerate the emulator-equivalence fixture.
+
+    PYTHONPATH=src python scripts/gen_emulator_fixture.py
+
+The fixture pins the *reference* ``PipelineEmulator`` metrics (hex floats +
+event log) over the scenario grid in ``repro.emulator.equivalence``; the
+fast engines must reproduce them exactly.  Only run this when a PR
+*intentionally* changes emulator semantics — in BOTH engines, per the
+lockstep obligation in ROADMAP.md — and say so in the PR description.
+Perf-only PRs must leave the fixture byte-stable.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.emulator.equivalence import write_fixture  # noqa: E402
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "..",
+                       "tests", "data", "emulator_equivalence.json")
+
+if __name__ == "__main__":
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    fix = write_fixture(FIXTURE)
+    stalled = sum(1 for v in fix.values()
+                  if any("stalled" in msg for _, msg in v["events"]))
+    print(f"wrote {len(fix)} scenarios ({stalled} with stalls) -> {FIXTURE}")

@@ -1,6 +1,14 @@
 from .core import Event, Simulator
-from .pipeline import PipelineEmulator, EmulatorConfig
-from .faults import FaultInjector, LinkFault, NodeFault
+from .pipeline import (EmulatorConfig, PipelineEmulator, emulate_plan,
+                       metrics_identical, summarize)
+from .faults import (FaultInjector, LinkFault, NodeFault, RandomLinkFaults,
+                     RandomNodeFaults)
+from .engine import FlatEventEngine, lindley_scan, poisson_arrivals, simulate
+from .sweep import aggregate, evaluate_cells, sweep_plan
 
 __all__ = ["Event", "Simulator", "PipelineEmulator", "EmulatorConfig",
-           "FaultInjector", "LinkFault", "NodeFault"]
+           "emulate_plan", "summarize", "metrics_identical",
+           "FaultInjector", "LinkFault", "NodeFault",
+           "RandomNodeFaults", "RandomLinkFaults",
+           "FlatEventEngine", "lindley_scan", "poisson_arrivals", "simulate",
+           "aggregate", "evaluate_cells", "sweep_plan"]

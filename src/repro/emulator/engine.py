@@ -1,0 +1,461 @@
+"""Fleet-scale emulator fast path: vectorized event engine.
+
+Two fast engines behind one entry point, :func:`simulate`:
+
+* **calendar** — the fault-free steady-state path.  With unbounded stage
+  queues and one-batch-at-a-time links, the reference event loop reduces to
+  a pair of Lindley recurrences per stage::
+
+      depart[i]  = fl(max(arrive[i],  depart[i-1])  + compute_s)   # compute
+      deliver[i] = fl(max(depart[i],  deliver[i-1]) + transfer_s)  # link
+
+  :func:`lindley_scan` evaluates that recurrence with the *exact* IEEE-754
+  operation sequence the reference executes, but vectorized: saturated runs
+  are replayed with ``np.add.accumulate`` (a sequential fl-add in C), idle
+  runs with one vector add, with doubling block detection of regime
+  switches and a scalar fallback when the two regimes thrash.
+
+* **events** — :class:`FlatEventEngine`, used when node/link faults or
+  straggler migration are active.  The same discrete-event semantics as the
+  reference ``PipelineEmulator``, but as a flat heap of tuples dispatched
+  by opcode: no per-event closure/dict allocation, state in flat lists.
+  Every handler mirrors its reference counterpart statement for statement,
+  including the order events are scheduled in, so heap tie-breaking (the
+  global sequence counter) is identical and the two loops are
+  step-for-step equivalent.
+
+Both paths are **metrics-identical** to the reference engine — the same
+floats, not approximately equal ones.  The contract is pinned by
+``tests/data/emulator_equivalence.json`` over the scenario grid in
+``repro.emulator.equivalence`` and property-tested in
+``tests/test_emulator_engine.py``.  LOCKSTEP OBLIGATION: any semantic
+change to ``pipeline.PipelineEmulator`` must land here in the same PR (and
+vice versa), and intentional behavior changes must regenerate the fixture
+(``scripts/gen_emulator_fixture.py``) with justification.
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from heapq import heappop, heappush
+
+import numpy as np
+
+from repro.core.cluster import ClusterGraph
+from .faults import FaultInjector, LinkFault, NodeFault
+from .pipeline import EmulatorConfig, PipelineEmulator, summarize
+
+__all__ = ["lindley_scan", "poisson_arrivals", "simulate", "FlatEventEngine"]
+
+
+# ---------------------------------------------------------------------------
+# exact vectorized Lindley recurrence
+# ---------------------------------------------------------------------------
+
+def lindley_scan(a: np.ndarray, c: float) -> np.ndarray:
+    """``d[i] = fl(max(a[i], d[i-1]) + c)`` with ``d[-1] = -inf``.
+
+    Bit-identical to the sequential scalar evaluation (``np.add.accumulate``
+    performs the same left-to-right fl-adds; ``max`` selects, never
+    rounds), but vectorized over maximal single-regime blocks:
+
+    * saturated (``a[i] <= d[i-1]``): repeated fl-addition of ``c``,
+      replayed by ``add.accumulate`` seeded with the running value;
+    * idle/reset (``a[i] > d[i-1]``): ``d[i] = a[i] + c``, one vector add.
+
+    Blocks are grown by doubling; if the regimes alternate so often that
+    block detection stops paying (> n/16 switches), the remainder runs as a
+    plain scalar loop — still allocation-free per element.
+    """
+    n = a.size
+    d = np.empty(n)
+    i = 0
+    prev = -np.inf
+    nswitch = 0
+    while i < n:
+        if nswitch * 16 > n and n - i > 64:    # regime thrash: finish scalar
+            out = []
+            ap = out.append
+            p = prev
+            for x in a[i:].tolist():
+                if x < p:
+                    x = p
+                p = x + c
+                ap(p)
+            d[i:] = out
+            return d
+        if a[i] < prev:                        # saturated block
+            chunk = 64
+            while True:
+                hi = min(n, i + chunk)
+                t = np.add.accumulate(
+                    np.concatenate(([prev], np.full(hi - i, c))))
+                bad = a[i:hi] > t[:-1]         # arrival overtakes the server
+                j = int(np.argmax(bad)) if bad.any() else -1
+                if j >= 0:
+                    d[i:i + j] = t[1:j + 1]
+                    if j > 0:
+                        prev = t[j]
+                    i += j
+                    nswitch += 1
+                    break
+                d[i:hi] = t[1:]
+                prev = t[-1]
+                i = hi
+                if i >= n:
+                    break
+                chunk *= 2
+        else:                                  # idle/reset block
+            chunk = 64
+            while True:
+                hi = min(n, i + chunk)
+                r = a[i:hi] + c
+                bad = a[i + 1:hi] < r[:hi - i - 1]   # server overtakes arrivals
+                j = int(np.argmax(bad)) if bad.any() else -1
+                if j >= 0:
+                    d[i:i + j + 1] = r[:j + 1]
+                    prev = r[j]
+                    i += j + 1
+                    nswitch += 1
+                    break
+                d[i:hi] = r
+                prev = r[-1]
+                i = hi
+                if i >= n or a[i] < prev:      # end, or regime flips at edge
+                    nswitch += 1
+                    break
+                chunk *= 2
+    return d
+
+
+def poisson_arrivals(n_batches: int, arrival_rate_hz: float | None,
+                     rng: np.random.Generator) -> np.ndarray:
+    """The reference driver's arrival stream, batched: ``t=0`` for all
+    batches without a rate, else the same Poisson process
+    (``t += rng.exponential(1/rate)`` per batch — one draw *per submitted
+    batch*, accumulated with sequential fl-adds, which is exactly what the
+    size-``n`` draw + ``add.accumulate`` reproduce)."""
+    if n_batches == 0:
+        return np.zeros(0)
+    if not arrival_rate_hz:
+        return np.zeros(n_batches)
+    draws = rng.exponential(1.0 / arrival_rate_hz, size=n_batches)
+    return np.add.accumulate(np.concatenate(([0.0], draws[:-1])))
+
+
+# ---------------------------------------------------------------------------
+# calendar path (fault-free)
+# ---------------------------------------------------------------------------
+
+def _stage_constants(cluster, nodes, boundary_bytes, compute_flops, cfg):
+    """Per-stage (compute_s, transfer_s) with the reference's float ops."""
+    comp = []
+    for k in range(len(boundary_bytes) + 1):
+        if k == 0:
+            comp.append(0.0)
+        else:
+            comp.append(compute_flops[k - 1] / cfg.node_flops
+                        / cluster.compute_scale[nodes[k]])
+    send = []
+    for k in range(len(boundary_bytes)):
+        bw = cluster.bw[nodes[k], nodes[k + 1]]
+        send.append(boundary_bytes[k] / bw if bw > 0 else np.inf)
+    return comp, send
+
+
+def _calendar_run(arrivals, comp, send, duration_s):
+    """Advance the whole batch trace stage by stage (two scans per stage)."""
+    a = arrivals
+    d = a
+    for k in range(len(comp)):
+        d = lindley_scan(a, comp[k])
+        if k < len(send):
+            a = lindley_scan(d, send[k])
+    keep = d <= duration_s
+    return d[keep], (d - arrivals)[keep]
+
+
+# ---------------------------------------------------------------------------
+# flat event engine (faults / straggler migration)
+# ---------------------------------------------------------------------------
+
+# opcodes (heap tuples: (time, seq, OP, *args); seq is globally unique so
+# payloads are never compared)
+_ARRIVE, _DONE, _RETRY, _DELIVER = 0, 1, 2, 3
+_KILL, _REVIVE, _RESCHED, _DROP, _RESTORE, _SWEEP = 4, 5, 6, 7, 8, 9
+
+
+class FlatEventEngine:
+    """Reference-identical event loop without per-event closures.
+
+    Mirrors ``PipelineEmulator`` handler for handler (see the lockstep
+    obligation in the module docstring).  The cluster's bandwidth matrix is
+    copied, so link faults never mutate the caller's cluster."""
+
+    def __init__(self, cluster: ClusterGraph, nodes, boundary_bytes,
+                 compute_flops, cfg: EmulatorConfig | None = None):
+        self.cfg = cfg or EmulatorConfig()
+        self.cluster = cluster
+        self.n_parts = len(boundary_bytes)
+        self.nodes = list(nodes)
+        self.flops = [0.0] + list(compute_flops)
+        self.out_bytes = list(boundary_bytes) + [0.0]
+
+    def run(self, arrivals: np.ndarray, duration_s: float,
+            faults=()) -> dict:
+        cfg = self.cfg
+        cluster = self.cluster
+        scale = cluster.compute_scale
+        # fresh copy per run: a link fault still down at end-of-run must not
+        # leak into the next run (or into the caller's cluster)
+        bwmat = cluster.bw.copy()
+        n_stages = self.n_parts + 1
+        last = n_stages - 1
+        n_batches = arrivals.size
+        node_flops = cfg.node_flops
+        retry_s = cfg.retry_s
+        resched_delay = cfg.detection_s + cfg.reschedule_s
+
+        node = list(self.nodes)
+        flops = self.flops
+        out_bytes = self.out_bytes
+        comp_s = [0.0 if flops[k] == 0.0
+                  else flops[k] / node_flops / scale[node[k]]
+                  for k in range(n_stages)]
+        busy = [False] * n_stages
+        sending = [False] * n_stages
+        token = [0] * n_stages
+        inbox = [deque() for _ in range(n_stages)]
+        outbox = [deque() for _ in range(n_stages)]
+        svc = [[] for _ in range(n_stages)]
+        down: set[int] = set()
+        spares = [n for n in range(cluster.n) if n not in node]
+        epoch = [0] * cluster.n
+        completed_t: list[float] = []
+        completed_e: list[float] = []
+        log: list[tuple[float, str]] = []
+
+        q: list[tuple] = []
+        cnt = itertools.count().__next__
+        now = 0.0
+
+        # -- handler helpers (defined once; no per-event allocation) --------
+        def try_start(k):
+            if busy[k] or not inbox[k] or node[k] in down:
+                return
+            busy[k] = True
+            token[k] += 1
+            nd = node[k]
+            heappush(q, (now + comp_s[k], cnt(), _DONE, k,
+                         inbox[k].popleft(), now, nd, epoch[nd], token[k]))
+
+        def attempt(k, bid):
+            src = node[k]
+            dst = node[k + 1]
+            bwv = 0.0 if (src in down or dst in down) else bwmat[src, dst]
+            if bwv <= 0:
+                heappush(q, (now + retry_s, cnt(), _RETRY, k, bid))
+                return
+            heappush(q, (now + out_bytes[k] / bwv, cnt(), _DELIVER, k, bid,
+                         src, dst, epoch[src], epoch[dst]))
+
+        def pump(k):
+            if sending[k] or not outbox[k]:
+                return
+            sending[k] = True
+            attempt(k, outbox[k].popleft())
+
+        def release(nd):
+            if (nd not in down and nd not in spares
+                    and all(x != nd for x in node)):
+                spares.append(nd)
+
+        def do_reschedule(k, straggler):
+            if not straggler and node[k] not in down:
+                log.append((now, f"stage {k}: node {node[k]} recovered "
+                                 f"before reschedule; pod kept in place"))
+                try_start(k)
+                return
+            if not spares:
+                log.append((now,
+                            f"stage {k}: NO SPARE NODE — pipeline stalled"))
+                return
+            best, best_score = None, -np.inf   # max() keeps the first maximum
+            for s in spares:
+                sc = 0.0
+                if k > 0:
+                    sc += bwmat[node[k - 1], s]
+                if k < last:
+                    sc += bwmat[s, node[k + 1]]
+                if sc > best_score:
+                    best, best_score = s, sc
+            spares.remove(best)
+            old = node[k]
+            node[k] = best
+            comp_s[k] = (0.0 if flops[k] == 0.0
+                         else flops[k] / node_flops / scale[best])
+            svc[k].clear()
+            busy[k] = False
+            log.append((now, f"stage {k}: pod rescheduled {old} -> {best}"))
+            release(old)
+            try_start(k)
+
+        # -- initial schedule: faults, straggler arm, arrivals (the order
+        #    the reference sees: injector first, then run()) ----------------
+        for fi, f in enumerate(faults):
+            if isinstance(f, NodeFault):
+                heappush(q, (max(f.time_s, 0.0), cnt(), _KILL, f.node))
+                if f.recover_after_s is not None:
+                    heappush(q, (max(f.time_s + f.recover_after_s, 0.0),
+                                 cnt(), _REVIVE, f.node))
+            elif isinstance(f, LinkFault):
+                heappush(q, (max(f.time_s, 0.0), cnt(), _DROP, fi))
+            else:
+                raise TypeError(f)
+        if cfg.enable_straggler_migration:
+            heappush(q, (cfg.straggler_check_s, cnt(), _SWEEP))
+        for bid in range(n_batches):
+            heappush(q, (max(arrivals[bid], 0.0), cnt(), _ARRIVE, bid))
+
+        # -- dispatch --------------------------------------------------------
+        while q and q[0][0] <= duration_s:
+            ev = heappop(q)
+            now = ev[0]
+            op = ev[2]
+            if op == _DONE:
+                k, bid, t0c, nd, ep, tok = ev[3:9]
+                current = tok == token[k]
+                if current:
+                    busy[k] = False
+                if epoch[nd] != ep:            # host died mid-compute
+                    inbox[k].appendleft(bid)
+                    if current:
+                        try_start(k)
+                    continue
+                if current and k > 0:
+                    svc[k].append(now - t0c)
+                if k == last:
+                    completed_t.append(now)
+                    completed_e.append(now - arrivals[bid])
+                else:                          # _send
+                    outbox[k].append(bid)
+                    pump(k)
+                if current:
+                    try_start(k)
+            elif op == _DELIVER:
+                k, bid, src, dst, es, ed = ev[3:9]
+                if (epoch[src] != es or epoch[dst] != ed
+                        or node[k] != src or node[k + 1] != dst):
+                    heappush(q, (now + retry_s, cnt(), _RETRY, k, bid))
+                    continue
+                sending[k] = False
+                inbox[k + 1].append(bid)       # _enqueue + ack
+                try_start(k + 1)
+                pump(k)
+            elif op == _ARRIVE:
+                inbox[0].append(ev[3])
+                try_start(0)
+            elif op == _RETRY:
+                attempt(ev[3], ev[4])
+            elif op == _KILL:
+                nd = ev[3]
+                down.add(nd)
+                epoch[nd] += 1
+                if nd in spares:
+                    spares.remove(nd)
+                log.append((now, f"node {nd} FAILED"))
+                for k in range(n_stages):
+                    if node[k] == nd:
+                        heappush(q, (now + resched_delay, cnt(), _RESCHED, k))
+            elif op == _REVIVE:
+                nd = ev[3]
+                down.discard(nd)
+                log.append((now, f"node {nd} recovered"))
+                hosted = [k for k in range(n_stages) if node[k] == nd]
+                if hosted:
+                    for k in hosted:
+                        try_start(k)
+                else:
+                    release(nd)
+            elif op == _RESCHED:
+                do_reschedule(ev[3], False)
+            elif op == _DROP:
+                f = faults[ev[3]]
+                saved = bwmat[f.a, f.b]
+                bwmat[f.a, f.b] = bwmat[f.b, f.a] = 0.0
+                log.append((now, f"link ({f.a},{f.b}) DOWN"))
+                heappush(q, (now + f.duration_s, cnt(), _RESTORE,
+                             f.a, f.b, saved))
+            elif op == _RESTORE:
+                a, b, saved = ev[3:6]
+                bwmat[a, b] = bwmat[b, a] = saved
+                log.append((now, f"link ({a},{b}) restored"))
+            elif op == _SWEEP:
+                vals = [np.mean(svc[k][-5:]) for k in range(1, n_stages)
+                        if svc[k]]
+                med = np.median(vals) if vals else None
+                if med:
+                    for k in range(1, n_stages):
+                        if (svc[k] and spares
+                                and np.mean(svc[k][-5:])
+                                > cfg.straggler_factor * med):
+                            log.append((now, f"stage {k}: straggler on node "
+                                             f"{node[k]}, migrating"))
+                            do_reschedule(k, True)
+                if len(completed_t) < n_batches:
+                    heappush(q, (now + cfg.straggler_check_s, cnt(), _SWEEP))
+
+        return summarize(np.array(completed_t), np.array(completed_e), log)
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def simulate(cluster: ClusterGraph, nodes, boundary_bytes, compute_flops,
+             cfg: EmulatorConfig | None = None, *,
+             n_batches: int, duration_s: float,
+             arrival_rate_hz: float | None = None,
+             faults=(), rng: np.random.Generator | int = 0,
+             engine: str = "auto") -> dict:
+    """Emulate one plan; metrics-identical to ``PipelineEmulator``.
+
+    ``faults`` is a declarative list of :class:`NodeFault`/:class:`LinkFault`
+    (the reference wires the same list through ``FaultInjector`` *before*
+    ``run`` — event ordering replicates that).  Engines:
+
+    * ``"auto"`` — calendar when fault-free (no faults, no straggler
+      migration, every pipeline link up), else events;
+    * ``"calendar"`` / ``"events"`` — force a fast path;
+    * ``"reference"`` — the closure-based reference loop (on a
+      bandwidth-copied cluster, so callers never see fault mutations).
+    """
+    cfg = cfg or EmulatorConfig()
+    if engine == "reference":
+        ref_cluster = ClusterGraph(bw=cluster.bw.copy(), pos=cluster.pos,
+                                   labels=cluster.labels,
+                                   compute_scale=cluster.compute_scale)
+        emu = PipelineEmulator(ref_cluster, nodes, boundary_bytes,
+                               compute_flops, cfg, rng)
+        if faults:
+            FaultInjector(emu).schedule(faults)
+        return emu.run(n_batches, duration_s, arrival_rate_hz)
+
+    gen = np.random.default_rng(rng) if isinstance(rng, int) else rng
+    arrivals = poisson_arrivals(n_batches, arrival_rate_hz, gen)
+    comp, send = _stage_constants(cluster, nodes, boundary_bytes,
+                                  compute_flops, cfg)
+    if engine == "auto":
+        fault_free = (not faults and not cfg.enable_straggler_migration
+                      and all(np.isfinite(s) for s in send))
+        engine = "calendar" if fault_free else "events"
+    if engine == "calendar":
+        if faults or cfg.enable_straggler_migration:
+            raise ValueError("calendar engine is fault-free only")
+        times, e2e = _calendar_run(arrivals, comp, send, duration_s)
+        return summarize(times, e2e, [])
+    if engine == "events":
+        return FlatEventEngine(cluster, nodes, boundary_bytes, compute_flops,
+                               cfg).run(arrivals, duration_s, faults)
+    raise ValueError(f"unknown engine {engine!r}")

@@ -1,4 +1,16 @@
-"""Fault injection schedules (the ChaosMesh analogue)."""
+"""Fault injection schedules (the ChaosMesh analogue).
+
+Two layers:
+
+* declarative fault records (:class:`NodeFault` / :class:`LinkFault`) —
+  consumed either by :class:`FaultInjector` (reference engine, imperative
+  scheduling) or passed directly to ``engine.simulate(faults=...)`` (fast
+  flat event engine, which replicates the injector's scheduling order);
+* Monte-Carlo fault *models* (:class:`RandomNodeFaults` /
+  :class:`RandomLinkFaults`) — draw a deterministic fault schedule per
+  sweep seed, for multi-seed fault-tolerance curves
+  (``repro.emulator.sweep``).
+"""
 
 from __future__ import annotations
 
@@ -7,6 +19,10 @@ from dataclasses import dataclass
 import numpy as np
 
 from .pipeline import PipelineEmulator
+
+# keeps each fault model's draw stream independent of the arrival stream,
+# which seeds the generator with the bare cell seed
+_FAULT_STREAM = 0xFA017
 
 
 @dataclass
@@ -23,6 +39,49 @@ class LinkFault:
     a: int
     b: int
     duration_s: float
+
+
+@dataclass(frozen=True)
+class RandomNodeFaults:
+    """Kill ``n_faults`` distinct pipeline nodes at uniform times in
+    ``window_s``; optionally recover each after ``recover_after_s``.
+
+    ``draw(seed, nodes)`` is deterministic per seed and independent of the
+    cell's arrival stream."""
+    n_faults: int = 1
+    window_s: tuple[float, float] = (5.0, 60.0)
+    recover_after_s: float | None = None
+    include_dispatcher: bool = False
+
+    def draw(self, seed: int, nodes) -> list[NodeFault]:
+        rng = np.random.default_rng([int(seed), _FAULT_STREAM])
+        cand = list(nodes) if self.include_dispatcher else list(nodes[1:])
+        k = min(self.n_faults, len(cand))
+        picks = rng.choice(len(cand), size=k, replace=False)
+        times = np.sort(rng.uniform(self.window_s[0], self.window_s[1],
+                                    size=k))
+        return [NodeFault(float(t), int(cand[i]), self.recover_after_s)
+                for t, i in zip(times, picks)]
+
+
+@dataclass(frozen=True)
+class RandomLinkFaults:
+    """Drop ``n_faults`` pipeline hops (stage k -> k+1 links) at uniform
+    times in ``window_s`` for ``duration_s`` each."""
+    n_faults: int = 1
+    window_s: tuple[float, float] = (5.0, 60.0)
+    duration_s: float = 10.0
+
+    def draw(self, seed: int, nodes) -> list[LinkFault]:
+        rng = np.random.default_rng([int(seed), _FAULT_STREAM, 1])
+        n_hops = len(nodes) - 1
+        k = min(self.n_faults, n_hops)
+        picks = rng.choice(n_hops, size=k, replace=False)
+        times = np.sort(rng.uniform(self.window_s[0], self.window_s[1],
+                                    size=k))
+        return [LinkFault(float(t), int(nodes[i]), int(nodes[i + 1]),
+                          self.duration_s)
+                for t, i in zip(times, picks)]
 
 
 class FaultInjector:

@@ -13,17 +13,29 @@ batch until the receiver acks, so node/link failures never lose data — the
 sender reconnects (with retry backoff) and resends, exactly like the
 paper's TCP-reconnect loops.  Node failures evict the pod; after a
 detection + reschedule delay (Kubernetes analogue) the partition restarts
-on a healthy spare node and the upstream neighbour reconnects.
+on a healthy spare node and the upstream neighbour reconnects.  In-flight
+work is tracked by the node it *started* on (``_node_epoch``): compute or
+transfers that were running on a node when it died are lost and replayed,
+even if the pod has already been rescheduled to a healthy replacement by
+the time the stale event fires.  Nodes that recover after their pod moved
+elsewhere rejoin the spare pool.
 
 Straggler mitigation (beyond paper, DESIGN.md §5): when a node's observed
 service time exceeds ``straggler_factor`` x the fleet median, the runtime
 migrates its partition to the fastest spare node.
+
+This class is the *reference engine*: a readable closure-based event loop.
+``repro.emulator.engine`` implements the fast path (vectorized calendar +
+flat event loop) and must stay metrics-identical — see the emulator
+equivalence contract in ROADMAP.md.  Any semantic change here MUST be
+mirrored in engine.py and the fixture regenerated
+(scripts/gen_emulator_fixture.py) with justification in the PR.
 """
 
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -43,19 +55,64 @@ class EmulatorConfig:
     enable_straggler_migration: bool = False
 
 
+def summarize(times, e2e, events) -> dict:
+    """Metrics from completion times and end-to-end latencies, both in
+    completion order.  Shared by the reference and fast engines so they
+    execute the identical float-op sequence (the emulator equivalence
+    contract pins the outputs hex-exact).
+
+    Span pairs the last completion with the earliest *submission among
+    completed batches* (``(times - e2e).min()``), which stays correct when
+    fault requeues complete batches out of submission order; the tail-rate
+    estimator falls back to completions/span whenever the last-half window
+    has fewer than two distinct completion instants."""
+    times = np.asarray(times, dtype=np.float64)
+    e2e = np.asarray(e2e, dtype=np.float64)
+    n = len(times)
+    if n == 0:
+        return {"completed": 0, "throughput_hz": 0.0,
+                "mean_e2e_s": float("inf"), "p95_e2e_s": float("inf"),
+                "events": list(events)}
+    span = times.max() - (times - e2e).min()
+    # steady-state throughput: inter-completion rate over the last half
+    tail = times[n // 2:]
+    if len(tail) >= 2 and tail[-1] > tail[0]:
+        thr = (len(tail) - 1) / (tail[-1] - tail[0])
+    else:
+        thr = n / max(span, 1e-9)
+    return {"completed": n,
+            "throughput_hz": float(thr),
+            "mean_e2e_s": float(e2e.mean()),
+            "p95_e2e_s": float(np.quantile(e2e, 0.95)),
+            "events": list(events)}
+
+
+def metrics_identical(a: dict, b: dict) -> bool:
+    """The equivalence-contract predicate: two emulator runs produced the
+    same metrics (exact float equality, not approximate).  The single
+    definition shared by benchmarks and tests — extend it here when
+    ``summarize`` grows a field."""
+    return (a["completed"] == b["completed"]
+            and a["throughput_hz"] == b["throughput_hz"]
+            and a["mean_e2e_s"] == b["mean_e2e_s"]
+            and a["p95_e2e_s"] == b["p95_e2e_s"])
+
+
 class _Stage:
     """One partition hosted on a (replaceable) node."""
 
-    def __init__(self, idx, node, compute_s, out_bytes):
+    def __init__(self, idx, node, flops, compute_s, out_bytes):
         self.idx = idx
         self.node = node
-        self.compute_s = compute_s       # seconds per batch on nominal node
+        self.flops = flops               # nominal forward FLOPs (0=dispatcher)
+        self.compute_s = compute_s       # seconds per batch on current node
         self.out_bytes = out_bytes       # compressed boundary bytes (0=last)
         self.busy = False
         self.sending = False             # the link carries one batch at a time
         self.outbox = deque()
         self.inbox = deque()
         self.unacked = None              # batch held until ack (reliability)
+        self.compute_token = 0           # bumped per compute start (races)
         self.service_times: list[float] = []
 
 
@@ -75,23 +132,37 @@ class PipelineEmulator:
         self.sim = Simulator()
         self.down: set[int] = set()
         self.spares = [n for n in range(cluster.n) if n not in nodes]
+        # per-node death counter: in-flight work checks the epoch of the node
+        # it started on, so a kill is detected even after the pod rescheduled
+        self._node_epoch = [0] * cluster.n
         n_parts = len(boundary_bytes)
         # stage 0 = dispatcher (no compute), stages 1..n = partitions
         self.stages: list[_Stage] = []
         for k in range(n_parts + 1):
-            comp = 0.0 if k == 0 else (
-                compute_flops[k - 1] / self.cfg.node_flops
-                / cluster.compute_scale[nodes[k]])
+            flops = 0.0 if k == 0 else compute_flops[k - 1]
             outb = boundary_bytes[k] if k < n_parts else 0.0
-            self.stages.append(_Stage(k, nodes[k], comp, outb))
+            self.stages.append(_Stage(k, nodes[k], flops,
+                                      self._compute_s(flops, nodes[k]), outb))
         self.completed: list[tuple[float, float]] = []   # (t_done, e2e)
         self._next_id = 0
 
-    # -- network helpers ----------------------------------------------------
+    # -- helpers ------------------------------------------------------------
+    def _compute_s(self, flops, node) -> float:
+        if flops == 0.0:
+            return 0.0
+        return flops / self.cfg.node_flops / self.cluster.compute_scale[node]
+
     def _bw(self, a: int, b: int) -> float:
         if a in self.down or b in self.down:
             return 0.0
         return self.cluster.bw[a, b]
+
+    def _release(self, node: int) -> None:
+        """Return a healthy node that hosts no stage to the spare pool (a
+        recovered, already-replaced node is capacity again)."""
+        if (node not in self.down and node not in self.spares
+                and all(s.node != node for s in self.stages)):
+            self.spares.append(node)
 
     # -- batch flow ---------------------------------------------------------
     def submit(self, t_arrival: float) -> None:
@@ -110,22 +181,36 @@ class PipelineEmulator:
         if st.busy or not st.inbox or st.node in self.down:
             return
         st.busy = True
+        st.compute_token += 1
+        token = st.compute_token
+        node0 = st.node
+        epoch0 = self._node_epoch[node0]
         batch = st.inbox.popleft()
         t0 = self.sim.now
 
         def done():
-            st.busy = False
-            if st.node in self.down:          # died mid-compute: requeue
+            # ``current`` is False when a reschedule cleared ``busy`` and a
+            # newer compute started meanwhile: this result must not touch
+            # the busy flag or restart the stage.
+            current = token == st.compute_token
+            if current:
+                st.busy = False
+            if self._node_epoch[node0] != epoch0:
+                # host died after this compute started: the work is lost,
+                # replay it wherever the stage lives now
                 st.inbox.appendleft(batch)
+                if current:
+                    self._try_start(k)
                 return
-            if k > 0:
+            if current and k > 0:
                 st.service_times.append(self.sim.now - t0)
             if st.idx == len(self.stages) - 1:
                 self.completed.append((self.sim.now,
                                        self.sim.now - batch["t0"]))
             else:
                 self._send(k, batch)
-            self._try_start(k)
+            if current:
+                self._try_start(k)
 
         self.sim.after(st.compute_s, done)
 
@@ -145,15 +230,24 @@ class PipelineEmulator:
     def _attempt_send(self, k: int, batch) -> None:
         st = self.stages[k]
         nxt = self.stages[k + 1]
-        bw = self._bw(st.node, nxt.node)
+        src, dst = st.node, nxt.node
+        bw = self._bw(src, dst)
         if bw <= 0:                            # link/node down: retry loop
             self.sim.after(self.cfg.retry_s,
                            lambda: self._attempt_send(k, batch))
             return
         dur = st.out_bytes / bw
+        e_src = self._node_epoch[src]
+        e_dst = self._node_epoch[dst]
 
         def delivered():
-            if st.node in self.down or nxt.node in self.down:
+            # the transfer ran between ``src`` and ``dst`` as they were at
+            # attempt time: it is void if either endpoint died meanwhile or
+            # either stage migrated off its endpoint (ack never arrives) —
+            # the reconnect loop then resends to wherever the stage is now.
+            if (self._node_epoch[src] != e_src
+                    or self._node_epoch[dst] != e_dst
+                    or st.node != src or nxt.node != dst):
                 self.sim.after(self.cfg.retry_s,
                                lambda: self._attempt_send(k, batch))
                 return
@@ -167,17 +261,31 @@ class PipelineEmulator:
     # -- faults --------------------------------------------------------------
     def kill_node(self, node: int) -> None:
         self.down.add(node)
+        self._node_epoch[node] += 1
+        if node in self.spares:                # a dead spare must not be picked
+            self.spares.remove(node)
         self.sim.note(f"node {node} FAILED")
-        hit = [s for s in self.stages if s.node == node]
-        for st in hit:
+        for st in [s for s in self.stages if s.node == node]:
             self.sim.after(self.cfg.detection_s + self.cfg.reschedule_s,
                            lambda st=st: self._reschedule(st))
 
     def revive_node(self, node: int) -> None:
         self.down.discard(node)
         self.sim.note(f"node {node} recovered")
+        hosted = [s for s in self.stages if s.node == node]
+        if hosted:
+            for s in hosted:                   # resume stalled stages in place
+                self._try_start(s.idx)
+        else:
+            self._release(node)                # replaced: back to the pool
 
-    def _reschedule(self, st: _Stage) -> None:
+    def _reschedule(self, st: _Stage, straggler: bool = False) -> None:
+        if not straggler and st.node not in self.down:
+            # the node recovered before the restart landed: keep the pod
+            self.sim.note(f"stage {st.idx}: node {st.node} recovered before "
+                          f"reschedule; pod kept in place")
+            self._try_start(st.idx)
+            return
         if not self.spares:
             self.sim.note(f"stage {st.idx}: NO SPARE NODE — pipeline stalled")
             return
@@ -193,11 +301,14 @@ class PipelineEmulator:
         self.spares.remove(best)
         old = st.node
         st.node = best
+        st.compute_s = self._compute_s(st.flops, best)
+        st.service_times.clear()               # stats belong to the new pod
         st.busy = False
         self.sim.note(f"stage {st.idx}: pod rescheduled {old} -> {best}")
+        self._release(old)                     # straggler swap frees the old node
+        self._try_start(st.idx)
         # the upstream sender's retry loop (TCP reconnect) is already
         # polling; it will resend its unacked batch to the new node.
-        self._try_start(st.idx)
 
     # -- straggler mitigation --------------------------------------------------
     def _straggler_sweep(self) -> None:
@@ -211,7 +322,7 @@ class PipelineEmulator:
                         > self.cfg.straggler_factor * med):
                     self.sim.note(f"stage {st.idx}: straggler on node "
                                   f"{st.node}, migrating")
-                    self._reschedule(st)
+                    self._reschedule(st, straggler=True)
         if len(self.completed) < self._next_id:     # stop when drained
             self.sim.after(self.cfg.straggler_check_s, self._straggler_sweep)
 
@@ -230,29 +341,27 @@ class PipelineEmulator:
         return self.metrics()
 
     def metrics(self) -> dict:
-        if not self.completed:
-            return {"completed": 0, "throughput_hz": 0.0,
-                    "mean_e2e_s": float("inf"), "events": self.sim.log}
-        times = np.array([t for t, _ in self.completed])
-        e2e = np.array([l for _, l in self.completed])
-        span = times.max() - (times.min() - e2e[0])
-        # steady-state throughput: inter-completion rate over the last half
-        tail = times[len(times) // 2:]
-        thr = ((len(tail) - 1) / (tail[-1] - tail[0])
-               if len(tail) > 2 and tail[-1] > tail[0]
-               else len(times) / max(span, 1e-9))
-        return {"completed": len(self.completed),
-                "throughput_hz": float(thr),
-                "mean_e2e_s": float(e2e.mean()),
-                "p95_e2e_s": float(np.quantile(e2e, 0.95)),
-                "events": self.sim.log}
+        return summarize(np.array([t for t, _ in self.completed]),
+                         np.array([l for _, l in self.completed]),
+                         self.sim.log)
 
 
 def emulate_plan(plan, cluster: ClusterGraph, cfg: EmulatorConfig | None = None,
                  n_batches: int = 50, duration_s: float = 10_000.0,
-                 rng=0) -> dict:
-    """Run a SeiferPlan through the emulator."""
-    return PipelineEmulator(
-        cluster, plan.placement.nodes, plan.partition.boundary_sizes,
-        plan.partition.compute_flops, cfg, rng,
-    ).run(n_batches, duration_s)
+                 rng=0, engine: str = "auto") -> dict:
+    """Run a SeiferPlan through the emulator.
+
+    ``engine="auto"`` (default) picks the fast path (metrics-identical to the
+    reference — see the equivalence contract); ``engine="reference"`` forces
+    the closure-based reference loop."""
+    if engine == "reference":
+        return PipelineEmulator(
+            cluster, plan.placement.nodes, plan.partition.boundary_sizes,
+            plan.partition.compute_flops, cfg, rng,
+        ).run(n_batches, duration_s)
+    from .engine import simulate
+    return simulate(cluster, plan.placement.nodes,
+                    plan.partition.boundary_sizes,
+                    plan.partition.compute_flops, cfg,
+                    n_batches=n_batches, duration_s=duration_s,
+                    rng=rng, engine=engine)

@@ -1,0 +1,89 @@
+"""Monte-Carlo plan evaluation: (plan x fault-seed x arrival-rate) sweeps.
+
+Evaluates many emulator cells on the fast engines
+(``repro.emulator.engine``): fault-free cells run on the vectorized
+calendar engine, faulted cells on the flat event engine.  Cross-cell
+structure is exploited where it exists — deterministic cells (no arrival
+rate, no fault model) are identical across seeds, so they are simulated
+once per (plan, rate) and replicated — and within each cell the calendar
+engine is itself vectorized over the whole batch trace.
+
+The per-cell metrics are exactly what ``PipelineEmulator`` would have
+produced (the emulator equivalence contract), so a sweep is a drop-in
+replacement for looping the reference engine — at fleet scale (hundreds of
+nodes, 10k+ batch traces, dozens of seeds) where the reference cannot
+finish inside a benchmark budget (see BENCH_emulator.json).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .engine import simulate
+from .pipeline import EmulatorConfig
+
+
+def evaluate_cells(cluster, nodes, boundary_bytes, compute_flops, *,
+                   cfg: EmulatorConfig | None = None,
+                   seeds=(0,), arrival_rates=(None,),
+                   n_batches: int = 1000, duration_s: float = 1e9,
+                   fault_model=None, engine: str = "auto") -> list[dict]:
+    """One plan, a grid of (seed x arrival-rate) cells.
+
+    ``seeds`` drive both the Poisson arrival stream (bare seed) and the
+    fault schedule (``fault_model.draw(seed, nodes)``, an independent
+    stream).  Returns one dict per cell, in (rate-major, seed-minor) order.
+    """
+    cfg = cfg or EmulatorConfig()
+    cells = []
+    det_cache: dict = {}
+    for rate in arrival_rates:
+        for seed in seeds:
+            faults = fault_model.draw(seed, nodes) if fault_model else ()
+            deterministic = not faults and not rate
+            if deterministic and rate in det_cache:
+                m = det_cache[rate]
+            else:
+                m = simulate(cluster, nodes, boundary_bytes, compute_flops,
+                             cfg, n_batches=n_batches, duration_s=duration_s,
+                             arrival_rate_hz=rate, faults=faults,
+                             rng=int(seed), engine=engine)
+                if deterministic:
+                    det_cache[rate] = m
+            cells.append({
+                "seed": int(seed),
+                "arrival_rate_hz": rate,
+                "n_faults": len(faults),
+                "completed": m["completed"],
+                "throughput_hz": m["throughput_hz"],
+                "mean_e2e_s": m["mean_e2e_s"],
+                "p95_e2e_s": m["p95_e2e_s"],
+                "n_events": len(m["events"]),
+            })
+    return cells
+
+
+def aggregate(cells: list[dict], n_batches: int) -> dict:
+    """Fleet-level summary of a cell grid (one plan)."""
+    if not cells:
+        return {"n_cells": 0, "completion_rate": 0.0,
+                "throughput_hz_median": 0.0, "mean_e2e_s": float("inf"),
+                "p95_e2e_s_worst": float("inf")}
+    completed = np.array([c["completed"] for c in cells], dtype=np.float64)
+    thr = np.array([c["throughput_hz"] for c in cells], dtype=np.float64)
+    mean_e2e = np.array([c["mean_e2e_s"] for c in cells], dtype=np.float64)
+    p95 = np.array([c["p95_e2e_s"] for c in cells], dtype=np.float64)
+    return {
+        "n_cells": len(cells),
+        "completion_rate": float(completed.mean() / max(n_batches, 1)),
+        "throughput_hz_median": float(np.median(thr)),
+        "mean_e2e_s": float(mean_e2e.mean()),
+        "p95_e2e_s_worst": float(p95.max()),
+    }
+
+
+def sweep_plan(plan, cluster, **kw) -> list[dict]:
+    """``evaluate_cells`` for a SeiferPlan."""
+    return evaluate_cells(cluster, plan.placement.nodes,
+                          plan.partition.boundary_sizes,
+                          plan.partition.compute_flops, **kw)

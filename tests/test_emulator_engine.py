@@ -1,0 +1,200 @@
+"""Fast-engine unit/property tests: exactness of the vectorized primitives
+and reference-vs-fast metric equality on randomized scenarios (the
+equivalence fixture pins a curated grid; these fuzz the rest)."""
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterGraph
+from repro.emulator import (EmulatorConfig, LinkFault, NodeFault,
+                            lindley_scan, metrics_identical,
+                            poisson_arrivals, simulate)
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def scan_scalar(a, c):
+    out = np.empty(a.size)
+    prev = -np.inf
+    for i, x in enumerate(a.tolist()):
+        if x < prev:
+            x = prev
+        prev = x + c
+        out[i] = prev
+    return out
+
+
+@pytest.mark.parametrize("regime", ["burst", "overloaded", "critical",
+                                    "underloaded"])
+def test_lindley_scan_bit_exact(regime):
+    rng = np.random.default_rng(hash(regime) % 2**32)
+    for trial in range(60):
+        n = int(rng.integers(1, 500))
+        if regime == "burst":
+            a = np.zeros(n)
+        else:
+            scale = {"overloaded": 0.05, "critical": 1.0,
+                     "underloaded": 10.0}[regime]
+            a = np.add.accumulate(rng.exponential(scale, n))
+        c = float(rng.uniform(0.1, 2.0)) if trial % 5 else 0.0
+        assert np.array_equal(lindley_scan(a, c), scan_scalar(a, c))
+
+
+def test_lindley_scan_empty_and_single():
+    assert lindley_scan(np.zeros(0), 1.0).size == 0
+    assert np.array_equal(lindley_scan(np.array([3.0]), 0.25),
+                          np.array([3.0 + 0.25]))
+
+
+def test_poisson_arrivals_match_reference_stream():
+    # the reference driver: t += float(rng.exponential(1/rate)) per batch
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        t, ref = 0.0, []
+        for _ in range(200):
+            ref.append(t)
+            t += float(rng.exponential(1.0 / 1.7))
+        got = poisson_arrivals(200, 1.7, np.random.default_rng(seed))
+        assert np.array_equal(np.array(ref), got)
+    assert np.array_equal(poisson_arrivals(5, None,
+                                           np.random.default_rng(0)),
+                          np.zeros(5))
+    assert poisson_arrivals(0, 2.0, np.random.default_rng(0)).size == 0
+
+
+# ---------------------------------------------------------------------------
+# randomized reference-vs-fast equivalence
+# ---------------------------------------------------------------------------
+
+
+def random_pipeline(rng, n_extra=3):
+    n_parts = int(rng.integers(1, 5))
+    n_nodes = n_parts + 1 + int(rng.integers(0, n_extra + 1))
+    bw = rng.uniform(1e4, 1e6, (n_nodes, n_nodes))
+    bw = (bw + bw.T) / 2
+    np.fill_diagonal(bw, 0.0)
+    cluster = ClusterGraph(bw=bw,
+                           compute_scale=rng.uniform(0.5, 2.0, n_nodes))
+    nodes = [int(v) for v in rng.permutation(n_nodes)[:n_parts + 1]]
+    boundary = [float(v) for v in rng.uniform(1e3, 1e5, n_parts)]
+    flops = [float(v) for v in rng.uniform(1e8, 2e10, n_parts)]
+    return cluster, nodes, boundary, flops
+
+
+def assert_same(mr, mf):
+    assert metrics_identical(mr, mf)
+    assert ([(float(t), m) for t, m in mr["events"]]
+            == [(float(t), m) for t, m in mf["events"]])
+
+
+def run_both(cluster, nodes, boundary, flops, cfg=None, **kw):
+    mr = simulate(cluster, nodes, boundary, flops, cfg,
+                  engine="reference", **kw)
+    mf = simulate(cluster, nodes, boundary, flops, cfg,
+                  engine="auto", **kw)
+    assert_same(mr, mf)
+    return mr
+
+
+def test_fault_free_random_equivalence():
+    rng = np.random.default_rng(11)
+    for trial in range(25):
+        cluster, nodes, boundary, flops = random_pipeline(rng)
+        run_both(cluster, nodes, boundary, flops,
+                 n_batches=int(rng.integers(1, 60)),
+                 duration_s=[1e9, 40.0][trial % 2],
+                 arrival_rate_hz=[None, 5.0, 0.2][trial % 3],
+                 rng=trial)
+
+
+def test_faulted_random_equivalence():
+    rng = np.random.default_rng(12)
+    for trial in range(25):
+        cluster, nodes, boundary, flops = random_pipeline(rng)
+        kind = trial % 3
+        if kind == 0:
+            faults = [NodeFault(float(rng.uniform(1, 30)), nodes[1])]
+        elif kind == 1:
+            faults = [NodeFault(float(rng.uniform(1, 30)), nodes[1],
+                                recover_after_s=float(rng.uniform(1, 20)))]
+        else:
+            faults = [LinkFault(float(rng.uniform(1, 20)), nodes[0],
+                                nodes[1], float(rng.uniform(1, 15)))]
+        run_both(cluster, nodes, boundary, flops,
+                 n_batches=int(rng.integers(1, 50)),
+                 duration_s=[1e9, 60.0][trial % 2],
+                 arrival_rate_hz=[None, 2.0][trial % 2],
+                 faults=faults, rng=trial)
+
+
+def test_straggler_random_equivalence():
+    rng = np.random.default_rng(13)
+    for trial in range(6):
+        cluster, nodes, boundary, flops = random_pipeline(rng)
+        cluster.compute_scale[nodes[1]] = 0.05
+        cfg = EmulatorConfig(enable_straggler_migration=True,
+                             straggler_check_s=5.0)
+        run_both(cluster, nodes, boundary, flops, cfg,
+                 n_batches=25, duration_s=1e9,
+                 arrival_rate_hz=[None, 1.0][trial % 2], rng=trial)
+
+
+# ---------------------------------------------------------------------------
+# engine selection
+# ---------------------------------------------------------------------------
+
+
+def test_auto_falls_back_to_events_on_dead_link():
+    # a zero-bandwidth pipeline hop means the retry loop, which only the
+    # event engines model; auto must not pick the calendar path
+    bw = np.full((3, 3), 1e6)
+    np.fill_diagonal(bw, 0.0)
+    bw[1, 2] = bw[2, 1] = 0.0
+    cluster = ClusterGraph(bw=bw)
+    kw = dict(n_batches=5, duration_s=30.0)
+    mr = simulate(cluster, [0, 1, 2], [1e4, 1e4], [1e9, 1e9],
+                  engine="reference", **kw)
+    mf = simulate(cluster, [0, 1, 2], [1e4, 1e4], [1e9, 1e9],
+                  engine="auto", **kw)
+    assert_same(mr, mf)
+    assert mr["completed"] == 0
+
+
+def test_calendar_engine_rejects_faults():
+    bw = np.full((3, 3), 1e6)
+    np.fill_diagonal(bw, 0.0)
+    cluster = ClusterGraph(bw=bw)
+    with pytest.raises(ValueError):
+        simulate(cluster, [0, 1, 2], [1e4, 1e4], [1e9, 1e9],
+                 n_batches=5, duration_s=1e9,
+                 faults=[NodeFault(5.0, 1)], engine="calendar")
+
+
+def test_flat_engine_instance_is_reusable_after_unrestored_link_fault():
+    # a link fault still down at end-of-run must not leak into the next
+    # run() on the same engine instance (bw is copied per run)
+    from repro.emulator import FlatEventEngine
+    bw = np.full((4, 4), 1e6)
+    np.fill_diagonal(bw, 0.0)
+    cluster = ClusterGraph(bw=bw)
+    eng = FlatEventEngine(cluster, [0, 1, 2], [1e4, 1e4], [1e9, 1e9])
+    arrivals = np.zeros(5)
+    m1 = eng.run(arrivals, 20.0, faults=[LinkFault(0.015, 0, 1, 1e6)])
+    assert m1["completed"] < 5                   # outage never lifts in-run
+    m2 = eng.run(arrivals, 1e9)
+    assert m2["completed"] == 5                  # fresh run, healthy links
+    assert np.array_equal(cluster.bw, bw)        # caller never mutated
+
+
+def test_reference_engine_does_not_mutate_cluster():
+    bw = np.full((4, 4), 1e6)
+    np.fill_diagonal(bw, 0.0)
+    cluster = ClusterGraph(bw=bw)
+    before = cluster.bw.copy()
+    simulate(cluster, [0, 1, 2], [1e4, 1e4], [1e9, 1e9],
+             n_batches=5, duration_s=20.0,
+             faults=[LinkFault(1.0, 0, 1, 1e6)],   # never restored in-run
+             engine="reference")
+    assert np.array_equal(cluster.bw, before)

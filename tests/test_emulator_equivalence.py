@@ -1,0 +1,54 @@
+"""Emulator-equivalence contract: fast engines == reference, bit-exact.
+
+The fixture (tests/data/emulator_equivalence.json) pins the reference
+``PipelineEmulator`` observables (completed, throughput, mean/p95 E2E —
+floats as hex — plus the full event log) over the scenario grid in
+``repro.emulator.equivalence``.  Every scenario is replayed through BOTH
+the reference engine and the fast path (``engine="auto"``: calendar for
+fault-free cells, flat event loop for faulted ones); each must match the
+fixture exactly.  Only a PR that *intentionally* changes emulator
+semantics — in both engines, per the ROADMAP lockstep obligation — may
+regenerate it (scripts/gen_emulator_fixture.py) and must say so.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.emulator import equivalence
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "emulator_equivalence.json")
+
+with open(FIXTURE) as f:
+    FIX = json.load(f)
+SCN = {sc["id"]: sc for sc in equivalence.scenarios()}
+
+
+def test_fixture_matches_scenario_grid():
+    assert set(SCN) == set(FIX), (
+        "scenario grid and fixture diverged; regenerate via "
+        "scripts/gen_emulator_fixture.py and justify in the PR")
+
+
+def test_fixture_exercises_both_engines():
+    ff = [k for k in FIX if k.startswith("ff/")]
+    faulted = [k for k in FIX if not k.startswith("ff/")]
+    assert len(ff) >= 6, "fixture must cover the calendar engine"
+    assert len(faulted) >= 6, "fixture must cover the flat event engine"
+    assert any(v["completed"] < SCN[k]["n_batches"]
+               for k, v in FIX.items()), \
+        "fixture must include a truncated/stalled cell"
+    assert any("straggler" in msg for v in FIX.values()
+               for _, msg in v["events"]), \
+        "fixture must include a straggler migration"
+
+
+@pytest.mark.parametrize("sid", sorted(SCN))
+def test_reference_and_fast_match_fixture(sid):
+    sc = SCN[sid]
+    assert equivalence.run_scenario(sc, "reference") == FIX[sid], \
+        "reference engine drifted from the pinned fixture"
+    assert equivalence.run_scenario(sc, "auto") == FIX[sid], \
+        "fast engine diverged from the reference (lockstep violation)"

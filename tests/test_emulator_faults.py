@@ -1,0 +1,200 @@
+"""Emulator fault-path coverage: the compute/reschedule race, spare-pool
+recycling on revive, stall/straggler/link-loss branches, and the robust
+metrics estimators (ISSUE 3 satellites)."""
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterGraph
+from repro.emulator import (EmulatorConfig, FaultInjector, LinkFault,
+                            NodeFault, PipelineEmulator, summarize)
+
+BW = 1e6          # uniform link bandwidth, bytes/s
+OUT = 1e4         # boundary bytes -> 0.01 s per hop
+
+
+def uniform_cluster(n, scale=None):
+    bw = np.full((n, n), BW)
+    np.fill_diagonal(bw, 0.0)
+    return ClusterGraph(bw=bw, compute_scale=scale)
+
+
+def make_emu(n_nodes, compute_s=(1.0, 1.0), scale=None, **cfg_kw):
+    """Dispatcher on node 0, stage k on node k; compute_s per stage on a
+    nominal (scale 1.0) node."""
+    cluster = uniform_cluster(n_nodes, scale)
+    cfg = EmulatorConfig(**cfg_kw)
+    nodes = list(range(len(compute_s) + 1))
+    flops = [s * cfg.node_flops for s in compute_s]
+    return PipelineEmulator(cluster, nodes, [OUT] * len(compute_s), flops,
+                            cfg)
+
+
+class TestComputeRescheduleRace:
+    def test_batch_killed_mid_compute_is_replayed_not_completed(self):
+        # stage 1 computes for 30 s; its node dies at t=5 and the pod is
+        # rescheduled at t=15 — before the stale compute event fires at
+        # t=30.01.  Pre-fix, done() saw the *new* healthy node and counted
+        # the dead node's compute as finished (~t=31); post-fix the work
+        # replays on the replacement and finishes at ~t=61.
+        emu = make_emu(5, compute_s=(30.0, 1.0))
+        FaultInjector(emu).schedule([NodeFault(5.0, 1)])
+        m = emu.run(1, 1e6)
+        assert m["completed"] == 1
+        assert any("rescheduled 1 ->" in msg for _, msg in m["events"])
+        assert m["mean_e2e_s"] > 59.0, \
+            "batch completed from a node that died mid-compute"
+
+    def test_transient_death_mid_compute_is_still_detected(self):
+        # the node dies AND recovers while the compute event is in flight:
+        # membership in `down` at done-time misses it, the epoch does not
+        emu = make_emu(5, compute_s=(30.0, 1.0))
+        FaultInjector(emu).schedule([NodeFault(5.0, 1, recover_after_s=2.0)])
+        m = emu.run(1, 1e6)
+        assert m["completed"] == 1
+        assert m["mean_e2e_s"] > 35.0, \
+            "batch survived a mid-compute node crash+recovery"
+
+
+class TestSparePool:
+    def test_revived_replaced_node_rejoins_spares(self):
+        emu = make_emu(5, compute_s=(30.0, 1.0))
+        FaultInjector(emu).schedule([NodeFault(5.0, 1,
+                                               recover_after_s=35.0)])
+        m = emu.run(1, 1e6)
+        assert m["completed"] == 1
+        assert emu.stages[1].node != 1          # pod moved to a spare
+        assert 1 in emu.spares                  # recovered node is capacity
+
+    def test_long_fault_trace_outlives_initial_spare_pool(self):
+        # one spare (node 3), three kill+recover cycles targeting whichever
+        # node hosts stage 1: pre-fix the pool exhausts on the second kill
+        # and the pipeline stalls forever
+        emu = make_emu(4, compute_s=(0.2, 0.05))
+        FaultInjector(emu).schedule([
+            NodeFault(20.0, 1, recover_after_s=25.0),
+            NodeFault(55.0, 3, recover_after_s=25.0),
+            NodeFault(90.0, 1, recover_after_s=25.0)])
+        m = emu.run(400, 1e6)
+        assert m["completed"] == 400
+        resched = [msg for _, msg in m["events"] if "rescheduled" in msg]
+        assert len(resched) == 3
+        assert "stage 1: pod rescheduled 1 -> 3" in resched[0]
+        assert "stage 1: pod rescheduled 3 -> 1" in resched[1]
+        assert "stage 1: pod rescheduled 1 -> 3" in resched[2]
+
+    def test_dead_spare_is_never_picked(self):
+        emu = make_emu(5, compute_s=(0.2, 0.05))   # spares [3, 4]
+        FaultInjector(emu).schedule([NodeFault(1.0, 3),   # spare dies first
+                                     NodeFault(5.0, 1)])
+        m = emu.run(50, 1e6)
+        assert m["completed"] == 50
+        assert any("rescheduled 1 -> 4" in msg for _, msg in m["events"])
+
+    def test_no_spare_stall_is_reported(self):
+        emu = make_emu(3, compute_s=(0.2, 0.05))   # no spares at all
+        FaultInjector(emu).schedule([NodeFault(5.0, 1)])
+        m = emu.run(50, 100.0)
+        assert m["completed"] < 50
+        assert any("NO SPARE NODE" in msg for _, msg in m["events"])
+
+    def test_recovery_before_reschedule_keeps_pod_in_place(self):
+        emu = make_emu(5, compute_s=(0.5, 0.05))
+        FaultInjector(emu).schedule([NodeFault(5.0, 1, recover_after_s=3.0)])
+        m = emu.run(30, 1e6)
+        assert m["completed"] == 30
+        assert any("recovered before reschedule" in msg
+                   for _, msg in m["events"])
+        assert not any("rescheduled" in msg for _, msg in m["events"])
+        assert emu.stages[1].node == 1
+
+
+class TestStragglerMigration:
+    def setup_emus(self):
+        # three compute stages: with only two, the fleet median is dragged
+        # up by the straggler itself and the 3x threshold never trips
+        out = []
+        for migrate in (False, True):
+            scale = np.ones(8)
+            scale[1] = 0.05                     # stage-1 node is 20x slow
+            emu = make_emu(8, compute_s=(0.5, 0.1, 0.1), scale=scale,
+                           enable_straggler_migration=migrate,
+                           straggler_check_s=5.0)
+            out.append(emu)
+        return out
+
+    def test_migration_triggers_and_moves_to_nominal_speed(self):
+        slow, mig = self.setup_emus()
+        m_slow = slow.run(20, 1e6)
+        m_mig = mig.run(20, 1e6)
+        assert m_mig["completed"] == 20
+        assert any("straggler" in msg for _, msg in m_mig["events"])
+        st = mig.stages[1]
+        assert st.node != 1
+        # satellite: the migrated pod's service time is recomputed for the
+        # new node (pre-fix it kept the straggler's compute_s forever)
+        assert st.compute_s == pytest.approx(0.5)
+        assert m_mig["mean_e2e_s"] < m_slow["mean_e2e_s"]
+
+
+class TestLinkLossAckResend:
+    def run_once(self, faults):
+        emu = make_emu(4, compute_s=(0.5, 0.05))
+        if faults:
+            FaultInjector(emu).schedule(faults)
+        return emu, emu.run(20, 1e6)
+
+    def test_no_loss_no_duplicates_after_link_outage(self):
+        _, m_ok = self.run_once([])
+        # t=0.05: mid-stream — the dispatcher has delivered ~5 of 20
+        # batches when the hop drops for 10 s
+        emu, m = self.run_once([LinkFault(0.05, 0, 1, 10.0)])
+        assert m["completed"] == 20             # every batch exactly once
+        assert len(emu.completed) == 20
+        assert any("link (0,1) DOWN" in msg for _, msg in m["events"])
+        assert any("link (0,1) restored" in msg for _, msg in m["events"])
+        # the outage stalls the ack'd stream: resends delay completion
+        assert m["mean_e2e_s"] > m_ok["mean_e2e_s"]
+
+
+class TestMetricsEstimators:
+    def test_span_pairs_earliest_submission_not_first_completion(self):
+        # batch submitted at t=1 completes second (e2e 10); batch submitted
+        # at t=9 completes first.  The old estimator computed span =
+        # times.min() - e2e[0] = 11 - 9 = 2 s and reported 1 Hz.
+        m = summarize(np.array([10.0, 11.0]), np.array([1.0, 10.0]), [])
+        assert m["throughput_hz"] == 2 / 10.0
+        assert m["completed"] == 2
+
+    def test_single_completion(self):
+        m = summarize(np.array([5.0]), np.array([2.0]), [])
+        assert m["throughput_hz"] == 1 / 2.0
+        assert m["mean_e2e_s"] == 2.0
+        assert m["p95_e2e_s"] == 2.0
+
+    def test_two_completions_use_span_fallback(self):
+        m = summarize(np.array([4.0, 6.0]), np.array([4.0, 4.0]), [])
+        assert m["throughput_hz"] == 2 / 6.0
+
+    def test_three_completions_use_tail_rate(self):
+        m = summarize(np.array([1.0, 2.0, 4.0]), np.array([1.0, 1.0, 1.0]),
+                      [])
+        assert m["throughput_hz"] == 1 / 2.0    # (2-1)/(4-2)
+
+    def test_simultaneous_completions_do_not_divide_by_zero(self):
+        m = summarize(np.array([5.0, 5.0, 5.0]), np.array([5.0, 5.0, 5.0]),
+                      [])
+        assert m["throughput_hz"] == 3 / 5.0
+
+    def test_empty(self):
+        m = summarize(np.zeros(0), np.zeros(0), [("x", "y")])
+        assert m["completed"] == 0
+        assert m["throughput_hz"] == 0.0
+        assert m["mean_e2e_s"] == float("inf")
+        assert m["p95_e2e_s"] == float("inf")
+        assert m["events"] == [("x", "y")]
+
+    def test_p95_matches_quantile(self):
+        e2e = np.linspace(1.0, 2.0, 40)
+        m = summarize(np.linspace(10, 20, 40), e2e, [])
+        assert m["p95_e2e_s"] == float(np.quantile(e2e, 0.95))

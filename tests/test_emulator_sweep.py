@@ -1,0 +1,150 @@
+"""Monte-Carlo sweep API: cell grids, fault models, aggregation, and
+``api.evaluate_plans`` ranking."""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnns import resnet50
+from repro.core import partition_and_place, random_geometric_cluster
+from repro.core.api import evaluate_plans
+from repro.emulator import (RandomLinkFaults, RandomNodeFaults, aggregate,
+                            evaluate_cells, simulate)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = resnet50()
+    cluster = random_geometric_cluster(14, rng=11)
+    plan = partition_and_place(g, cluster, 30e6, n_classes=3, rng=2)
+    return cluster, plan
+
+
+def plan_args(plan):
+    return (plan.placement.nodes, plan.partition.boundary_sizes,
+            plan.partition.compute_flops)
+
+
+class TestFaultModels:
+    def test_random_node_faults_deterministic_and_valid(self):
+        nodes = [7, 3, 9, 5]
+        model = RandomNodeFaults(n_faults=2, window_s=(5.0, 50.0),
+                                 recover_after_s=20.0)
+        a = model.draw(4, nodes)
+        b = model.draw(4, nodes)
+        assert a == b                            # same seed, same schedule
+        assert a != model.draw(5, nodes)
+        assert len(a) == 2
+        assert len({f.node for f in a}) == 2     # distinct targets
+        for f in a:
+            assert f.node in nodes[1:]           # dispatcher spared
+            assert 5.0 <= f.time_s <= 50.0
+            assert f.recover_after_s == 20.0
+
+    def test_random_link_faults_hit_pipeline_hops(self):
+        nodes = [7, 3, 9, 5]
+        model = RandomLinkFaults(n_faults=2, duration_s=4.0)
+        faults = model.draw(0, nodes)
+        hops = {(nodes[i], nodes[i + 1]) for i in range(3)}
+        assert len(faults) == 2
+        for f in faults:
+            assert (f.a, f.b) in hops
+            assert f.duration_s == 4.0
+
+
+class TestEvaluateCells:
+    def test_grid_shape_and_determinism(self, setup):
+        cluster, plan = setup
+        kw = dict(seeds=(0, 1, 2), arrival_rates=(None, 1.0), n_batches=40)
+        cells = evaluate_cells(cluster, *plan_args(plan), **kw)
+        assert len(cells) == 6
+        assert cells == evaluate_cells(cluster, *plan_args(plan), **kw)
+        # rate-major, seed-minor order
+        assert [c["arrival_rate_hz"] for c in cells] == [None] * 3 + [1.0] * 3
+        assert [c["seed"] for c in cells] == [0, 1, 2, 0, 1, 2]
+
+    def test_deterministic_cells_are_identical_across_seeds(self, setup):
+        cluster, plan = setup
+        cells = evaluate_cells(cluster, *plan_args(plan),
+                               seeds=(0, 1, 2, 3), n_batches=40)
+        ref = {k: v for k, v in cells[0].items() if k != "seed"}
+        for c in cells[1:]:
+            assert {k: v for k, v in c.items() if k != "seed"} == ref
+
+    def test_poisson_cells_differ_across_seeds(self, setup):
+        cluster, plan = setup
+        cells = evaluate_cells(cluster, *plan_args(plan), seeds=(0, 1),
+                               arrival_rates=(0.8,), n_batches=40)
+        assert cells[0]["mean_e2e_s"] != cells[1]["mean_e2e_s"]
+
+    def test_cells_match_direct_simulation(self, setup):
+        cluster, plan = setup
+        model = RandomNodeFaults(n_faults=1, window_s=(5.0, 20.0),
+                                 recover_after_s=30.0)
+        cells = evaluate_cells(cluster, *plan_args(plan), seeds=(3,),
+                               n_batches=40, fault_model=model)
+        m = simulate(cluster, *plan_args(plan),
+                     n_batches=40, duration_s=1e9,
+                     faults=model.draw(3, plan.placement.nodes), rng=3)
+        assert cells[0]["completed"] == m["completed"] == 40
+        assert cells[0]["throughput_hz"] == m["throughput_hz"]
+        assert cells[0]["n_faults"] == 1
+        assert cells[0]["n_events"] > 0
+
+    def test_multi_seed_fault_sweep_completes_with_spares(self, setup):
+        cluster, plan = setup
+        model = RandomNodeFaults(n_faults=1, window_s=(5.0, 30.0))
+        cells = evaluate_cells(cluster, *plan_args(plan),
+                               seeds=range(6), n_batches=30,
+                               fault_model=model)
+        agg = aggregate(cells, 30)
+        assert agg["n_cells"] == 6
+        assert agg["completion_rate"] == 1.0     # acks + reschedule: no loss
+        assert np.isfinite(agg["p95_e2e_s_worst"])
+
+    def test_aggregate_empty(self):
+        agg = aggregate([], 10)
+        assert agg["n_cells"] == 0
+        assert agg["completion_rate"] == 0.0
+
+
+class TestEvaluatePlans:
+    def test_ranking_and_fields(self, setup):
+        cluster, _ = setup
+        g = resnet50()
+        plans = [partition_and_place(g, cluster, cap, n_classes=3, rng=2)
+                 for cap in (30e6, 64e6)]
+        rows = evaluate_plans(plans, cluster, seeds=(0, 1),
+                              arrival_rates=(None,), n_batches=30)
+        assert len(rows) == 2
+        assert {r["plan_index"] for r in rows} == {0, 1}
+        for r in rows:
+            assert r["cells"]
+            assert r["completion_rate"] == 1.0
+            assert r["plan"] is plans[r["plan_index"]]
+        # ranked best-first: completion rate desc, then worst p95 asc
+        assert (rows[0]["p95_e2e_s_worst"] <= rows[1]["p95_e2e_s_worst"])
+
+    def test_faulty_plan_ranks_last(self, setup):
+        # a plan swept under injected faults on a spare-less cluster ranks
+        # below the same plan swept fault-free
+        cluster, plan = setup
+        nodes = plan.placement.nodes
+        sub = cluster.bw[np.ix_(nodes, nodes)].copy()
+        from repro.core.cluster import ClusterGraph
+        small = ClusterGraph(bw=sub,
+                             compute_scale=cluster.compute_scale[nodes])
+        remap = list(range(len(nodes)))
+
+        class FakePlacement:
+            pass
+
+        import copy
+        crippled = copy.copy(plan)
+        crippled.placement = copy.copy(plan.placement)
+        crippled.placement.nodes = remap
+
+        model = RandomNodeFaults(n_faults=1, window_s=(2.0, 10.0))
+        rows = evaluate_plans([crippled], small, seeds=(0, 1),
+                              n_batches=20, duration_s=200.0,
+                              fault_model=model)
+        assert rows[0]["completion_rate"] < 1.0
