@@ -53,6 +53,16 @@ def time_us(fn, reps):
     return statistics.median(out), min(out)
 
 
+def time_s(fn, reps):
+    """(median, min) *seconds* over reps of a self-synchronizing callable
+    (one that only returns after its work is observable — e.g. the serve
+    engine's timed_* helpers, which block_until_ready internally).  Same
+    median/min methodology as time_us, for callables that already return
+    their own elapsed seconds or need sub-call sync."""
+    out = [fn() for _ in range(reps)]
+    return statistics.median(out), min(out)
+
+
 def load_bench(path) -> dict | None:
     if not os.path.exists(path):
         return None

@@ -12,6 +12,8 @@
                                 BENCH_emulator.json
   (ours)   roofline             3-term roofline per dry-run cell
   (ours)   planner_scale        planner latency vs BENCH_planner.json
+  (ours)   serve_bench          serving tok/s (jitted fast path vs eager
+                                loop) vs BENCH_serve.json
 """
 
 import argparse
@@ -29,7 +31,7 @@ def main() -> None:
 
     from . import (approx_ratio, emulator_bench, fault_tolerance,
                    latency_grid, partition_points, planner_scale, roofline,
-                   transfer_classes, vs_joint, vs_random)
+                   serve_bench, transfer_classes, vs_joint, vs_random)
 
     suites = {
         "planner_scale": lambda: planner_scale.run(args.reps or 3),
@@ -42,6 +44,7 @@ def main() -> None:
                                                  args.trials),
         "fault_tolerance": lambda: fault_tolerance.run(),
         "emulator_bench": lambda: emulator_bench.run(args.reps or 3),
+        "serve_bench": lambda: serve_bench.run(args.reps or 3),
         "roofline": lambda: roofline.run(),
     }
     print("name,us_per_call,derived")

@@ -1,0 +1,210 @@
+"""Tracked serving benchmark (BENCH_serve.json).
+
+Times the repro.serve fast path against the eager reference loop on the
+smoke presets (real JAX compute on CPU):
+
+* ``prefill/<arch>`` — one jitted prefill (cache allocation included);
+* ``decode/<arch>``  — steady-state greedy decode: prefill outside the
+  clock, DECODE_STEPS jitted steps timed, block_until_ready before the
+  clock stops.  ``naive`` is the eager per-token loop — the >= 5x
+  speedup here is the tentpole acceptance number;
+* ``stream/<arch>``  — a staggered request stream through the slot
+  scheduler (continuous batching) vs serving the same requests one at a
+  time with the eager loop.
+
+Every ``--update`` run asserts the fast path token-identical to the
+reference on the exact cases it times (the equivalence contract, live).
+
+Usage:
+  python -m benchmarks.serve_bench --update [--reps N]  # re-measure + write
+  python -m benchmarks.serve_bench --check  [--reps N]  # CI: fail on >2x
+  python -m benchmarks.serve_bench                      # print, no write
+
+``--check`` re-times the fast path only and fails when any entry's
+best-of-reps exceeds CHECK_RATIO x the committed median (same methodology
+as planner_scale.py / emulator_bench.py; regenerate on a uniformly slower
+host rather than chasing phantom regressions).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import Request, ServeEngine, SlotScheduler
+from repro.serve.equivalence import make_batch
+
+from .common import check_bench, time_s
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+CHECK_RATIO = 2.0           # --check fails on >2x regression vs committed
+DEFAULT_REPS = 5
+
+# one arch per headline family; MoE is benchmarked (throughput) but its
+# stream tokens are not asserted (batch-coupled expert capacity — see
+# repro.serve.scheduler)
+ARCHES = ["granite-3-2b", "mamba2-1.3b", "llama4-maverick-400b-a17b"]
+BATCH, PROMPT_LEN, DECODE_STEPS = 4, 32, 32
+MAX_LEN, KV_BLOCK = 96, 32
+
+STREAM_ARCH = "granite-3-2b"
+STREAM_SLOTS = 4
+# (prompt_len, gen_len) per request — staggered completions force
+# admit/evict churn rather than one synchronized batch
+STREAM_REQS = [(32, 24), (32, 12), (16, 20), (32, 8), (16, 28), (32, 16),
+               (16, 12), (32, 20), (16, 24), (32, 10), (16, 16), (32, 24)]
+
+
+def _engine(arch: str) -> ServeEngine:
+    cfg = get_config(arch, "smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return ServeEngine(cfg, params, max_len=MAX_LEN, kv_block=KV_BLOCK)
+
+
+def _stream_requests(cfg):
+    return [Request(rid=i,
+                    tokens=np.asarray(make_batch(cfg, 1, p, 300 + i)
+                                      ["tokens"]),
+                    gen_len=g)
+            for i, (p, g) in enumerate(STREAM_REQS)]
+
+
+def measure(reps: int, with_naive: bool) -> dict:
+    entries: dict[str, dict] = {}
+
+    for arch in ARCHES:
+        eng = _engine(arch)
+        batch = make_batch(eng.cfg, BATCH, PROMPT_LEN, 42)
+        eng.warmup(batch, DECODE_STEPS + 1)           # compile off the clock
+
+        med, lo = time_s(lambda: eng.timed_prefill(batch), reps)
+        e = {"median_us": med * 1e6, "min_us": lo * 1e6}
+        if with_naive:
+            nmed, _ = time_s(
+                lambda: eng.timed_prefill(batch, engine="reference"), reps)
+            e["naive_median_us"] = nmed * 1e6
+            e["speedup"] = round(nmed / med, 2)
+        entries[f"prefill/{arch}"] = e
+
+        toks = DECODE_STEPS * BATCH
+        med, lo = time_s(lambda: eng.timed_decode(batch, DECODE_STEPS), reps)
+        e = {"median_us": med * 1e6, "min_us": lo * 1e6,
+             "decode_toks_per_s": round(toks / med, 1)}
+        if with_naive:
+            nmed, _ = time_s(
+                lambda: eng.timed_decode(batch, DECODE_STEPS,
+                                         engine="reference"),
+                max(1, reps // 2))
+            e["naive_median_us"] = nmed * 1e6
+            e["naive_toks_per_s"] = round(toks / nmed, 1)
+            e["speedup"] = round(nmed / med, 2)
+            # equivalence contract, live: same tokens from both paths
+            ref = eng.generate(batch, DECODE_STEPS, engine="reference")
+            fast = eng.generate(batch, DECODE_STEPS, engine="fast")
+            assert (ref == fast).all(), \
+                f"{arch}: fast path diverged from reference tokens"
+        entries[f"decode/{arch}"] = e
+
+    # -- mixed request stream (continuous batching) -------------------------
+    eng = _engine(STREAM_ARCH)
+    sched = SlotScheduler(eng, slots=STREAM_SLOTS)
+    reqs = _stream_requests(eng.cfg)
+    total_toks = sum(g for _, g in STREAM_REQS)
+    sched.run(reqs, engine="fast")                    # compile off the clock
+
+    def fast_stream():
+        _, stats = sched.run(reqs, engine="fast")
+        return stats["wall_s"]
+
+    med, lo = time_s(fast_stream, reps)
+    _, stats = sched.run(reqs, engine="fast")
+    e = {"median_us": med * 1e6, "min_us": lo * 1e6,
+         "stream_toks_per_s": round(total_toks / med, 1),
+         "slot_utilization": round(stats["slot_utilization"], 3)}
+    if with_naive:
+        t0 = time.perf_counter()
+        ref_streams, _ = sched.run(reqs, engine="reference")
+        nsec = time.perf_counter() - t0
+        e["naive_median_us"] = nsec * 1e6
+        e["naive_toks_per_s"] = round(total_toks / nsec, 1)
+        e["speedup"] = round(nsec / med, 2)
+        fast_streams, _ = sched.run(reqs, engine="fast")
+        for a, b in zip(ref_streams, fast_streams):
+            assert (a == b).all(), "stream tokens diverged from reference"
+    entries[f"stream/{STREAM_ARCH}"] = e
+    return entries
+
+
+def check(reps: int) -> int:
+    return check_bench("serve_bench", BENCH_PATH,
+                       measure(reps, with_naive=False), CHECK_RATIO)
+
+
+def update(reps: int) -> None:
+    entries = measure(reps, with_naive=True)
+    doc = {
+        "meta": {
+            "reps": reps,
+            "tool": "benchmarks/serve_bench.py --update",
+            "note": ("median microseconds per call; prefill = one jitted "
+                     "prefill incl. cache alloc; decode = "
+                     f"{DECODE_STEPS} steady-state greedy steps x batch "
+                     f"{BATCH} (naive = eager per-token loop); stream = "
+                     f"{len(STREAM_REQS)} staggered requests through "
+                     f"{STREAM_SLOTS} continuous-batching slots; --check "
+                     f"compares best-of-reps with a {CHECK_RATIO}x ratio "
+                     "tolerance"),
+        },
+        "entries": entries,
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    for name, e in sorted(entries.items()):
+        extra = (f" x{e['speedup']} vs naive" if "speedup" in e else "")
+        rate = e.get("decode_toks_per_s") or e.get("stream_toks_per_s")
+        rate = f", {rate} tok/s" if rate else ""
+        print(f"{name}: {e['median_us']:.0f}us{rate}{extra}")
+
+
+def run(reps: int = 3):
+    """benchmarks.run entry point: fast-path timings + committed speedups."""
+    from .common import load_bench
+    committed = load_bench(BENCH_PATH) or {"entries": {}}
+    rows = []
+    for name, e in measure(reps, with_naive=False).items():
+        c = committed["entries"].get(name, {})
+        rows.append({"name": f"serve_bench/{name}",
+                     "us_per_call": e["median_us"],
+                     "derived": f"committed_speedup={c.get('speedup', '')}"})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="measure fast + reference, write BENCH_serve.json")
+    ap.add_argument("--check", action="store_true",
+                    help=f"fail on >{CHECK_RATIO}x regression vs committed")
+    ap.add_argument("--reps", type=int, default=None)
+    args = ap.parse_args()
+    reps = args.reps or (DEFAULT_REPS if (args.update or args.check) else 3)
+    if args.update:
+        update(reps)
+    elif args.check:
+        sys.exit(check(reps))
+    else:
+        for r in run(reps):
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,18 +7,17 @@ real JAX compute per partition, and survive an injected node failure.
 """
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.core import partition_and_place, random_geometric_cluster
 from repro.core.pipeline import lm_block_graph
 from repro.emulator import FaultInjector, NodeFault, PipelineEmulator
-from repro.models import decode_step, init_params, init_serve_cache, prefill
+from repro.models import init_params
 from repro.models.config import ShapeConfig
+from repro.serve import Request, ServeEngine, SlotScheduler
 
 
 def main():
@@ -45,28 +44,29 @@ def main():
     plan = partition_and_place(g, cluster, cap, n_classes=3, rng=8)
     print(plan.describe())
 
-    # ---- 2. real JAX serving: prefill + decode batched requests ------------
-    b = 4
-    n_batches = args.requests // b
+    # ---- 2. real JAX serving: continuous batching via repro.serve ----------
+    # The jitted/donated fast path with a slot scheduler: requests are
+    # admitted into 4 cache slots as they free up, so throughput holds on a
+    # staggered stream (the reference eager loop stays available as
+    # engine="reference" — token-identical, see ROADMAP "Serving-perf
+    # contract").
     tok_key = jax.random.PRNGKey(1)
-    t0 = time.time()
-    total_tokens = 0
-    for i in range(n_batches):
-        prompts = jax.random.randint(jax.random.fold_in(tok_key, i),
-                                     (b, args.prompt_len), 0, cfg.vocab)
-        cache = init_serve_cache(cfg, b, args.prompt_len + args.gen_len)
-        logits, cache = prefill(cfg, params, {"tokens": prompts}, cache)
-        toks = jnp.argmax(logits, -1)
-        outs = [toks]
-        for _ in range(args.gen_len - 1):
-            logits, cache = decode_step(cfg, params, toks, cache)
-            toks = jnp.argmax(logits, -1)
-            outs.append(toks)
-        total_tokens += b * args.gen_len
-    dt = time.time() - t0
+    eng = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen_len,
+                      kv_block=16)
+    reqs = [Request(rid=i,
+                    tokens=np.asarray(jax.random.randint(
+                        jax.random.fold_in(tok_key, i),
+                        (1, args.prompt_len), 0, cfg.vocab)),
+                    gen_len=args.gen_len)
+            for i in range(args.requests)]
+    sched = SlotScheduler(eng, slots=4)
+    sched.run(reqs[:2], engine="fast")          # warm up: trace + compile
+    streams, stats = sched.run(reqs, engine="fast")
+    total_tokens = sum(len(s) for s in streams)
     print(f"\nserved {args.requests} requests "
-          f"({total_tokens} tokens) in {dt:.1f}s "
-          f"-> {total_tokens/dt:.1f} tok/s on CPU")
+          f"({total_tokens} tokens) in {stats['wall_s']:.1f}s "
+          f"-> {total_tokens/stats['wall_s']:.1f} tok/s on CPU "
+          f"(slot utilization {stats['slot_utilization']:.0%})")
 
     # ---- 3. cluster dynamics: the same plan under a node failure -----------
     emu = PipelineEmulator(cluster, plan.placement.nodes,

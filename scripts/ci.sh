@@ -25,4 +25,9 @@ PYTHONPATH=src python -m benchmarks.planner_scale --check --reps 3
 echo "--- smoke: emulator latency vs BENCH_emulator.json"
 # same methodology and 2x best-of-reps tolerance as the planner gate above
 PYTHONPATH=src python -m benchmarks.emulator_bench --check --reps 3
+
+echo "--- smoke: serving throughput vs BENCH_serve.json"
+# same methodology and 2x best-of-reps tolerance; the committed speedups
+# (fast vs eager loop) are re-measured only by --update
+PYTHONPATH=src python -m benchmarks.serve_bench --check --reps 3
 echo "ci: OK"

@@ -1,0 +1,30 @@
+#!/usr/bin/env python
+"""Regenerate the serving-equivalence fixture.
+
+    PYTHONPATH=src python scripts/gen_serve_fixture.py
+
+The fixture pins the *reference* (eager per-token loop) greedy token
+streams over the scenario grid in ``repro.serve.equivalence``; the fast
+engine and the slot scheduler must reproduce them exactly.  Only run this
+when a PR *intentionally* changes serving semantics — in BOTH paths, per
+the lockstep obligation in ROADMAP.md — and say so in the PR description.
+Perf-only PRs must leave the fixture byte-stable.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.serve.equivalence import write_fixture  # noqa: E402
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "..",
+                       "tests", "data", "serve_equivalence.json")
+
+if __name__ == "__main__":
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    fix = write_fixture(FIXTURE)
+    n_sync = sum(1 for k in fix if k.startswith("sync/"))
+    n_stream = len(fix) - n_sync
+    print(f"wrote {len(fix)} scenarios ({n_sync} sync, {n_stream} stream) "
+          f"-> {FIXTURE}")

@@ -14,8 +14,14 @@ BlockSpec reasoning (TPU v5e):
   * causal: kv blocks strictly above the diagonal are skipped via pl.when
     (halves the work vs. the masked dense schedule of the jnp fallback).
 
-GQA: the wrapper (ops.py) folds q-heads and maps each to its kv head, so
-the kernel sees aligned (BH, S, hd) tensors.
+GQA: folded into the k/v BlockSpec index maps — q program ``b`` reads kv
+row ``b // group``, so the wrapper (ops.py) passes k/v with their native
+(B * KV, S, hd) layout and no repeat copies are ever materialized.
+
+Ragged lengths: ``valid_len`` (static) masks keys at positions >= valid_len
+with a -inf bias, making the zero-padded tail exact for non-causal
+attention too (pad *queries* still compute garbage rows; the wrapper
+slices them off).
 """
 
 from __future__ import annotations
@@ -36,7 +42,8 @@ NEG = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
-                  *, causal: bool, scale: float, n_kv: int):
+                  *, causal: bool, scale: float, n_kv: int,
+                  valid_len: int | None):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -46,8 +53,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    # kv blocks strictly above the causal diagonal contribute nothing
-    run = (ki * BK) <= (qi * BQ + BQ - 1) if causal else True
+    # kv blocks strictly above the causal diagonal contribute nothing; for
+    # non-causal, blocks entirely past valid_len are all-masked padding
+    if causal:
+        run = (ki * BK) <= (qi * BQ + BQ - 1)
+    elif valid_len is not None:
+        run = (ki * BK) < valid_len
+    else:
+        run = True
 
     @pl.when(run)
     def _step():
@@ -55,10 +68,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
         k = k_ref[0].astype(jnp.float32)                 # (BK, hd)
         v = v_ref[0].astype(jnp.float32)
         s = q @ k.T                                       # (BQ, BK)
+        kpos = ki * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
         if causal:
             qpos = qi * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
-            kpos = ki * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
             s = jnp.where(kpos <= qpos, s, NEG)
+        if valid_len is not None:
+            s = jnp.where(kpos < valid_len, s, NEG)       # pad keys -> -inf
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
         alpha = jnp.exp(m_prev - m_new)
@@ -73,22 +88,27 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
                     jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
-def flash_attention_pallas(q, k, v, *, causal: bool = True,
+def flash_attention_pallas(q, k, v, *, group: int = 1, causal: bool = True,
+                           valid_len: int | None = None,
                            interpret: bool = True):
-    """q/k/v (BH, S, hd) with BH = batch*q_heads (GQA pre-expanded by the
-    wrapper).  Returns (BH, S, hd)."""
+    """q (BH, S, hd) with BH = batch*q_heads; k/v (BH // group, S, hd) — the
+    GQA mapping q-program -> kv row b // group lives in the BlockSpecs.
+    valid_len: static count of real (non-pad) key rows.  Returns (BH, S, hd).
+    """
     bh, s, hd = q.shape
     assert s % BQ == 0 and s % BK == 0, s
+    assert k.shape[0] * group == bh, (q.shape, k.shape, group)
     grid = (bh, s // BQ, s // BK)
     kern = functools.partial(_flash_kernel, causal=causal,
-                             scale=1.0 / np.sqrt(hd), n_kv=s // BK)
+                             scale=1.0 / np.sqrt(hd), n_kv=s // BK,
+                             valid_len=valid_len)
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, BQ, hd), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, BK, hd), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, BK, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BK, hd), lambda b, i, j: (b // group, j, 0)),
+            pl.BlockSpec((1, BK, hd), lambda b, i, j: (b // group, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, BQ, hd), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),

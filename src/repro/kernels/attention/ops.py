@@ -1,4 +1,4 @@
-"""Jit'd flash-attention wrapper: folds GQA heads, pads sequence."""
+"""Jit'd flash-attention wrapper: folds GQA into the block map, pads seq."""
 
 from __future__ import annotations
 
@@ -15,7 +15,19 @@ INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 @functools.partial(jax.jit, static_argnames=("causal",))
 def flash_attention(q, k, v, causal: bool = True):
-    """q (B,S,H,hd); k/v (B,S,KV,hd) -> (B,S,H,hd)."""
+    """q (B,S,H,hd); k/v (B,S,KV,hd) -> (B,S,H,hd).
+
+    GQA is folded into the kernel's BlockSpec index maps: each of the B*H
+    q-head programs reads its kv head's blocks directly (program b pulls kv
+    row b // group), so the (B, S, H, hd) jnp.repeat copies of k/v are never
+    materialized — at 32k prefill that repeat alone was group x the whole
+    kv cache in HBM traffic.
+
+    Ragged S is zero-padded up to the 128-row block size; padded *keys* are
+    masked inside the kernel with a -inf bias (kpos >= S), which is exact
+    for both causal and non-causal attention.  Padded query rows compute
+    garbage and are sliced off below.
+    """
     b, s, h, hd = q.shape
     kv = k.shape[2]
     g = h // kv
@@ -26,18 +38,10 @@ def flash_attention(q, k, v, causal: bool = True):
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     sp = s + pad
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, sp, hd)
-    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, sp, hd)
-    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, sp, hd)
-    # padded kv rows: mask by pushing their keys to -inf is unnecessary —
-    # causal masking covers the tail for causal; for non-causal, zero-pad
-    # keys produce uniform weight on pad rows only for pad queries (sliced
-    # off below), and real queries attend to pad keys with score 0 which
-    # perturbs the softmax — so for non-causal we mask via a large negative
-    # bias folded into k's last feature... simplest correct route: require
-    # pad == 0 for non-causal (the 32k cells are all BQ-multiples).
-    if pad and not causal:
-        raise ValueError("non-causal flash path requires S % 128 == 0")
-    out = kernel.flash_attention_pallas(qf, kf, vf, causal=causal,
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, sp, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, sp, hd)
+    out = kernel.flash_attention_pallas(qf, kf, vf, group=g, causal=causal,
+                                        valid_len=s if pad else None,
                                         interpret=INTERPRET)
     out = out.reshape(b, h, sp, hd).transpose(0, 2, 1, 3)
     return out[:, :s]

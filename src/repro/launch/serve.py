@@ -1,9 +1,21 @@
 """Serving launcher: `python -m repro.launch.serve --arch <id> [...]`.
 
-Prefill + greedy decode over batched synthetic requests; smoke presets run
-the real model on CPU.  `--plan` additionally prints the SEIFER stage plan
-for the production TPU cluster (the compile-only path for full presets is
-repro.launch.dryrun with --variant serve2d).
+Prefill + greedy decode over batched synthetic requests through
+``repro.serve.ServeEngine``; smoke presets run the real model on CPU.
+
+Timing protocol (steady state, not trace+compile):
+  1. warm up — the first generate traces and compiles every jit signature;
+     its wall time is reported separately as compile time;
+  2. the timed run starts after warmup and every reported number is taken
+     after ``block_until_ready`` (JAX dispatch is async — reading the
+     clock at enqueue time would measure nothing).
+
+``--engine reference`` times the eager per-token loop instead (the
+token-identical oracle; see ROADMAP.md "Serving-perf contract").
+``--stream N`` serves N staggered requests through the continuous-batching
+slot scheduler rather than one synchronized batch.  ``--plan`` prints the
+SEIFER stage plan for the production TPU cluster (the compile-only path
+for full presets is repro.launch.dryrun with --variant serve2d).
 """
 
 from __future__ import annotations
@@ -12,10 +24,12 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.models import decode_step, init_params, init_serve_cache, prefill
+from repro.models import init_params
+from repro.serve import Request, ServeEngine, SlotScheduler
+from repro.serve.equivalence import make_batch
 
 
 def main():
@@ -25,6 +39,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--engine", default="fast",
+                    choices=["fast", "reference"])
+    ap.add_argument("--stream", type=int, default=0, metavar="N",
+                    help="serve N staggered requests via continuous "
+                         "batching instead of one synchronized batch")
     ap.add_argument("--plan", action="store_true",
                     help="print the SEIFER pipeline-stage plan for the "
                          "2-pod production cluster")
@@ -45,27 +64,42 @@ def main():
     key = jax.random.PRNGKey(0)
     params = init_params(cfg, key)
     b, pl, gl = args.batch, args.prompt_len, args.gen_len
-    batch = {"tokens": jax.random.randint(key, (b, pl), 0, cfg.vocab)}
-    if cfg.family == "vlm":
-        batch["vision"] = jax.random.normal(
-            key, (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
-    if cfg.family == "encdec":
-        batch["frames"] = jax.random.normal(key, (b, pl, cfg.d_model),
-                                            jnp.bfloat16)
-    cache = init_serve_cache(cfg, b, pl + gl, batch=batch)
-    t0 = time.time()
-    logits, cache = prefill(cfg, params, batch, cache)
-    toks = jnp.argmax(logits, -1)
-    out = [toks]
-    for _ in range(gl - 1):
-        logits, cache = decode_step(cfg, params, toks, cache, batch)
-        toks = jnp.argmax(logits, -1)
-        out.append(toks)
-    dt = time.time() - t0
+    eng = ServeEngine(cfg, params, max_len=pl + gl, kv_block=32)
+
+    if args.stream:
+        reqs = []
+        for i in range(args.stream):
+            rb = make_batch(cfg, 1, pl, seed=1000 + i)
+            reqs.append(Request(rid=i,
+                                tokens=np.asarray(rb.pop("tokens")),
+                                gen_len=gl, extras=rb))
+        sched = SlotScheduler(eng, slots=b)
+        t0 = time.perf_counter()
+        sched.run(reqs, engine=args.engine)            # warm up (compiles)
+        compile_s = time.perf_counter() - t0
+        streams, stats = sched.run(reqs, engine=args.engine)
+        total = sum(len(s) for s in streams)
+        print(f"[serve/{args.engine}] {cfg.name}: stream of "
+              f"{args.stream} requests x {gl} tokens over {b} slots: "
+              f"{total} tokens in {stats['wall_s']:.2f}s "
+              f"({total / stats['wall_s']:.1f} tok/s steady-state, "
+              f"slot util {stats['slot_utilization']:.0%}; "
+              f"warmup+compile {compile_s:.2f}s); "
+              f"sample: {streams[0][:8].tolist()}")
+        return
+
+    batch = make_batch(cfg, b, pl, seed=0)
+    compile_s = eng.warmup(batch, gl, engine=args.engine)
+    t0 = time.perf_counter()
+    toks = eng.generate(batch, gl, engine=args.engine)  # syncs internally
+    dt = time.perf_counter() - t0
     total = b * gl
-    print(f"[serve] {cfg.name}: {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s); sample: "
-          f"{[int(t[0, 0]) for t in out[:8]]}")
+    decode_s = eng.timed_decode(batch, gl - 1, engine=args.engine)
+    print(f"[serve/{args.engine}] {cfg.name}: {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s steady-state; decode-only "
+          f"{b * (gl - 1) / decode_s:.1f} tok/s; "
+          f"warmup+compile {compile_s:.2f}s, excluded); "
+          f"sample: {toks[0, :8].tolist()}")
 
 
 if __name__ == "__main__":

@@ -61,6 +61,34 @@ def make_decode_step(cfg: ModelConfig):
     return serve_step
 
 
+# -- greedy serving steps (repro.serve's jit units) -------------------------
+# Greedy argmax happens *inside* the step so the serving loop never has to
+# pull logits to the host; logits are still returned for callers that want
+# them (consistency tests) — unread outputs cost nothing under async
+# dispatch.
+
+def make_greedy_prefill_step(cfg: ModelConfig):
+    """prefill + argmax: (params, batch, cache) -> (tokens, logits, cache)."""
+    def step(params, batch, cache):
+        logits, cache = prefill(cfg, params, batch, cache)
+        return jnp.argmax(logits, -1).astype(jnp.int32), logits, cache
+    return step
+
+
+def make_greedy_decode_step(cfg: ModelConfig):
+    """One greedy decode step with a static kv bucket:
+    (params, tokens, cache, kv_bucket) -> (tokens, logits, cache).
+
+    ``kv_bucket`` must be a static argument of the surrounding jit — each
+    bucket traces its own length-aware attention (see
+    models.layers.set_decode_kv_bucket)."""
+    def step(params, tokens, cache, kv_bucket=None):
+        logits, cache = decode_step(cfg, params, tokens, cache,
+                                    kv_bucket=kv_bucket)
+        return jnp.argmax(logits, -1).astype(jnp.int32), logits, cache
+    return step
+
+
 # ---------------------------------------------------------------------------
 # input specs (ShapeDtypeStructs, no allocation)
 # ---------------------------------------------------------------------------

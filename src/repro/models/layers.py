@@ -95,6 +95,22 @@ def dtype_of(cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# decode kv bucket: trace-time bound on the attended cache prefix.
+# repro.serve sets this around tracing one bucket-specialized decode step —
+# attention then reads only rows [0, bucket) of the kv cache instead of all
+# max_len rows.  Every active row's kv_len must stay < bucket (the engine
+# rounds the max active length up to its block size).  None = full cache.
+# ---------------------------------------------------------------------------
+
+_DECODE_KV_BUCKET: int | None = None
+
+
+def set_decode_kv_bucket(n: int | None):
+    global _DECODE_KV_BUCKET
+    _DECODE_KV_BUCKET = n
+
+
+# ---------------------------------------------------------------------------
 # initializers
 # ---------------------------------------------------------------------------
 
@@ -367,6 +383,10 @@ def attention(params, x, cfg: ModelConfig, positions, *, causal=True,
         kv_len = cache["len"] + s
         new_cache = {"k": kc, "v": vc, "len": kv_len}
         q_offset = cache["len"]
+        nb = _DECODE_KV_BUCKET
+        if s == 1 and nb is not None and nb < kc.shape[1]:
+            k = jax.lax.slice_in_dim(kc, 0, nb, axis=1)
+            v = jax.lax.slice_in_dim(vc, 0, nb, axis=1)
     out = _sdpa(q, k, v, causal, q_offset, kv_len, impl=cfg.attn_impl,
                 block_threshold=cfg.attn_block_threshold)
     out = out.reshape(b, s, cfg.n_heads * hd)
@@ -374,8 +394,16 @@ def attention(params, x, cfg: ModelConfig, positions, *, causal=True,
 
 
 def _batched_update(cache, new, lens):
-    """Write `new` (B,s,KV,hd) into `cache` (B,S,KV,hd) at per-batch offset.
-    All sequences share the same offset in our serving paths (lens[0])."""
+    """Write `new` (B,s,...) into `cache` (B,S,...) at per-row offsets.
+
+    Decode (s == 1) scatters each row at its own length — slots in the
+    continuous-batching engine advance independently.  Multi-token writes
+    keep the contiguous shared-offset slice (lens[0]): prefill always runs
+    on a fresh cache (offset 0) or one request at a time (repro.serve
+    admits per request), so the offsets agree by construction."""
+    if new.shape[1] == 1:
+        rows = jnp.arange(cache.shape[0])
+        return cache.at[rows, lens].set(new[:, 0].astype(cache.dtype))
     return jax.lax.dynamic_update_slice_in_dim(
         cache, new.astype(cache.dtype), lens[0], axis=1)
 
@@ -439,15 +467,18 @@ def mla_attention(params, x, cfg: ModelConfig, positions, cache=None):
     new_cache = None
     if cache is not None:
         ln = cache["len"]
-        ckv = jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], c_kv.astype(cache["ckv"].dtype), ln[0], axis=1)
-        krope = jax.lax.dynamic_update_slice_in_dim(
-            cache["krope"], k_rope[:, :, 0, :].astype(cache["krope"].dtype),
-            ln[0], axis=1)
+        ckv = _batched_update(cache["ckv"], c_kv, ln)
+        krope = _batched_update(cache["krope"], k_rope[:, :, 0, :], ln)
         c_kv, k_rope = ckv, krope[:, :, None, :]
         kv_len = ln + s
         new_cache = {"ckv": ckv, "krope": krope, "len": kv_len}
         q_offset = ln
+        nb = _DECODE_KV_BUCKET
+        if s == 1 and nb is not None and nb < ckv.shape[1]:
+            # slice *before* the k/v up-projections: the length-aware win is
+            # larger for MLA, whose per-row decode cost is a matmul
+            c_kv = jax.lax.slice_in_dim(ckv, 0, nb, axis=1)
+            k_rope = jax.lax.slice_in_dim(krope, 0, nb, axis=1)[:, :, None, :]
 
     skv = c_kv.shape[1]
     k_nope = (c_kv @ params["wuk"]).reshape(b, skv, nh, cfg.qk_nope_dim)

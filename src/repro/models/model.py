@@ -30,7 +30,8 @@ from jax.sharding import PartitionSpec as P
 from .config import ModelConfig
 from .layers import (HIDDEN, VOCAB_ACT, attention, init_attention, init_cache,
                      init_mla, init_mla_cache, init_mlp, init_moe, mla_attention,
-                     mlp, moe_ffn, ninit, rms_norm, shard, shard_modal)
+                     mlp, moe_ffn, ninit, rms_norm, set_decode_kv_bucket, shard,
+                     shard_modal)
 from .ssm import init_mamba_block, init_mamba_cache, mamba_block
 
 AUX_LOSS_WEIGHT = 0.01
@@ -630,14 +631,24 @@ def prefill(cfg: ModelConfig, params, batch, cache):
     return lm_logits(params, cfg, h[:, -1:]), cache
 
 
-def decode_step(cfg: ModelConfig, params, tokens, cache, batch=None):
-    """One decode step: tokens (B, 1) -> (logits (B,1,V), cache)."""
+def decode_step(cfg: ModelConfig, params, tokens, cache, batch=None,
+                kv_bucket: int | None = None):
+    """One decode step: tokens (B, 1) -> (logits (B,1,V), cache).
+
+    kv_bucket: static (trace-time) bound on the active cache length —
+    attention reads only rows [0, kv_bucket) instead of all max_len rows
+    (repro.serve's length-aware fast path).  Callers must guarantee
+    max(len) + 1 <= kv_bucket; None attends over the full cache."""
     b = tokens.shape[0]
     h = embed_tokens(params, cfg, tokens)
     ln = _cache_len(cfg, cache)
     positions = jnp.broadcast_to(ln[:, None], (b, 1))
-    h, cache, _ = _backbone(cfg, params, h, positions, batch or {}, cache,
-                            kind="decode")
+    set_decode_kv_bucket(kv_bucket)
+    try:
+        h, cache, _ = _backbone(cfg, params, h, positions, batch or {}, cache,
+                                kind="decode")
+    finally:
+        set_decode_kv_bucket(None)
     return lm_logits(params, cfg, h), cache
 
 

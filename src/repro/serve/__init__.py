@@ -1,0 +1,20 @@
+"""Token-throughput serving engine (ISSUE 4 tentpole).
+
+Two execution paths over the same ``repro.models`` serving contract
+(``prefill`` / ``decode_step``), token-identical by construction and pinned
+by ``tests/data/serve_equivalence.json``:
+
+* ``engine="reference"`` — the eager per-token Python loop (the original
+  ``launch/serve.py`` hot path), kept as the tested oracle;
+* ``engine="fast"``      — jitted prefill/decode steps with donated cache
+  buffers, length-aware (bucketed) decode attention, and a slot-based
+  continuous-batching scheduler for staggered request streams.
+
+See ROADMAP.md "Serving-perf contract" for the lockstep/equivalence
+obligations and the BENCH_serve.json workflow.
+"""
+
+from .engine import ServeEngine
+from .scheduler import Request, SlotScheduler
+
+__all__ = ["Request", "ServeEngine", "SlotScheduler"]

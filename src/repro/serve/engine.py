@@ -1,0 +1,200 @@
+"""Jitted, donated, length-aware serving engine (the fast path).
+
+Design:
+
+* **No per-step retrace.**  One jitted prefill (jit re-keys on prompt
+  shape) and one jitted decode step per *kv bucket* — the active cache
+  length rounded up to ``kv_block``.  Generating N tokens compiles
+  O(N / kv_block) variants, not O(N).
+* **Donated cache buffers.**  The cache pytree is donated through every
+  jitted call; steady-state decode reallocates nothing (on CPU, where XLA
+  cannot alias, donation degrades to a copy — the contract still holds on
+  accelerators, so the engine donates unconditionally and silences the
+  CPU-only warning).
+* **No hidden host syncs.**  Greedy argmax runs inside the jitted step and
+  tokens are fed back device-to-device; the Python loop never reads a
+  device value.  Host-side state (lengths, buckets, slot bookkeeping) is
+  derived from statically known request shapes.  Tokens are fetched once,
+  at the end.
+* **Length-aware decode attention.**  ``kv_bucket`` reaches attention as a
+  trace-time constant (``models.layers.set_decode_kv_bucket``): decode
+  attends over the filled prefix instead of all ``max_len`` rows, and MLA
+  up-projects only the filled prefix.
+
+The eager reference loop is kept verbatim under ``engine="reference"``;
+both paths must produce identical greedy token streams
+(``tests/data/serve_equivalence.json``, see ``repro.serve.equivalence``).
+"""
+
+from __future__ import annotations
+
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import make_greedy_decode_step, make_greedy_prefill_step
+from repro.models import decode_step, init_serve_cache, prefill
+
+def _quiet(fn, *args):
+    """Call a jitted step, suppressing (only here, only this message) the
+    compile-time warning XLA:CPU emits because it cannot alias donated
+    buffers — the donation is still correct and is the point of the fast
+    path on TPU.  Scoped per call so the process-wide filters are never
+    mutated."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return fn(*args)
+
+
+class ServeEngine:
+    """Greedy serving over one model with a reference and a fast path.
+
+    cfg/params : the model (any repro.models family).
+    max_len    : cache capacity per slot; every request must satisfy
+                 prompt_len + gen_len - 1 <= max_len.
+    kv_block   : decode-attention bucket granularity (rows); smaller blocks
+                 attend over less garbage but compile more variants.
+    """
+
+    def __init__(self, cfg, params, *, max_len: int, kv_block: int = 32):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = int(max_len)
+        self.kv_block = int(kv_block)
+        self._prefill = jax.jit(make_greedy_prefill_step(cfg),
+                                donate_argnums=(2,))
+        self._decode = jax.jit(make_greedy_decode_step(cfg),
+                               static_argnums=(3,), donate_argnums=(2,))
+
+    # -- bucket math --------------------------------------------------------
+
+    def bucket_for(self, filled: int) -> int:
+        """Smallest kv_block multiple covering `filled` rows (<= max_len)."""
+        b = -(-filled // self.kv_block) * self.kv_block
+        return min(max(b, self.kv_block), self.max_len)
+
+    # -- internals ----------------------------------------------------------
+
+    def _check_fit(self, prompt_len: int, gen_len: int) -> None:
+        if prompt_len + gen_len - 1 > self.max_len:
+            raise ValueError(
+                f"prompt {prompt_len} + gen {gen_len} - 1 exceeds "
+                f"max_len {self.max_len}")
+
+    def _start(self, batch):
+        """Jitted prefill into a fresh cache -> (toks, logits, cache)."""
+        b = batch["tokens"].shape[0]
+        cache = init_serve_cache(self.cfg, b, self.max_len, batch=batch)
+        return _quiet(self._prefill, self.params, batch, cache)
+
+    def _decode_quiet(self, toks, cache, bucket):
+        return _quiet(self._decode, self.params, toks, cache, bucket)
+
+    # -- synchronized-batch generation --------------------------------------
+
+    def generate(self, batch, gen_len: int, engine: str = "fast",
+                 collect_logits: bool = False):
+        """Greedy-decode a synchronized batch for `gen_len` tokens.
+
+        Returns np tokens (B, gen_len) int32 — or (tokens, logits
+        (B, gen_len, V) float32) when collect_logits.
+        """
+        tokens = batch["tokens"]
+        b, prompt_len = tokens.shape
+        self._check_fit(prompt_len, gen_len)
+
+        logs = [] if collect_logits else None
+        if engine == "reference":
+            cache = init_serve_cache(self.cfg, b, self.max_len, batch=batch)
+            logits, cache = prefill(self.cfg, self.params, batch, cache)
+            toks = jnp.argmax(logits, -1)
+            outs = [toks]
+            if logs is not None:
+                logs.append(logits)
+            for _ in range(gen_len - 1):
+                logits, cache = decode_step(self.cfg, self.params, toks,
+                                            cache, batch)
+                toks = jnp.argmax(logits, -1)
+                outs.append(toks)
+                if logs is not None:
+                    logs.append(logits)
+        elif engine == "fast":
+            toks, logits, cache = self._start(batch)
+            outs = [toks]
+            if logs is not None:
+                logs.append(logits)
+            cur = prompt_len
+            for _ in range(gen_len - 1):
+                toks, logits, cache = self._decode_quiet(
+                    toks, cache, self.bucket_for(cur + 1))
+                cur += 1
+                outs.append(toks)
+                if logs is not None:
+                    logs.append(logits)
+        else:
+            raise ValueError(engine)
+
+        out = np.asarray(jnp.concatenate(outs, axis=1)).astype(np.int32)
+        if collect_logits:
+            return out, np.asarray(jnp.concatenate(logs, axis=1))
+        return out
+
+    # -- timing helpers (shared by launch/serve.py and serve_bench) ---------
+
+    def warmup(self, batch, gen_len: int, engine: str = "fast") -> float:
+        """Trace + compile every (prefill, decode-bucket) signature a
+        generate(batch, gen_len) call needs; returns the wall seconds spent
+        (trace + compile + one throwaway run)."""
+        t0 = time.perf_counter()
+        self.generate(batch, gen_len, engine=engine)
+        return time.perf_counter() - t0
+
+    def timed_decode(self, batch, steps: int, engine: str = "fast") -> float:
+        """Steady-state decode seconds for `steps` greedy tokens: prefill
+        runs *outside* the clock, the clock stops only after
+        block_until_ready (async dispatch would otherwise stop it at
+        enqueue time).  Callers must warm up first."""
+        prompt_len = batch["tokens"].shape[1]
+        self._check_fit(prompt_len, steps + 1)
+        if engine == "reference":
+            b = batch["tokens"].shape[0]
+            cache = init_serve_cache(self.cfg, b, self.max_len, batch=batch)
+            logits, cache = prefill(self.cfg, self.params, batch, cache)
+            toks = jnp.argmax(logits, -1)
+            jax.block_until_ready(toks)
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                logits, cache = decode_step(self.cfg, self.params, toks,
+                                            cache, batch)
+                toks = jnp.argmax(logits, -1)
+            jax.block_until_ready(toks)
+            return time.perf_counter() - t0
+        toks, logits, cache = self._start(batch)
+        jax.block_until_ready(toks)
+        cur = prompt_len
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            toks, logits, cache = self._decode_quiet(
+                toks, cache, self.bucket_for(cur + 1))
+            cur += 1
+        jax.block_until_ready(toks)
+        return time.perf_counter() - t0
+
+    def timed_prefill(self, batch, reps: int = 1,
+                      engine: str = "fast") -> float:
+        """Seconds per prefill (cache allocation included), synced."""
+        b = batch["tokens"].shape[0]
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            if engine == "reference":
+                cache = init_serve_cache(self.cfg, b, self.max_len,
+                                         batch=batch)
+                logits, _ = prefill(self.cfg, self.params, batch, cache)
+            else:
+                _, logits, _ = self._start(batch)
+            jax.block_until_ready(logits)
+        return (time.perf_counter() - t0) / reps

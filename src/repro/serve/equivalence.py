@@ -1,0 +1,110 @@
+"""Serving-equivalence harness: the fast path must reproduce the eager
+reference token streams exactly.
+
+Mirrors the planner/emulator contracts (``repro.core.equivalence``,
+``repro.emulator.equivalence``): this module defines a canonical scenario
+grid — synchronized-batch greedy generation over every smoke-preset arch,
+plus staggered request streams through the slot scheduler for the
+non-MoE families — and a capture function that pins the *reference*
+greedy token streams.  Tokens are ints, so the pin is exact by nature
+(the token-level analogue of the float.hex() pins elsewhere).
+
+``scripts/gen_serve_fixture.py`` writes the committed fixture
+(``tests/data/serve_equivalence.json``); ``tests/test_serve_equivalence.py``
+replays every scenario through BOTH the reference loop and the fast engine
+(slot scheduler for stream scenarios) and requires exact equality with the
+fixture.  A fast-path change that flips any greedy token fails the suite
+and must either be fixed or — only for an *intentional* change to serving
+semantics, landed in both paths — re-pinned with justification in the PR.
+
+MoE archs appear only in sync scenarios: expert capacity is contended
+across the batch (Switch-style drops), so per-request token identity
+across different batch compositions does not hold by construction; the
+sync cells compare both paths at identical batching, which is exact.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import init_params
+
+from .engine import ServeEngine
+from .scheduler import Request, SlotScheduler
+
+# non-MoE archs exercised under continuous batching; whisper requests share
+# one prompt length (the slot bank's cross-kv buffers have a static
+# encoder length)
+STREAM_ARCHES = ["granite-3-2b", "mamba2-1.3b", "zamba2-7b",
+                 "llama-3.2-vision-90b", "whisper-large-v3"]
+STREAM_REQUESTS = [[8, 6], [8, 4], [12, 7], [8, 5], [12, 3], [8, 6]]
+
+
+def scenarios() -> list[dict]:
+    """The pinned grid: one sync cell per arch + stream cells."""
+    out = []
+    for arch in ARCH_IDS:
+        out.append({"id": f"sync/{arch}", "kind": "sync", "arch": arch,
+                    "batch": 2, "prompt_len": 12, "gen_len": 8, "seed": 0,
+                    "max_len": 32, "kv_block": 16})
+    for arch in STREAM_ARCHES:
+        reqs = [[8, g] for _, g in STREAM_REQUESTS] \
+            if arch == "whisper-large-v3" else STREAM_REQUESTS
+        out.append({"id": f"stream/{arch}", "kind": "stream", "arch": arch,
+                    "slots": 2, "requests": reqs, "seed": 1,
+                    "max_len": 32, "kv_block": 16})
+    return out
+
+
+def make_batch(cfg, b: int, s: int, seed: int) -> dict:
+    key = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["vision"] = jax.random.normal(
+            key, (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (b, s, cfg.d_model),
+                                            jnp.bfloat16)
+    return batch
+
+
+def build_engine(sc: dict) -> ServeEngine:
+    cfg = get_config(sc["arch"], "smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return ServeEngine(cfg, params, max_len=sc["max_len"],
+                       kv_block=sc["kv_block"])
+
+
+def run_scenario(sc: dict, engine: str = "reference",
+                 eng: ServeEngine | None = None) -> dict:
+    """Resolve + run one scenario -> {"tokens": nested int lists}."""
+    eng = eng or build_engine(sc)
+    cfg = eng.cfg
+    if sc["kind"] == "sync":
+        batch = make_batch(cfg, sc["batch"], sc["prompt_len"], sc["seed"])
+        toks = eng.generate(batch, sc["gen_len"], engine=engine)
+        return {"tokens": toks.tolist()}
+    reqs = []
+    for i, (plen, glen) in enumerate(sc["requests"]):
+        b = make_batch(cfg, 1, plen, sc["seed"] * 1000 + i)
+        reqs.append(Request(rid=i, tokens=np.asarray(b.pop("tokens")),
+                            gen_len=glen, extras=b))
+    streams, _ = SlotScheduler(eng, sc["slots"]).run(reqs, engine=engine)
+    return {"tokens": [s.tolist() for s in streams]}
+
+
+def capture() -> dict:
+    return {sc["id"]: run_scenario(sc) for sc in scenarios()}
+
+
+def write_fixture(path: str) -> dict:
+    fix = capture()
+    with open(path, "w") as f:
+        json.dump(fix, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return fix

@@ -1,0 +1,203 @@
+"""Slot-based continuous batching over a ServeEngine.
+
+A fixed bank of ``slots`` batch rows shares one cache pytree.  Requests are
+admitted into free slots in arrival order (prefill runs per request at its
+exact prompt length — no prompt padding, so tokens stay identical to the
+per-request reference), decode advances every slot in one jitted step, and
+finished requests are evicted so waiting requests can reuse the slot.
+Throughput holds under a stream of staggered requests instead of requiring
+one synchronized batch.
+
+Token identity: each slot's attention sees only its own rows (per-slot
+lengths mask the kv cache; per-slot positions drive RoPE), so a request
+decoded in a mixed batch emits the same greedy tokens as the same request
+decoded alone — the property the equivalence fixture pins.  The one
+documented exception is MoE routing: expert capacity is contended *across*
+the batch (Switch-style drops), so per-request token identity across
+different batch compositions does not hold by construction; MoE archs are
+therefore benchmarked but not pinned in stream scenarios.
+
+Inactive slots keep stepping with garbage rows (the batch shape is static);
+their outputs are never recorded and their rows never influence other
+slots.  Admission scatters a single-request cache into the slot bank with
+one generic ``dynamic_update_slice`` per leaf — stale rows beyond the new
+request's length are masked by its per-slot length until overwritten.
+
+Like the engine, the loop never reads a device value: the schedule depends
+only on statically known prompt/gen lengths, and all tokens are fetched in
+one sync at the end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_serve_cache, prefill
+
+from .engine import _quiet
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: prompt tokens (1, S) int32 + a fixed greedy
+    generation budget.  extras: per-request modal inputs with leading dim 1
+    (vlm: vision; encdec: frames — stream requests must share the frames
+    length, since the slot bank's cross-kv buffers have one static shape)."""
+    rid: int
+    tokens: np.ndarray
+    gen_len: int
+    extras: dict | None = None
+
+
+def _insert_leaf(full, one, slot, b_ax):
+    """Scatter a single-request cache leaf into slot `slot` of the bank.
+
+    Writes `one`'s full extent at offset 0 on every axis except the batch
+    axis — covering both seq-bearing leaves (kv rows [0, S1)) and
+    per-slot state (ssm state, conv buffers, length counters)."""
+    fullb = jnp.moveaxis(full, b_ax, 0)
+    upd = jnp.moveaxis(one, b_ax, 0).astype(fullb.dtype)
+    starts = (slot,) + (0,) * (fullb.ndim - 1)
+    return jnp.moveaxis(jax.lax.dynamic_update_slice(fullb, upd, starts),
+                        0, b_ax)
+
+
+class SlotScheduler:
+    """Continuous batching: admit/evict requests into `slots` cache rows."""
+
+    def __init__(self, engine, slots: int):
+        self.engine = engine
+        self.slots = int(slots)
+        self._batch_axes = None
+        cfg = engine.cfg
+
+        def _admit(params, tokens, extras, cache_slots, slot_tokens, slot):
+            batch = {"tokens": tokens, **extras}
+            c1 = init_serve_cache(cfg, 1, tokens.shape[1], batch=batch)
+            logits, c1 = prefill(cfg, params, batch, c1)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            cache_slots = jax.tree.map(
+                lambda full, one, ax: _insert_leaf(full, one, slot, ax),
+                cache_slots, c1, self._batch_axes)
+            slot_tokens = jax.lax.dynamic_update_slice(slot_tokens, tok,
+                                                       (slot, 0))
+            return tok, cache_slots, slot_tokens
+
+        # slot_tokens is NOT donated: per-step token arrays are retained on
+        # the host side until the single end-of-run fetch
+        self._admit = jax.jit(_admit, donate_argnums=(3,))
+
+    def _leaf_batch_axes(self, proto_extras):
+        """Per-leaf batch-axis index: the one axis where a batch=1 and a
+        batch=2 cache eval_shape disagree (only batch_size varies)."""
+        cfg, ml = self.engine.cfg, self.engine.max_len
+
+        def shapes(b):
+            batch = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+            for k, v in proto_extras.items():
+                batch[k] = jax.ShapeDtypeStruct((b,) + v.shape[1:], v.dtype)
+            return jax.eval_shape(
+                lambda: init_serve_cache(cfg, b, ml, batch=batch))
+
+        s1, s2 = shapes(1), shapes(2)
+        return jax.tree.map(
+            lambda a, b: int(np.argmax(np.array(a.shape) != np.array(b.shape))),
+            s1, s2)
+
+    def run(self, requests: list[Request], engine: str = "fast"):
+        """Serve `requests` to completion; returns (streams, stats) with
+        streams[i] the i-th request's np int32 greedy tokens (gen_len,)."""
+        if not requests:
+            return [], {"wall_s": 0.0, "decode_steps": 0,
+                        "slot_utilization": 0.0}
+        for r in requests:
+            self.engine._check_fit(r.tokens.shape[1], r.gen_len)
+
+        if engine == "reference":
+            # per-request isolation: the oracle the slot path must match
+            streams = []
+            t0 = time.perf_counter()
+            for r in requests:
+                batch = {"tokens": jnp.asarray(r.tokens),
+                         **{k: jnp.asarray(v)
+                            for k, v in (r.extras or {}).items()}}
+                toks = self.engine.generate(batch, r.gen_len,
+                                            engine="reference")
+                streams.append(toks[0])
+            stats = {"wall_s": time.perf_counter() - t0, "decode_steps": 0,
+                     "slot_utilization": 1.0}
+            return streams, stats
+
+        eng = self.engine
+        cfg, B = eng.cfg, self.slots
+        proto_extras = requests[0].extras or {}
+        if self._batch_axes is None:
+            self._batch_axes = self._leaf_batch_axes(proto_extras)
+        proto_batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+        for k, v in proto_extras.items():
+            proto_batch[k] = jnp.zeros((B,) + v.shape[1:], v.dtype)
+        cache = init_serve_cache(cfg, B, eng.max_len, batch=proto_batch)
+        slot_tokens = jnp.zeros((B, 1), jnp.int32)
+
+        t0 = time.perf_counter()
+        next_idx = 0
+        active: dict[int, list] = {}          # slot -> [request, n_emitted]
+        free = list(range(B))
+        slot_len = np.zeros(B, np.int64)      # host mirror of cache lens
+        first_tok: dict[int, object] = {}     # rid -> (1,1) device token
+        step_toks: list = []                  # per-step (B,1) device tokens
+        step_maps: list[dict[int, int]] = []  # per-step slot -> rid
+        n_steps = busy = 0
+
+        while next_idx < len(requests) or active:
+            while free and next_idx < len(requests):
+                r = requests[next_idx]
+                next_idx += 1
+                slot = free.pop(0)
+                extras = {k: jnp.asarray(v)
+                          for k, v in (r.extras or {}).items()}
+                tok, cache, slot_tokens = _quiet(
+                    self._admit, eng.params, jnp.asarray(r.tokens), extras,
+                    cache, slot_tokens, np.int32(slot))
+                first_tok[r.rid] = tok
+                slot_len[slot] = r.tokens.shape[1]
+                if r.gen_len > 1:
+                    active[slot] = [r, 1]
+                else:
+                    free.append(slot)
+                    free.sort()
+            if not active:
+                continue
+            bucket = eng.bucket_for(
+                int(max(slot_len[s] for s in active)) + 1)
+            slot_tokens, _, cache = eng._decode_quiet(slot_tokens, cache,
+                                                      bucket)
+            slot_len += 1                      # every row writes, active or not
+            n_steps += 1
+            busy += len(active)
+            step_toks.append(slot_tokens)
+            step_maps.append({s: st[0].rid for s, st in active.items()})
+            for slot in list(active):
+                active[slot][1] += 1
+                if active[slot][1] >= active[slot][0].gen_len:
+                    del active[slot]
+                    free.append(slot)
+            free.sort()
+
+        # single host sync: fetch every step's tokens at once
+        stacked = (np.asarray(jnp.concatenate(step_toks, axis=1))
+                   if step_toks else np.zeros((B, 0), np.int32))
+        streams = {r.rid: [int(np.asarray(first_tok[r.rid])[0, 0])]
+                   for r in requests}
+        for i, m in enumerate(step_maps):
+            for slot, rid in m.items():
+                streams[rid].append(int(stacked[slot, i]))
+        stats = {"wall_s": time.perf_counter() - t0,
+                 "decode_steps": n_steps,
+                 "slot_utilization": busy / max(1, n_steps * B)}
+        return [np.asarray(streams[r.rid], np.int32) for r in requests], stats

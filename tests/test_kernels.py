@@ -88,6 +88,19 @@ class TestFlashAttention:
             np.asarray(attention_ref(q, k, v, causal=False)),
             rtol=2e-5, atol=2e-5)
 
+    def test_non_causal_odd_length(self):
+        """Ragged non-causal sequences pad to the block size; pad keys are
+        masked with a -inf bias inside the kernel (used to raise)."""
+        ks = jax.random.split(KEY, 3)
+        for s in (200, 129):
+            q = jax.random.normal(ks[0], (1, s, 4, 32), jnp.float32)
+            k = jax.random.normal(ks[1], (1, s, 2, 32), jnp.float32)
+            v = jax.random.normal(ks[2], (1, s, 2, 32), jnp.float32)
+            np.testing.assert_allclose(
+                np.asarray(flash_attention(q, k, v, causal=False)),
+                np.asarray(attention_ref(q, k, v, causal=False)),
+                rtol=2e-5, atol=2e-5)
+
     def test_bfloat16(self):
         ks = jax.random.split(KEY, 3)
         q = jax.random.normal(ks[0], (1, 128, 2, 64), jnp.float32).astype(jnp.bfloat16)

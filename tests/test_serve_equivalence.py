@@ -1,0 +1,39 @@
+"""Serving-equivalence contract: both engines replay the pinned fixture.
+
+tests/data/serve_equivalence.json pins the reference (eager loop) greedy
+token streams over the grid in repro.serve.equivalence.  Every scenario is
+replayed through BOTH the reference path and the fast path (slot scheduler
+for stream scenarios) and must match the fixture token-for-token.  Only an
+intentional serving-semantics change, landed in both paths, may regenerate
+the fixture (scripts/gen_serve_fixture.py) — with justification in the PR.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.serve.equivalence import build_engine, run_scenario, scenarios
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "serve_equivalence.json")
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+def test_fixture_covers_grid(fixture):
+    assert sorted(fixture) == sorted(sc["id"] for sc in scenarios())
+
+
+@pytest.mark.parametrize("sc", scenarios(), ids=lambda sc: sc["id"])
+def test_both_engines_match_fixture(sc, fixture):
+    pinned = fixture[sc["id"]]["tokens"]
+    eng = build_engine(sc)     # one engine (and jit cache) for both paths
+    ref = run_scenario(sc, engine="reference", eng=eng)["tokens"]
+    assert ref == pinned, f"{sc['id']}: reference diverged from fixture"
+    fast = run_scenario(sc, engine="fast", eng=eng)["tokens"]
+    assert fast == pinned, f"{sc['id']}: fast path diverged from fixture"
