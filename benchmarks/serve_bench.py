@@ -10,7 +10,12 @@ smoke presets (real JAX compute on CPU):
   speedup here is the tentpole acceptance number;
 * ``stream/<arch>``  — a staggered request stream through the slot
   scheduler (continuous batching) vs serving the same requests one at a
-  time with the eager loop.
+  time with the eager loop;
+* ``pipeline_decode[_int8]/<arch>`` — steady-state decode through
+  ``PipelineServeEngine`` over a mid-model stage cut (the stage IR), with
+  a raw and a rowwise-int8-quantized boundary wire; ``vs_monolithic`` is
+  the pipelining overhead vs the monolithic fast path (raw wire asserts
+  token identity live; int8 is lossy by design).
 
 Every ``--update`` run asserts the fast path token-identical to the
 reference on the exact cases it times (the equivalence contract, live).
@@ -56,6 +61,7 @@ BATCH, PROMPT_LEN, DECODE_STEPS = 4, 32, 32
 MAX_LEN, KV_BLOCK = 96, 32
 
 STREAM_ARCH = "granite-3-2b"
+PIPE_ARCH = "granite-3-2b"          # pipelined decode: mid-model stage cut
 STREAM_SLOTS = 4
 # (prompt_len, gen_len) per request — staggered completions force
 # admit/evict churn rather than one synchronized batch
@@ -113,6 +119,35 @@ def measure(reps: int, with_naive: bool) -> dict:
                 f"{arch}: fast path diverged from reference tokens"
         entries[f"decode/{arch}"] = e
 
+    # -- pipelined serving over the stage IR --------------------------------
+    from repro.core.stageplan import from_block_cuts
+    from repro.serve import PipelineServeEngine
+
+    eng = _engine(PIPE_ARCH)
+    batch = make_batch(eng.cfg, BATCH, PROMPT_LEN, 42)
+    eng.warmup(batch, DECODE_STEPS + 1)
+    mono_med, _ = time_s(lambda: eng.timed_decode(batch, DECODE_STEPS), reps)
+    toks = DECODE_STEPS * BATCH
+    for name, bits in [("pipeline_decode", 0), ("pipeline_decode_int8", 8)]:
+        plan = from_block_cuts(eng.cfg, [eng.cfg.n_layers // 2],
+                               wire_bits=bits)
+        peng = PipelineServeEngine(eng.cfg, eng.params, plan,
+                                   max_len=MAX_LEN, kv_block=KV_BLOCK)
+        peng.warmup(batch, DECODE_STEPS + 1)
+        med, lo = time_s(lambda: peng.timed_decode(batch, DECODE_STEPS),
+                         reps)
+        e = {"median_us": med * 1e6, "min_us": lo * 1e6,
+             "decode_toks_per_s": round(toks / med, 1),
+             "mono_median_us": mono_med * 1e6,
+             "vs_monolithic": round(med / mono_med, 2), "wire_bits": bits}
+        if with_naive and bits == 0:
+            # equivalence contract, live: pipelined == monolithic tokens
+            mono = eng.generate(batch, DECODE_STEPS, engine="fast")
+            pipe = peng.generate(batch, DECODE_STEPS)
+            assert (mono == pipe).all(), \
+                f"{PIPE_ARCH}: pipelined tokens diverged from monolithic"
+        entries[f"{name}/{PIPE_ARCH}"] = e
+
     # -- mixed request stream (continuous batching) -------------------------
     eng = _engine(STREAM_ARCH)
     sched = SlotScheduler(eng, slots=STREAM_SLOTS)
@@ -159,7 +194,11 @@ def update(reps: int) -> None:
                      f"{DECODE_STEPS} steady-state greedy steps x batch "
                      f"{BATCH} (naive = eager per-token loop); stream = "
                      f"{len(STREAM_REQS)} staggered requests through "
-                     f"{STREAM_SLOTS} continuous-batching slots; --check "
+                     f"{STREAM_SLOTS} continuous-batching slots; "
+                     "pipeline_decode[_int8] = the same decode through "
+                     "PipelineServeEngine over a mid-model stage cut "
+                     "(vs_monolithic = pipelining overhead, raw vs "
+                     "rowwise-int8 boundary wire); --check "
                      f"compares best-of-reps with a {CHECK_RATIO}x ratio "
                      "tolerance"),
         },

@@ -1,9 +1,12 @@
-"""End-to-end serving driver (the paper's kind of system): serve a small LM
-with batched requests over an emulated edge cluster — partition the model
-with Algorithm 1, place it with Algorithm 3, run the inference pipeline with
-real JAX compute per partition, and survive an injected node failure.
+"""End-to-end deployment demo (the paper's full loop on one plan object):
+partition a small LM with Algorithm 1, place it with Algorithm 3, emit the
+stage-execution IR, serve real JAX compute through the pipelined engine
+with continuous batching, kill a stage executor mid-stream and watch it
+restore from checkpoint + replay, and finally run the *same IR* through
+the cluster emulator under the same failure — planner, runtime, and
+emulator all agreeing on one ``StageExecutionPlan``.
 
-    PYTHONPATH=src python examples/serve_cluster.py [--requests 24]
+    PYTHONPATH=src python examples/serve_cluster.py [--requests 12]
 """
 
 import argparse
@@ -14,20 +17,20 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import partition_and_place, random_geometric_cluster
 from repro.core.pipeline import lm_block_graph
-from repro.emulator import FaultInjector, NodeFault, PipelineEmulator
+from repro.emulator import NodeFault, emulate_plan
 from repro.models import init_params
 from repro.models.config import ShapeConfig
-from repro.serve import Request, ServeEngine, SlotScheduler
+from repro.serve import PipelineServeEngine, Request, ServeEngine, SlotScheduler
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=24)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=12)
     args = ap.parse_args()
 
-    cfg = get_config("granite-3-2b", "smoke")
+    cfg = get_config("granite-3-2b", "smoke").replace(n_layers=4)
     key = jax.random.PRNGKey(0)
     params = init_params(cfg, key)
 
@@ -44,40 +47,52 @@ def main():
     plan = partition_and_place(g, cluster, cap, n_classes=3, rng=8)
     print(plan.describe())
 
-    # ---- 2. real JAX serving: continuous batching via repro.serve ----------
-    # The jitted/donated fast path with a slot scheduler: requests are
-    # admitted into 4 cache slots as they free up, so throughput holds on a
-    # staggered stream (the reference eager loop stays available as
-    # engine="reference" — token-identical, see ROADMAP "Serving-perf
-    # contract").
+    # ---- 2. one IR from planner to execution -------------------------------
+    ep = plan.execution_plan(cluster)           # StageExecutionPlan
+    print("\n" + ep.describe())
+
+    # ---- 3. pipelined serving through the plan, with a mid-stream fault ----
+    max_len = args.prompt_len + args.gen_len
+    peng = PipelineServeEngine(cfg, params, ep, max_len=max_len, kv_block=16,
+                               cluster=cluster)
     tok_key = jax.random.PRNGKey(1)
-    eng = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen_len,
-                      kv_block=16)
     reqs = [Request(rid=i,
                     tokens=np.asarray(jax.random.randint(
                         jax.random.fold_in(tok_key, i),
                         (1, args.prompt_len), 0, cfg.vocab)),
                     gen_len=args.gen_len)
             for i in range(args.requests)]
-    sched = SlotScheduler(eng, slots=4)
-    sched.run(reqs[:2], engine="fast")          # warm up: trace + compile
-    streams, stats = sched.run(reqs, engine="fast")
+    sched = SlotScheduler(peng, slots=4)
+    kill_stage = min(1, peng.n_stages - 1)
+    streams, stats = sched.run(reqs, engine="fast",
+                               kill={"after_step": 4, "stage": kill_stage})
     total_tokens = sum(len(s) for s in streams)
-    print(f"\nserved {args.requests} requests "
-          f"({total_tokens} tokens) in {stats['wall_s']:.1f}s "
-          f"-> {total_tokens/stats['wall_s']:.1f} tok/s on CPU "
+    print(f"\nserved {args.requests} requests ({total_tokens} tokens) "
+          f"through {peng.n_stages} pipeline stages in "
+          f"{stats['wall_s']:.1f}s, surviving a stage-{kill_stage} kill "
           f"(slot utilization {stats['slot_utilization']:.0%})")
+    for t, msg in peng.events:
+        print(f"  t={t:5.2f}s  {msg}")
 
-    # ---- 3. cluster dynamics: the same plan under a node failure -----------
-    emu = PipelineEmulator(cluster, plan.placement.nodes,
-                           plan.partition.boundary_sizes,
-                           plan.partition.compute_flops)
-    FaultInjector(emu).schedule([NodeFault(5.0, plan.placement.nodes[1])])
+    # token identity: the monolithic eager oracle produces the same streams
+    mono = ServeEngine(cfg, params, max_len=max_len, kv_block=16)
+    ref, _ = SlotScheduler(mono, slots=4).run(reqs, engine="reference")
+    ok = all((a == b).all() for a, b in zip(ref, streams))
+    print(f"\ntoken streams identical to the monolithic reference "
+          f"across the kill+restore: {ok}")
+    assert ok
+
+    # ---- 4. the emulator's view of the same plan and the same failure ------
+    m = emulate_plan(ep, cluster, n_batches=args.requests)
+    print(f"\nemulated fault-free: {m['completed']}/{args.requests} batches, "
+          f"throughput {m['throughput_hz']:.2f} Hz")
+    from repro.emulator import FaultInjector, PipelineEmulator
+    emu = PipelineEmulator(cluster, *ep.emulator_args())
+    FaultInjector(emu).schedule([NodeFault(5.0, ep.stages[kill_stage].node)])
     m = emu.run(args.requests, 1e9)
-    print(f"\nemulated pipeline with a node failure at t=5s:")
-    print(f"  completed {m['completed']}/{args.requests} "
-          f"(throughput {m['throughput_hz']:.2f} Hz, "
-          f"p95 E2E {m['p95_e2e_s']:.1f}s)")
+    print(f"emulated with stage-{kill_stage} node failure at t=5s: "
+          f"{m['completed']}/{args.requests} completed, "
+          f"p95 E2E {m['p95_e2e_s']:.1f}s")
     for t, e in m["events"]:
         print(f"  t={t:6.1f}s  {e}")
 

@@ -25,6 +25,7 @@ if __name__ == "__main__":
     os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
     fix = write_fixture(FIXTURE)
     n_sync = sum(1 for k in fix if k.startswith("sync/"))
-    n_stream = len(fix) - n_sync
-    print(f"wrote {len(fix)} scenarios ({n_sync} sync, {n_stream} stream) "
-          f"-> {FIXTURE}")
+    n_stream = sum(1 for k in fix if k.startswith("stream/"))
+    n_pipe = len(fix) - n_sync - n_stream
+    print(f"wrote {len(fix)} scenarios ({n_sync} sync, {n_stream} stream, "
+          f"{n_pipe} pipeline) -> {FIXTURE}")

@@ -22,6 +22,8 @@ from .partitioner import (NotPartitionable, PartitionInfeasible,
 from .placement import (PlacementInfeasible, PlacementResult, classify,
                         kpath_matching, place_with_retry, subgraph_k_path,
                         subgraph_k_path_reference)
+from .stageplan import (BoundarySpec, StageExecutionPlan, StageSpec,
+                        from_block_cuts, from_seifer)
 
 __all__ = [
     "SeiferPlan", "partition_and_place",
@@ -39,4 +41,6 @@ __all__ = [
     "transfer_sizes",
     "PlacementInfeasible", "PlacementResult", "classify", "kpath_matching",
     "place_with_retry", "subgraph_k_path", "subgraph_k_path_reference",
+    "BoundarySpec", "StageExecutionPlan", "StageSpec", "from_block_cuts",
+    "from_seifer",
 ]

@@ -42,6 +42,8 @@ class PartitionPlan:
     candidate_sizes -- transfer size of *every* candidate point (the paper's
                        distribution used for class binning, §5.2.1)
     compute_flops   -- forward FLOPs per run (emulator compute model)
+    lam             -- compression factor the transfer sizes were divided by
+                       (recorded so the stage-execution IR can carry it)
     """
 
     points: list[str]
@@ -52,6 +54,7 @@ class PartitionPlan:
     candidate_sizes: list[float]
     compute_flops: list[float]
     total_cost: float
+    lam: float = DEFAULT_COMPRESSION
 
     @property
     def n_partitions(self) -> int:
@@ -165,7 +168,8 @@ def optimal_partitions(graph: LayerGraph, capacity_bytes: float,
     return PartitionPlan(
         points=points, runs=runs, boundary_sizes=boundary,
         partition_layers=part_layers, memory_bytes=mems,
-        candidate_sizes=tsizes, compute_flops=flops, total_cost=float(best[0]))
+        candidate_sizes=tsizes, compute_flops=flops, total_cost=float(best[0]),
+        lam=lam)
 
 
 def min_cost_path_reference(graph: LayerGraph, capacity_bytes: float,

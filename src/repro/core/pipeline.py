@@ -127,9 +127,19 @@ class StagePlan:
     stage_of_block: dict        # block name -> stage index
     boundary_bytes: list        # compressed transfer at each stage boundary
     cut_after: list             # block names after which the cuts fall
+    cfg: ModelConfig | None = None
+    cluster: ClusterGraph | None = None
 
     def describe(self) -> str:
         return self.plan.describe()
+
+    def execution_plan(self, *, wire_bits: int = 0):
+        """Emit the stage-execution IR (``repro.core.stageplan``): the
+        object ``PipelineServeEngine``, ``emulate_plan``, and
+        ``launch/pp.make_pp_forward`` all accept."""
+        return self.plan.execution_plan(
+            self.cluster, wire_bits=wire_bits,
+            arch=self.cfg.name if self.cfg is not None else None)
 
 
 def plan_stages(cfg: ModelConfig, shape: ShapeConfig,
@@ -154,4 +164,4 @@ def plan_stages(cfg: ModelConfig, shape: ShapeConfig,
     return StagePlan(plan=plan, n_stages=plan.partition.n_partitions,
                      stage_of_block=stage_of,
                      boundary_bytes=plan.partition.boundary_sizes,
-                     cut_after=cut_after)
+                     cut_after=cut_after, cfg=cfg, cluster=cluster)

@@ -1,13 +1,13 @@
 from .core import Event, Simulator
 from .pipeline import (EmulatorConfig, PipelineEmulator, emulate_plan,
-                       metrics_identical, summarize)
+                       metrics_identical, plan_stage_args, summarize)
 from .faults import (FaultInjector, LinkFault, NodeFault, RandomLinkFaults,
                      RandomNodeFaults)
 from .engine import FlatEventEngine, lindley_scan, poisson_arrivals, simulate
 from .sweep import aggregate, evaluate_cells, sweep_plan
 
 __all__ = ["Event", "Simulator", "PipelineEmulator", "EmulatorConfig",
-           "emulate_plan", "summarize", "metrics_identical",
+           "emulate_plan", "plan_stage_args", "summarize", "metrics_identical",
            "FaultInjector", "LinkFault", "NodeFault",
            "RandomNodeFaults", "RandomLinkFaults",
            "FlatEventEngine", "lindley_scan", "poisson_arrivals", "simulate",

@@ -346,22 +346,42 @@ class PipelineEmulator:
                          self.sim.log)
 
 
+def plan_stage_args(plan) -> tuple[list[int], list[float], list[float]]:
+    """Adapt any plan dialect to the emulator's (nodes, boundary_bytes,
+    compute_flops) triple.
+
+    Accepts the stage-execution IR (``repro.core.stageplan``, the preferred
+    form), a ``SeiferPlan`` (adapted through the IR, byte-identical
+    numbers), or — deprecated — the raw 3-tuple itself."""
+    if hasattr(plan, "emulator_args"):          # StageExecutionPlan
+        return plan.emulator_args()
+    if hasattr(plan, "placement"):              # SeiferPlan
+        return plan.execution_plan().emulator_args()
+    import warnings
+    warnings.warn(
+        "passing a raw (nodes, boundary_sizes, compute_flops) tuple to the "
+        "emulator is deprecated; build a StageExecutionPlan "
+        "(repro.core.stageplan) instead", DeprecationWarning, stacklevel=3)
+    nodes, boundary, flops = plan
+    return list(nodes), list(boundary), list(flops)
+
+
 def emulate_plan(plan, cluster: ClusterGraph, cfg: EmulatorConfig | None = None,
                  n_batches: int = 50, duration_s: float = 10_000.0,
                  rng=0, engine: str = "auto") -> dict:
-    """Run a SeiferPlan through the emulator.
+    """Run a plan through the emulator.
 
+    ``plan`` is a ``StageExecutionPlan`` (the IR — the same object
+    ``PipelineServeEngine`` serves through), a ``SeiferPlan``, or the
+    deprecated raw ``(nodes, boundary_sizes, compute_flops)`` tuple.
     ``engine="auto"`` (default) picks the fast path (metrics-identical to the
     reference — see the equivalence contract); ``engine="reference"`` forces
     the closure-based reference loop."""
+    nodes, boundary, flops = plan_stage_args(plan)
     if engine == "reference":
-        return PipelineEmulator(
-            cluster, plan.placement.nodes, plan.partition.boundary_sizes,
-            plan.partition.compute_flops, cfg, rng,
-        ).run(n_batches, duration_s)
+        return PipelineEmulator(cluster, nodes, boundary, flops, cfg, rng,
+                                ).run(n_batches, duration_s)
     from .engine import simulate
-    return simulate(cluster, plan.placement.nodes,
-                    plan.partition.boundary_sizes,
-                    plan.partition.compute_flops, cfg,
+    return simulate(cluster, nodes, boundary, flops, cfg,
                     n_batches=n_batches, duration_s=duration_s,
                     rng=rng, engine=engine)

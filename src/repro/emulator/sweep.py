@@ -83,7 +83,7 @@ def aggregate(cells: list[dict], n_batches: int) -> dict:
 
 
 def sweep_plan(plan, cluster, **kw) -> list[dict]:
-    """``evaluate_cells`` for a SeiferPlan."""
-    return evaluate_cells(cluster, plan.placement.nodes,
-                          plan.partition.boundary_sizes,
-                          plan.partition.compute_flops, **kw)
+    """``evaluate_cells`` for a StageExecutionPlan (or SeiferPlan)."""
+    from .pipeline import plan_stage_args
+    nodes, boundary, flops = plan_stage_args(plan)
+    return evaluate_cells(cluster, nodes, boundary, flops, **kw)

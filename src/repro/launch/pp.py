@@ -33,13 +33,38 @@ def _dequantize_rows(q, scale, dtype):
 
 
 def make_pp_forward(cfg: ModelConfig, mesh, n_micro: int,
-                    compress_bits: int = 8):
+                    compress_bits: int | None = None, plan=None):
     """Returns forward(params, tokens) -> last-token logits (B, vocab),
     executing the model as an n_stages = mesh['pod'] pipeline.
 
     params: the standard dense-model pytree; blocks are re-stacked to
     (n_stages, L/n_stages, ...) outside shard_map so the 'pod' axis shards
-    the stage dim.  tokens (B, S) with B % (n_micro * data) == 0."""
+    the stage dim.  tokens (B, S) with B % (n_micro * data) == 0.
+
+    plan: optional ``StageExecutionPlan`` (repro.core.stageplan) — the stage
+    boundaries and the wire format are read from the IR instead of being
+    recomputed here.  The shard_map pipeline re-stacks blocks to a
+    (n_stages, l_loc, ...) leading axis, so the IR's stages must be uniform
+    (the planner produces uniform cuts for uniform dense LMs — every block
+    boundary transfers the same bytes, so Algorithm 1 balances memory);
+    non-uniform plans are rejected rather than silently re-cut.
+    ``compress_bits=None`` defers to ``plan.compression.wire_bits`` (8 when
+    no plan is given — the historical default)."""
+    if plan is not None:
+        ranges = plan.block_ranges(cfg.n_layers)
+        if len(ranges) != mesh.shape["pod"]:
+            raise ValueError(
+                f"plan has {len(ranges)} stages, mesh 'pod' axis has "
+                f"{mesh.shape['pod']}")
+        sizes = {hi - lo for lo, hi in ranges}
+        if len(sizes) != 1:
+            raise ValueError(
+                f"shard_map pipeline needs uniform stages, plan cuts give "
+                f"{[hi - lo for lo, hi in ranges]} blocks per stage")
+        if compress_bits is None:
+            compress_bits = plan.compression.wire_bits
+    if compress_bits is None:
+        compress_bits = 8
     n_stages = mesh.shape["pod"]
     assert cfg.n_layers % n_stages == 0
     l_loc = cfg.n_layers // n_stages

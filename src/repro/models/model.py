@@ -311,10 +311,17 @@ def _ssm_init(cfg, key):
     return p
 
 
-def _ssm_apply(cfg, params, h, positions, cache=None, kind="train"):
-    every = cfg.hybrid_attn_every
+def _ssm_apply(cfg, params, h, positions, cache=None, kind="train",
+               layer_offset=0, app_offset=0):
+    """layer_offset/app_offset: pipeline-stage execution (models.staging)
+    runs a slice of the stacked blocks — block indices start at
+    ``layer_offset`` and the sliced shared-attention cache starts at
+    absolute app index ``app_offset``.  Defaults reproduce the monolithic
+    path exactly."""
     shared = params.get("shared_attn")
-    n_apps = -(-cfg.n_layers // every) if every else 0
+    # a stage slice with no shared-attention call site carries neither the
+    # shared params nor the shared cache; treat it as a pure-ssm run
+    every = cfg.hybrid_attn_every if shared is not None else 0
 
     def body(carry, xs):
         h, shared_kv = carry
@@ -326,7 +333,7 @@ def _ssm_apply(cfg, params, h, positions, cache=None, kind="train"):
 
         if every:
             def with_attn(h, skv):
-                app = idx // every
+                app = idx // every - app_offset
                 if skv is None:                       # training: no cache
                     h2, _ = apply_dense_block(shared, h, cfg, positions)
                     return h2, skv
@@ -352,7 +359,8 @@ def _ssm_apply(cfg, params, h, positions, cache=None, kind="train"):
         h = h + y
         return (h, shared_kv), nmc
 
-    idxs = jnp.arange(cfg.n_layers)
+    n_blk = jax.tree_util.tree_leaves(params["blocks"])[0].shape[0]
+    idxs = jnp.arange(layer_offset, layer_offset + n_blk)
     shared_kv0 = None
     mamba_caches = None
     if cache is not None:
@@ -599,22 +607,34 @@ def init_serve_cache(cfg: ModelConfig, batch_size: int, max_len: int,
     raise ValueError(cfg.family)
 
 
+def fill_vlm_cross(cfg, groups, cache, vision):
+    """Fill the cross-attention K/V of ``cache`` from vision embeddings;
+    ``groups``/``cache`` may be any contiguous slice of the stacked groups
+    (pipeline stages pass their own slice)."""
+    def per_group(gc):
+        gp, (sc, xc) = gc
+        new = cross_kv(gp["cross"], cfg, vision)
+        return (sc, jax.tree.map(lambda a, b: b.astype(a.dtype), xc, new))
+    return jax.lax.map(per_group, (groups, cache))
+
+
+def fill_encdec_cross(cfg, dec_blocks, cache, enc_out):
+    """Fill decoder cross-attention K/V from a precomputed encoder output;
+    slice-friendly like :func:`fill_vlm_cross`."""
+    def per_layer(bc):
+        bp, (sc, xc) = bc
+        new = cross_kv(bp, cfg, enc_out)
+        return (sc, jax.tree.map(lambda a, b: b.astype(a.dtype), xc, new))
+    return jax.lax.map(per_layer, (dec_blocks, cache))
+
+
 def _fill_cross_caches(cfg, params, cache, batch):
     """Compute cross-attention K/V once per request (vlm / encdec)."""
     if cfg.family == "vlm":
-        vision = batch["vision"]
-        def per_group(gc):
-            gp, (sc, xc) = gc
-            new = cross_kv(gp["cross"], cfg, vision)
-            return (sc, jax.tree.map(lambda a, b: b.astype(a.dtype), xc, new))
-        return jax.lax.map(per_group, (params["groups"], cache))
+        return fill_vlm_cross(cfg, params["groups"], cache, batch["vision"])
     if cfg.family == "encdec":
         enc_out = encode(cfg, params, batch["frames"])
-        def per_layer(bc):
-            bp, (sc, xc) = bc
-            new = cross_kv(bp, cfg, enc_out)
-            return (sc, jax.tree.map(lambda a, b: b.astype(a.dtype), xc, new))
-        return jax.lax.map(per_layer, (params["dec_blocks"], cache))
+        return fill_encdec_cross(cfg, params["dec_blocks"], cache, enc_out)
     return cache
 
 

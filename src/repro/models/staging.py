@@ -1,0 +1,231 @@
+"""Per-stage views of the model zoo (the model half of pipelined serving).
+
+A pipeline stage owns a contiguous block range ``[lo, hi)`` of a model plus
+(for the first stage) the embedding / modal frontends and (for the last
+stage) the final norm + LM head.  This module turns the monolithic param
+pytree into per-stage subtrees, allocates per-stage decode caches, and runs
+the backbone over a stage's slice — reusing the exact block-apply code of
+``repro.models.model`` so a chain of stages executes the same op sequence
+as the monolithic model (the serve-equivalence fixture pins the resulting
+greedy tokens as identical).
+
+Family notes:
+
+* dense / ssm — any cut between blocks.
+* hybrid (zamba2) — the shared attention params ride along into *every*
+  stage containing a call site (cutting between call sites duplicates the
+  shared weights, exactly as the partitioner's omega accounting assumes);
+  the shared kv cache is sliced per stage by call-site index.
+* moe / vlm — cuts must fall on group boundaries (``moe_interleave`` /
+  ``cross_attn_every + 1``): the stacked-group layout is the unit of
+  slicing.
+* encdec (whisper) — the encoder (frontend / enc_blocks / enc_norm) always
+  runs with the first stage; the encoder output is a *side input* shipped
+  to later stages once per request (the planner's side_in_bytes charge),
+  where it fills each stage's cross-attention K/V during prefill.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import init_cache, init_mla_cache
+from .model import (_cache_len, _dense_apply, _encdec_apply, _moe_apply,
+                    _ssm_apply, _vlm_apply, embed_tokens, encode,
+                    fill_encdec_cross, fill_vlm_cross, lm_logits)
+from .ssm import init_mamba_cache
+
+
+def stage_granularity(cfg: ModelConfig) -> int:
+    """Smallest block count a stage boundary must align to."""
+    if cfg.family == "moe":
+        return cfg.moe_interleave
+    if cfg.family == "vlm":
+        return cfg.cross_attn_every + 1
+    return 1
+
+
+def check_stage_ranges(cfg: ModelConfig, ranges) -> None:
+    g = stage_granularity(cfg)
+    for lo, hi in ranges:
+        if lo % g or hi % g:
+            raise ValueError(
+                f"{cfg.name}: stage cut [{lo}, {hi}) not aligned to the "
+                f"family's stacking granularity {g}")
+
+
+def _slice(tree, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def _hybrid_apps(cfg: ModelConfig, lo: int, hi: int) -> tuple[int, int]:
+    """(call sites before lo, call sites inside [lo, hi)) of the shared
+    attention block (hybrid family)."""
+    every = cfg.hybrid_attn_every
+    if not every:
+        return 0, 0
+    before = -(-lo // every)
+    inside = sum(1 for i in range(lo, hi) if i % every == 0)
+    return before, inside
+
+
+def extract_stage_params(cfg: ModelConfig, params, lo: int, hi: int,
+                         first: bool, last: bool):
+    """The param subtree stage ``[lo, hi)`` needs — and nothing else.
+
+    Tied embeddings are duplicated onto the last stage (the head reads
+    them), mirroring how the partitioner charges shared groups once per
+    partition that uses them."""
+    fam = cfg.family
+    g = stage_granularity(cfg)
+    sp = {}
+    if fam == "dense":
+        sp["blocks"] = _slice(params["blocks"], lo, hi)
+    elif fam == "moe":
+        sp["groups"] = _slice(params["groups"], lo // g, hi // g)
+    elif fam in ("ssm", "hybrid"):
+        sp["blocks"] = _slice(params["blocks"], lo, hi)
+        if _hybrid_apps(cfg, lo, hi)[1]:
+            sp["shared_attn"] = params["shared_attn"]
+    elif fam == "vlm":
+        sp["groups"] = _slice(params["groups"], lo // g, hi // g)
+    elif fam == "encdec":
+        sp["dec_blocks"] = _slice(params["dec_blocks"], lo, hi)
+        if first:
+            sp["frontend"] = params["frontend"]
+            sp["enc_blocks"] = params["enc_blocks"]
+            sp["enc_norm"] = params["enc_norm"]
+    else:
+        raise ValueError(fam)
+    if first:
+        sp["embed"] = params["embed"]
+    if last:
+        sp["final_norm"] = params["final_norm"]
+        if "lm_head" in params:
+            sp["lm_head"] = params["lm_head"]
+        else:
+            sp["embed"] = params["embed"]      # tied head
+    return sp
+
+
+def init_stage_cache(cfg: ModelConfig, lo: int, hi: int, batch_size: int,
+                     max_len: int, batch=None):
+    """Empty decode cache for blocks ``[lo, hi)`` (the stage-sliced
+    counterpart of ``init_serve_cache``; ``{}`` for block-free stages)."""
+    if lo == hi:
+        return {}
+    dt = jnp.bfloat16
+    n = hi - lo
+
+    def stack(mk, count):
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[mk() for _ in range(count)])
+
+    fam = cfg.family
+    if fam == "dense":
+        return stack(lambda: init_cache(cfg, batch_size, max_len, dtype=dt), n)
+    if fam == "moe":
+        il = cfg.moe_interleave
+        mk = ((lambda: init_mla_cache(cfg, batch_size, max_len, dt))
+              if cfg.use_mla else
+              (lambda: init_cache(cfg, batch_size, max_len, dtype=dt)))
+        def group_cache():
+            dc = None
+            if il > 1:
+                dc = stack(mk, il - 1)
+            return (dc, mk())
+        return stack(group_cache, n // il)
+    if fam in ("ssm", "hybrid"):
+        out = {"mamba": stack(lambda: init_mamba_cache(cfg, batch_size, dt),
+                              n)}
+        apps = _hybrid_apps(cfg, lo, hi)[1]
+        if apps:
+            out["shared"] = stack(
+                lambda: init_cache(cfg, batch_size, max_len, dtype=dt), apps)
+        return out
+    if fam == "vlm":
+        k_self = cfg.cross_attn_every
+        hd = cfg.resolved_head_dim
+        def group_cache():
+            sc = stack(lambda: init_cache(cfg, batch_size, max_len, dtype=dt),
+                       k_self)
+            xc = {"k": jnp.zeros((batch_size, cfg.vision_tokens,
+                                  cfg.n_kv_heads, hd), dt),
+                  "v": jnp.zeros((batch_size, cfg.vision_tokens,
+                                  cfg.n_kv_heads, hd), dt)}
+            return (sc, xc)
+        return stack(group_cache, n // (k_self + 1))
+    if fam == "encdec":
+        hd = cfg.resolved_head_dim
+        # enc_len: from the raw frames (first stage / monolithic batch) or
+        # from the shipped encoder output (later pipeline stages)
+        if batch and "frames" in batch:
+            enc_len = batch["frames"].shape[1]
+        elif batch and "enc_out" in batch:
+            enc_len = batch["enc_out"].shape[1]
+        else:
+            enc_len = max_len
+        def layer_cache():
+            sc = init_cache(cfg, batch_size, max_len, dtype=dt)
+            xc = {"k": jnp.zeros((batch_size, enc_len, cfg.n_kv_heads, hd),
+                                 dt),
+                  "v": jnp.zeros((batch_size, enc_len, cfg.n_kv_heads, hd),
+                                 dt)}
+            return (sc, xc)
+        return stack(layer_cache, n)
+    raise ValueError(fam)
+
+
+def stage_fill_cross(cfg: ModelConfig, sparams, cache, batch):
+    """Fill this stage's cross-attention K/V (vlm: from the vision side
+    input; encdec: from ``batch['enc_out']``, the encoder output shipped by
+    the first stage).  No-op for other families / block-free stages."""
+    if not cache:
+        return cache
+    if cfg.family == "vlm":
+        return fill_vlm_cross(cfg, sparams["groups"], cache, batch["vision"])
+    if cfg.family == "encdec":
+        return fill_encdec_cross(cfg, sparams["dec_blocks"], cache,
+                                 batch["enc_out"])
+    return cache
+
+
+def stage_backbone(cfg: ModelConfig, sparams, h, positions, batch, cache,
+                   kind: str, lo: int, hi: int):
+    """Blocks ``[lo, hi)`` applied to ``h`` — the same op sequence the
+    monolithic ``_backbone`` would run over those blocks."""
+    if lo == hi:
+        return h, cache
+    fam = cfg.family
+    if fam == "dense":
+        h, nc, _ = _dense_apply(cfg, sparams, h, positions, cache, kind)
+    elif fam == "moe":
+        h, nc, _ = _moe_apply(cfg, sparams, h, positions, cache, kind)
+    elif fam in ("ssm", "hybrid"):
+        before, _ = _hybrid_apps(cfg, lo, hi)
+        h, nc, _ = _ssm_apply(cfg, sparams, h, positions, cache, kind,
+                              layer_offset=lo, app_offset=before)
+    elif fam == "vlm":
+        h, nc, _ = _vlm_apply(cfg, sparams, h, positions,
+                              vision=(batch or {}).get("vision"),
+                              cache=cache, kind=kind)
+    elif fam == "encdec":
+        h, nc, _ = _encdec_apply(cfg, sparams, h, positions,
+                                 enc_out=(batch or {}).get("enc_out"),
+                                 cache=cache, kind=kind)
+    else:
+        raise ValueError(fam)
+    return h, nc
+
+
+def stage_cache_len(cfg: ModelConfig, cache):
+    """Current per-row sequence length from a (non-empty) stage cache."""
+    return _cache_len(cfg, cache)
+
+
+__all__ = ["check_stage_ranges", "embed_tokens", "encode",
+           "extract_stage_params", "init_stage_cache", "lm_logits",
+           "stage_backbone", "stage_cache_len", "stage_fill_cross",
+           "stage_granularity"]

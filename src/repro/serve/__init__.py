@@ -1,20 +1,31 @@
-"""Token-throughput serving engine (ISSUE 4 tentpole).
+"""Token-throughput serving: monolithic engines + the plan-faithful
+pipelined path.
 
-Two execution paths over the same ``repro.models`` serving contract
-(``prefill`` / ``decode_step``), token-identical by construction and pinned
-by ``tests/data/serve_equivalence.json``:
+Three execution paths over the same ``repro.models`` serving contract
+(``prefill`` / ``decode_step``), all greedy-token-identical and pinned by
+``tests/data/serve_equivalence.json``:
 
-* ``engine="reference"`` — the eager per-token Python loop (the original
-  ``launch/serve.py`` hot path), kept as the tested oracle;
-* ``engine="fast"``      — jitted prefill/decode steps with donated cache
-  buffers, length-aware (bucketed) decode attention, and a slot-based
-  continuous-batching scheduler for staggered request streams.
+* ``ServeEngine(engine="reference")`` — the eager per-token Python loop
+  (the original ``launch/serve.py`` hot path), kept as the tested oracle;
+* ``ServeEngine(engine="fast")`` — jitted prefill/decode steps with donated
+  cache buffers, length-aware (bucketed) decode attention, and the
+  slot-based continuous-batching ``SlotScheduler`` for staggered request
+  streams;
+* ``PipelineServeEngine`` — the deployment path: executes a
+  ``StageExecutionPlan`` (``repro.core.stageplan``, the same IR the
+  emulator simulates) as a chain of per-stage executors — per-stage param
+  subtrees, per-stage jitted prefill + bucketed decode, explicit boundary
+  activation handoff (optionally rowwise-int8 on the wire), checkpoint-
+  backed fault-tolerant stage replacement with in-flight replay, and the
+  same ``SlotScheduler`` for continuous batching across stages.
 
-See ROADMAP.md "Serving-perf contract" for the lockstep/equivalence
-obligations and the BENCH_serve.json workflow.
+See ROADMAP.md "Serving-perf contract" and "Deployment contract" for the
+lockstep/equivalence obligations and the BENCH_serve.json workflow.
 """
 
 from .engine import ServeEngine
+from .pipeline import PipelineServeEngine, StageDown
 from .scheduler import Request, SlotScheduler
 
-__all__ = ["Request", "ServeEngine", "SlotScheduler"]
+__all__ = ["PipelineServeEngine", "Request", "ServeEngine", "SlotScheduler",
+           "StageDown"]

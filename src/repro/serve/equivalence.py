@@ -4,10 +4,14 @@ reference token streams exactly.
 Mirrors the planner/emulator contracts (``repro.core.equivalence``,
 ``repro.emulator.equivalence``): this module defines a canonical scenario
 grid — synchronized-batch greedy generation over every smoke-preset arch,
-plus staggered request streams through the slot scheduler for the
-non-MoE families — and a capture function that pins the *reference*
-greedy token streams.  Tokens are ints, so the pin is exact by nature
-(the token-level analogue of the float.hex() pins elsewhere).
+staggered request streams through the slot scheduler for the non-MoE
+families, and *pipelined* cells (``pipeline/`` / ``pipeline-stream/``)
+that serve the same requests through ``PipelineServeEngine`` over a
+block-cut ``StageExecutionPlan`` (first/middle/last cuts x families, with
+mid-stream stage kill + restore variants) — and a capture function that
+pins the *reference* greedy token streams.  Tokens are ints, so the pin is
+exact by nature (the token-level analogue of the float.hex() pins
+elsewhere).
 
 ``scripts/gen_serve_fixture.py`` writes the committed fixture
 (``tests/data/serve_equivalence.json``); ``tests/test_serve_equivalence.py``
@@ -44,9 +48,48 @@ STREAM_ARCHES = ["granite-3-2b", "mamba2-1.3b", "zamba2-7b",
                  "llama-3.2-vision-90b", "whisper-large-v3"]
 STREAM_REQUESTS = [[8, 6], [8, 4], [12, 7], [8, 5], [12, 3], [8, 6]]
 
+# pipelined serving (PipelineServeEngine over a block-cut IR): partitioned
+# vs monolithic token identity.  (arch, n_layers, cuts, kill) — first/
+# middle/last cuts for three families, one cell per remaining family
+# (MoE/VLM cuts align to the group granularity), plus mid-stream
+# kill + restore cells.  Smoke configs are deepened where the default depth
+# leaves no interior cut.  Pins are the monolithic REFERENCE tokens.
+PIPELINE_CELLS = [
+    ("granite-3-2b", 4, [1], None),
+    ("granite-3-2b", 4, [2], None),
+    ("granite-3-2b", 4, [3], None),
+    ("granite-3-2b", 4, [2], {"after_step": 3, "stage": 1}),
+    ("mamba2-1.3b", 4, [1], None),
+    ("mamba2-1.3b", 4, [2], None),
+    ("mamba2-1.3b", 4, [3], None),
+    ("mamba2-1.3b", 4, [2], {"after_step": 3, "stage": 1}),
+    ("whisper-large-v3", 4, [1], None),
+    ("whisper-large-v3", 4, [2], None),
+    ("whisper-large-v3", 4, [3], None),
+    ("whisper-large-v3", 4, [2], {"after_step": 3, "stage": 1}),
+    ("zamba2-7b", 5, [1, 3], None),               # 3 stages, shared attn
+    ("llama4-maverick-400b-a17b", 4, [2], None),  # MoE: group-aligned cut
+    ("deepseek-v3-671b", 2, [1], None),           # MLA cache split
+    ("llama-3.2-vision-90b", 10, [5], None),      # VLM: side-input stages
+]
+
+# continuous batching across stages (SlotScheduler over the pipeline
+# engine), with and without a mid-stream stage kill + replay
+PIPELINE_STREAM_CELLS = [
+    ("granite-3-2b", 4, [2], None),
+    ("granite-3-2b", 4, [2], {"after_step": 4, "stage": 1}),
+    ("mamba2-1.3b", 4, [2], {"after_step": 4, "stage": 1}),
+]
+
+
+def _pipe_id(prefix, arch, cuts, kill):
+    cid = f"{prefix}/{arch}/cut{'-'.join(map(str, cuts))}"
+    return cid + "-kill" if kill else cid
+
 
 def scenarios() -> list[dict]:
-    """The pinned grid: one sync cell per arch + stream cells."""
+    """The pinned grid: one sync cell per arch + stream cells + pipelined
+    (stage-IR) cells."""
     out = []
     for arch in ARCH_IDS:
         out.append({"id": f"sync/{arch}", "kind": "sync", "arch": arch,
@@ -58,6 +101,17 @@ def scenarios() -> list[dict]:
         out.append({"id": f"stream/{arch}", "kind": "stream", "arch": arch,
                     "slots": 2, "requests": reqs, "seed": 1,
                     "max_len": 32, "kv_block": 16})
+    for arch, nl, cuts, kill in PIPELINE_CELLS:
+        out.append({"id": _pipe_id("pipeline", arch, cuts, kill),
+                    "kind": "pipeline", "arch": arch, "n_layers": nl,
+                    "cuts": cuts, "kill": kill, "batch": 2, "prompt_len": 12,
+                    "gen_len": 8, "seed": 0, "max_len": 32, "kv_block": 16})
+    for arch, nl, cuts, kill in PIPELINE_STREAM_CELLS:
+        out.append({"id": _pipe_id("pipeline-stream", arch, cuts, kill),
+                    "kind": "pipeline_stream", "arch": arch, "n_layers": nl,
+                    "cuts": cuts, "kill": kill, "slots": 2,
+                    "requests": STREAM_REQUESTS, "seed": 1, "max_len": 32,
+                    "kv_block": 16})
     return out
 
 
@@ -75,25 +129,68 @@ def make_batch(cfg, b: int, s: int, seed: int) -> dict:
 
 def build_engine(sc: dict) -> ServeEngine:
     cfg = get_config(sc["arch"], "smoke")
+    if sc.get("n_layers") and cfg.n_layers != sc["n_layers"]:
+        cfg = cfg.replace(n_layers=sc["n_layers"])
     params = init_params(cfg, jax.random.PRNGKey(0))
     return ServeEngine(cfg, params, max_len=sc["max_len"],
                        kv_block=sc["kv_block"])
 
 
-def run_scenario(sc: dict, engine: str = "reference",
-                 eng: ServeEngine | None = None) -> dict:
-    """Resolve + run one scenario -> {"tokens": nested int lists}."""
-    eng = eng or build_engine(sc)
-    cfg = eng.cfg
-    if sc["kind"] == "sync":
-        batch = make_batch(cfg, sc["batch"], sc["prompt_len"], sc["seed"])
-        toks = eng.generate(batch, sc["gen_len"], engine=engine)
-        return {"tokens": toks.tolist()}
+def build_pipeline_engine(sc: dict, eng: ServeEngine):
+    """The fast side of a pipeline scenario: the same params served
+    through a block-cut StageExecutionPlan."""
+    from repro.core.stageplan import from_block_cuts
+    from .pipeline import PipelineServeEngine
+    plan = from_block_cuts(eng.cfg, sc["cuts"], spare_nodes=(900, 901))
+    return PipelineServeEngine(eng.cfg, eng.params, plan,
+                               max_len=sc["max_len"],
+                               kv_block=sc["kv_block"])
+
+
+def _requests(cfg, sc) -> list[Request]:
     reqs = []
     for i, (plen, glen) in enumerate(sc["requests"]):
         b = make_batch(cfg, 1, plen, sc["seed"] * 1000 + i)
         reqs.append(Request(rid=i, tokens=np.asarray(b.pop("tokens")),
                             gen_len=glen, extras=b))
+    return reqs
+
+
+def run_scenario(sc: dict, engine: str = "reference",
+                 eng: ServeEngine | None = None) -> dict:
+    """Resolve + run one scenario -> {"tokens": nested int lists}.
+
+    For ``pipeline``/``pipeline_stream`` kinds, ``engine="reference"`` is
+    the monolithic eager oracle (what the fixture pins) and
+    ``engine="fast"`` is the PipelineServeEngine over the scenario's cuts —
+    with the scenario's stage kill + restore + replay when ``kill`` is set,
+    so the pins enforce identity *across* a mid-stream stage replacement."""
+    eng = eng or build_engine(sc)
+    cfg = eng.cfg
+    kind = sc["kind"]
+    if kind == "sync":
+        batch = make_batch(cfg, sc["batch"], sc["prompt_len"], sc["seed"])
+        toks = eng.generate(batch, sc["gen_len"], engine=engine)
+        return {"tokens": toks.tolist()}
+    if kind == "pipeline":
+        batch = make_batch(cfg, sc["batch"], sc["prompt_len"], sc["seed"])
+        if engine == "reference":
+            toks = eng.generate(batch, sc["gen_len"], engine="reference")
+        else:
+            peng = build_pipeline_engine(sc, eng)
+            toks = peng.generate(batch, sc["gen_len"], kill=sc.get("kill"))
+        return {"tokens": toks.tolist()}
+    if kind == "pipeline_stream":
+        reqs = _requests(cfg, sc)
+        if engine == "reference":
+            streams, _ = SlotScheduler(eng, sc["slots"]).run(
+                reqs, engine="reference")
+        else:
+            peng = build_pipeline_engine(sc, eng)
+            streams, _ = SlotScheduler(peng, sc["slots"]).run(
+                reqs, engine="fast", kill=sc.get("kill"))
+        return {"tokens": [s.tolist() for s in streams]}
+    reqs = _requests(cfg, sc)
     streams, _ = SlotScheduler(eng, sc["slots"]).run(reqs, engine=engine)
     return {"tokens": [s.tolist() for s in streams]}
 

@@ -1,0 +1,498 @@
+"""Plan-faithful pipelined serving with fault-tolerant stage replacement.
+
+``PipelineServeEngine`` executes a ``StageExecutionPlan``
+(``repro.core.stageplan`` — the same object the emulator simulates): the
+model's params are split into per-stage subtrees
+(``repro.models.staging``), each stage runs its own jitted prefill and
+bucketed greedy decode, and boundary activations are handed off explicitly
+between stages — optionally rowwise-int8 quantized on the wire
+(``plan.compression.wire_bits == 8``, the paper's lambda compression
+executed for real; quantized boundaries are lossy, so the token-identity
+contract below applies to raw-wire plans).
+
+**Token identity.**  For any cut, the chained stages execute the same
+block-by-block op sequence as the monolithic model, so greedy token
+streams are bit-identical to ``ServeEngine`` — pinned by the ``pipeline/``
+cells of ``tests/data/serve_equivalence.json``, including across a
+mid-stream stage kill + restore.
+
+**Fault tolerance** mirrors the emulator's failure model (LOCKSTEP
+OBLIGATION, see ROADMAP.md "Deployment contract"): at engine construction
+every stage's param subtree is checkpointed (``repro.checkpoint``, the NFS
+analogue).  ``kill_stage`` drops a stage executor (params and caches —
+everything a dead node loses); recovery restores the subtree from the
+checkpoint onto a spare node (chosen by bandwidth to the pipeline
+neighbours when a cluster is given, like the emulator's reschedule) and
+**replays in-flight requests** — greedy decoding is deterministic, so the
+replay reproduces the lost state exactly and the stream continues
+unchanged, the runtime counterpart of the emulator's epoch-tracked work
+replay.
+
+Continuous batching: ``SlotScheduler`` drives this engine through the same
+slot bookkeeping as the monolithic engine — per-stage cache banks, per
+-request prefill admission, batched decode across stages (see
+``repro.serve.scheduler``).
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.kernels.quantize.ref import rowwise_quantize
+from repro.models import staging
+from repro.models.layers import set_decode_kv_bucket
+
+from .engine import _quiet
+
+
+class StageDown(RuntimeError):
+    """A dead stage executor was asked to compute."""
+
+
+class PipelineServeEngine:
+    """Greedy pipelined serving over one StageExecutionPlan.
+
+    cfg/params : the model (any repro.models family); params are split into
+                 per-stage subtrees and the monolithic tree is not kept.
+    plan       : StageExecutionPlan (repro.core.stageplan); block ranges,
+                 node ids, spares, and the wire format come from the IR.
+    max_len    : cache capacity per request/slot (as ServeEngine).
+    kv_block   : decode-attention bucket granularity (as ServeEngine).
+    ckpt_dir   : where per-stage param checkpoints live (default: a fresh
+                 temp dir); the restore source for stage replacement.
+    cluster    : optional ClusterGraph — lets spare selection score
+                 bandwidth to the pipeline neighbours exactly like the
+                 emulator's reschedule.
+    """
+
+    is_pipeline = True
+
+    def __init__(self, cfg, params, plan, *, max_len: int, kv_block: int = 32,
+                 ckpt_dir=None, cluster=None):
+        self.cfg = cfg
+        self.plan = plan
+        self.max_len = int(max_len)
+        self.kv_block = int(kv_block)
+        self.wire_bits = plan.compression.wire_bits
+        self.ranges = plan.block_ranges(cfg.n_layers)
+        staging.check_stage_ranges(cfg, self.ranges)
+        self.n_stages = len(self.ranges)
+        last = self.n_stages - 1
+        self.stage_params = [
+            staging.extract_stage_params(cfg, params, lo, hi, k == 0,
+                                         k == last)
+            for k, (lo, hi) in enumerate(self.ranges)]
+        self.node_of_stage = [s.node for s in plan.stages]
+        self.spares = list(plan.spare_nodes)
+        self.cluster = cluster
+        self.down: set[int] = set()
+        self.events: list[tuple[float, str]] = []
+        self._t0 = time.perf_counter()
+
+        # durable per-stage subtrees: the restore source for replacement
+        if ckpt_dir is not None:
+            self.ckpt_dir = Path(ckpt_dir)
+        else:
+            # owned tempdir: lives exactly as long as the engine
+            self._ckpt_tmp = tempfile.TemporaryDirectory(
+                prefix="repro-stage-ckpt-")
+            self.ckpt_dir = Path(self._ckpt_tmp.name)
+        self._templates = []
+        for k, sp in enumerate(self.stage_params):
+            save_checkpoint(self.ckpt_dir / f"stage_{k}", 0, sp)
+            self._templates.append(jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), sp))
+
+        self._prefill_fns = [jax.jit(self._prefill_body(k),
+                                     donate_argnums=(2,))
+                             for k in range(self.n_stages)]
+        self._decode_fns = [jax.jit(self._decode_body(k),
+                                    static_argnums=(3,), donate_argnums=(2,))
+                            for k in range(self.n_stages)]
+        self._admit_fns = [jax.jit(self._admit_body(k), donate_argnums=(2,))
+                           for k in range(self.n_stages)]
+        self._scatter_fns = [jax.jit(self._scatter_body(k),
+                                     donate_argnums=(0,))
+                             for k in range(self.n_stages)]
+        self._bank_axes = None
+
+    # -- wire format --------------------------------------------------------
+
+    def _wire_out(self, h):
+        """Boundary activation -> wire payload (trace-time)."""
+        if self.wire_bits == 8:
+            return rowwise_quantize(h)
+        return h
+
+    def _wire_in(self, x):
+        if self.wire_bits == 8:
+            q, scale = x
+            return (q.astype(jnp.float32) * scale).astype(
+                jnp.dtype(self.cfg.param_dtype))
+        return x
+
+    # -- per-stage step bodies ---------------------------------------------
+
+    def _stage_batch(self, k, batch, side):
+        """The parts of the request a non-first stage needs."""
+        if k == 0:
+            return batch
+        if self.cfg.family == "vlm":
+            return {"vision": batch["vision"]}
+        if self.cfg.family == "encdec":
+            return {"enc_out": side}
+        return {}
+
+    def _prefill_body(self, k):
+        cfg = self.cfg
+        lo, hi = self.ranges[k]
+        first, last = k == 0, k == self.n_stages - 1
+
+        def fn(sparams, x_in, cache, batch):
+            if first:
+                h = staging.embed_tokens(sparams, cfg, batch["tokens"])
+                if cfg.family == "encdec":
+                    batch = dict(batch)
+                    batch["enc_out"] = staging.encode(cfg, sparams,
+                                                      batch["frames"])
+            else:
+                h = self._wire_in(x_in)
+            cache = staging.stage_fill_cross(cfg, sparams, cache, batch)
+            b, s = h.shape[:2]
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            h, cache = staging.stage_backbone(cfg, sparams, h, positions,
+                                              batch, cache, "prefill", lo, hi)
+            side = batch.get("enc_out") if cfg.family == "encdec" else None
+            if last:
+                logits = staging.lm_logits(sparams, cfg, h[:, -1:])
+                toks = jnp.argmax(logits, -1).astype(jnp.int32)
+                return (toks, logits), cache, side
+            return self._wire_out(h), cache, side
+
+        return fn
+
+    def _decode_body(self, k):
+        cfg = self.cfg
+        lo, hi = self.ranges[k]
+        first, last = k == 0, k == self.n_stages - 1
+
+        def fn(sparams, x_in, cache, kv_bucket):
+            h = (staging.embed_tokens(sparams, cfg, x_in) if first
+                 else self._wire_in(x_in))
+            if lo < hi:
+                ln = staging.stage_cache_len(cfg, cache)
+                positions = jnp.broadcast_to(ln[:, None], (h.shape[0], 1))
+                set_decode_kv_bucket(kv_bucket)
+                try:
+                    h, cache = staging.stage_backbone(
+                        cfg, sparams, h, positions, {}, cache, "decode",
+                        lo, hi)
+                finally:
+                    set_decode_kv_bucket(None)
+            if last:
+                logits = staging.lm_logits(sparams, cfg, h)
+                toks = jnp.argmax(logits, -1).astype(jnp.int32)
+                return (toks, logits), cache
+            return self._wire_out(h), cache
+
+        return fn
+
+    def _admit_body(self, k):
+        """Prefill one request at its exact prompt length into a fresh
+        single-row stage cache, then scatter it into slot ``slot`` of the
+        stage's cache bank (the per-stage counterpart of the scheduler's
+        monolithic ``_admit``)."""
+        cfg = self.cfg
+        lo, hi = self.ranges[k]
+        body = self._prefill_body(k)
+
+        def fn(sparams, x_in, bank, batch, slot):
+            if k == 0:
+                s = batch["tokens"].shape[1]
+            else:
+                s = (x_in[0] if self.wire_bits == 8 else x_in).shape[1]
+            c1 = staging.init_stage_cache(cfg, lo, hi, 1, s, batch=batch)
+            out, c1, side = body(sparams, x_in, c1, batch)
+            bank = self._scatter_tree(k, bank, c1, slot)
+            return out, bank, side
+
+        return fn
+
+    def _scatter_body(self, k):
+        def fn(bank, c1, slot):
+            return self._scatter_tree(k, bank, c1, slot)
+        return fn
+
+    def _scatter_tree(self, k, bank, one, slot):
+        from .scheduler import _insert_leaf
+        if not bank:
+            return bank
+        return jax.tree.map(
+            lambda full, o, ax: _insert_leaf(full, o, slot, ax),
+            bank, one, self._bank_axes[k])
+
+    # -- bucket / fit (same contract as ServeEngine) ------------------------
+
+    def bucket_for(self, filled: int) -> int:
+        b = -(-filled // self.kv_block) * self.kv_block
+        return min(max(b, self.kv_block), self.max_len)
+
+    def _check_fit(self, prompt_len: int, gen_len: int) -> None:
+        if prompt_len + gen_len - 1 > self.max_len:
+            raise ValueError(
+                f"prompt {prompt_len} + gen {gen_len} - 1 exceeds "
+                f"max_len {self.max_len}")
+
+    # -- chained execution --------------------------------------------------
+
+    def _require_up(self, k):
+        if self.stage_params[k] is None:
+            raise StageDown(f"stage {k} (node {self.node_of_stage[k]}) "
+                            "is down — restore it first")
+
+    def _chain_prefill(self, batch, caches):
+        x = side = None
+        for k in range(self.n_stages):
+            self._require_up(k)
+            bk = self._stage_batch(k, batch, side)
+            x, caches[k], s = _quiet(self._prefill_fns[k],
+                                     self.stage_params[k], x, caches[k], bk)
+            if s is not None:
+                side = s
+        toks, logits = x
+        return toks, logits, caches
+
+    def _chain_decode(self, toks, caches, bucket):
+        x = toks
+        for k in range(self.n_stages):
+            self._require_up(k)
+            x, caches[k] = _quiet(self._decode_fns[k], self.stage_params[k],
+                                  x, caches[k], bucket)
+        toks, logits = x
+        return toks, logits, caches
+
+    # scheduler-facing alias: same signature as ServeEngine._decode_quiet
+    def _decode_quiet(self, toks, caches, bucket):
+        return self._chain_decode(toks, caches, bucket)
+
+    def _fresh_caches(self, b, batch):
+        return [staging.init_stage_cache(self.cfg, lo, hi, b, self.max_len,
+                                         batch=batch)
+                for lo, hi in self.ranges]
+
+    # -- synchronized-batch generation with deterministic fault injection ---
+
+    def generate(self, batch, gen_len: int, *, kill=None):
+        """Greedy-decode a synchronized batch for ``gen_len`` tokens
+        through the stage pipeline; np tokens (B, gen_len) int32.
+
+        kill: optional ``{"after_step": s, "stage": k}`` — stage ``k`` is
+        killed after ``s`` completed decode steps (0 = right after
+        prefill); the engine restores it onto a spare and replays the
+        in-flight batch before continuing, so the stream is identical to
+        an undisturbed run."""
+        tokens = batch["tokens"]
+        b, prompt_len = tokens.shape
+        self._check_fit(prompt_len, gen_len)
+        caches = self._fresh_caches(b, batch)
+        toks, _, caches = self._chain_prefill(batch, caches)
+        outs = [toks]
+        cur = prompt_len
+        for step in range(gen_len - 1):
+            if kill is not None and kill["after_step"] == step:
+                self.kill_stage(kill["stage"])
+            if self.down:
+                toks, caches = self._recover_sync(batch, step, caches)
+            toks, _, caches = self._chain_decode(toks, caches,
+                                                 self.bucket_for(cur + 1))
+            cur += 1
+            outs.append(toks)
+        return np.asarray(jnp.concatenate(outs, axis=1)).astype(np.int32)
+
+    def _recover_sync(self, batch, steps_done, caches):
+        """Restore every dead stage, then replay the in-flight batch:
+        fresh caches, prefill, and the ``steps_done`` decode steps already
+        emitted (greedy decoding is deterministic, so the replay
+        reconstructs the lost stage state bit-exactly)."""
+        del caches                                # lost with the dead stage
+        for k in sorted(self.down):
+            self.restore_stage(k)
+        b, prompt_len = batch["tokens"].shape
+        caches = self._fresh_caches(b, batch)
+        toks, _, caches = self._chain_prefill(batch, caches)
+        cur = prompt_len
+        for _ in range(steps_done):
+            toks, _, caches = self._chain_decode(toks, caches,
+                                                 self.bucket_for(cur + 1))
+            cur += 1
+        self._note(f"replayed {b} in-flight request(s), {steps_done} "
+                   "decode step(s)")
+        return toks, caches
+
+    # -- fault injection / recovery ----------------------------------------
+
+    def _note(self, msg: str):
+        self.events.append((time.perf_counter() - self._t0, msg))
+
+    def kill_stage(self, k: int) -> None:
+        """Kill stage ``k``'s executor: params and caches are lost, exactly
+        what the emulator models when the hosting node dies."""
+        self._require_up(k)
+        self.down.add(k)
+        self.stage_params[k] = None
+        self._note(f"node {self.node_of_stage[k]} FAILED (stage {k})")
+
+    def restore_stage(self, k: int, node: int | None = None) -> None:
+        """Restore stage ``k``'s param subtree from its checkpoint onto a
+        spare node (emulator reschedule semantics: best spare by bandwidth
+        to the pipeline neighbours when a cluster is known)."""
+        if k not in self.down:
+            return
+        if node is None:
+            if not self.spares:
+                self._note(f"stage {k}: NO SPARE NODE — pipeline stalled")
+                raise StageDown(f"stage {k}: no spare node to restore onto")
+            node = (max(self.spares, key=lambda n: self._spare_score(k, n))
+                    if self.cluster is not None else self.spares[0])
+        elif node not in self.spares:
+            raise ValueError(
+                f"stage {k}: node {node} is not in the spare pool "
+                f"{self.spares} (stages restore onto spares, as in the "
+                "emulator's reschedule)")
+        self.spares.remove(node)
+        old = self.node_of_stage[k]
+        self.node_of_stage[k] = node
+        restored = restore_checkpoint(self.ckpt_dir / f"stage_{k}", 0,
+                                      self._templates[k])
+        self.stage_params[k] = jax.tree.map(jnp.asarray, restored)
+        self.down.discard(k)
+        self._note(f"stage {k}: pod rescheduled {old} -> {node} "
+                   "(params restored from checkpoint)")
+
+    def _spare_score(self, k: int, n: int) -> float:
+        """The emulator's reschedule score: bandwidth to the neighbours."""
+        s = 0.0
+        prev = (self.plan.dispatcher_node if k == 0
+                else self.node_of_stage[k - 1])
+        s += self.cluster.bw[prev, n]
+        if k < self.n_stages - 1:
+            s += self.cluster.bw[n, self.node_of_stage[k + 1]]
+        return s
+
+    # -- scheduler integration (continuous batching across stages) ----------
+
+    def slot_bank(self, slots: int, proto_batch):
+        """Per-stage cache banks for ``slots`` requests; also fixes the
+        per-leaf batch axes used to scatter single-request caches in."""
+        self._ensure_axes(proto_batch)
+        return self._fresh_caches(slots, proto_batch)
+
+    def _ensure_axes(self, proto_batch):
+        if self._bank_axes is not None:
+            return
+        from .scheduler import leaf_batch_axes
+        cfg = self.cfg
+
+        def stage_shapes(k):
+            lo, hi = self.ranges[k]
+
+            def shapes(b):
+                pb = {kk: jax.ShapeDtypeStruct((b,) + tuple(v.shape[1:]),
+                                               v.dtype)
+                      for kk, v in proto_batch.items()}
+                return jax.eval_shape(lambda: staging.init_stage_cache(
+                    cfg, lo, hi, b, self.max_len, batch=pb))
+
+            return shapes
+
+        self._bank_axes = [leaf_batch_axes(stage_shapes(k))
+                           for k in range(self.n_stages)]
+
+    def admit_slot(self, tokens, extras, caches, slot_tokens, slot):
+        """Admit one request into slot ``slot`` of every stage's bank:
+        per-stage prefill at the exact prompt length, boundary handoff
+        between stages, scatter into the banks.  Returns
+        (first token (1,1), caches, slot_tokens)."""
+        batch = {"tokens": tokens, **extras}
+        x = side = None
+        for k in range(self.n_stages):
+            self._require_up(k)
+            bk = self._stage_batch(k, batch, side)
+            x, caches[k], s = _quiet(self._admit_fns[k],
+                                     self.stage_params[k], x, caches[k], bk,
+                                     np.int32(slot))
+            if s is not None:
+                side = s
+        tok, _ = x
+        slot_tokens = jax.lax.dynamic_update_slice(slot_tokens, tok,
+                                                   (slot, 0))
+        return tok, caches, slot_tokens
+
+    def recover_and_replay(self, inflight, caches, slot_tokens, proto_batch):
+        """Scheduler-side recovery: restore dead stages, re-create their
+        cache banks, and replay every in-flight request into its slot.
+
+        inflight: list of (slot, Request, n_emitted).  Each request is
+        replayed in isolation (prefill + its emitted decode steps on
+        single-row caches — slot isolation makes this token-identical to
+        the batched history) and the resulting per-stage state is scattered
+        back into the banks."""
+        slots = slot_tokens.shape[0]
+        dead = sorted(self.down)
+        for k in dead:
+            self.restore_stage(k)
+        for k in dead:
+            caches[k] = staging.init_stage_cache(
+                self.cfg, *self.ranges[k], slots, self.max_len,
+                batch=proto_batch)
+        for slot, req, n_emitted in inflight:
+            batch = {"tokens": jnp.asarray(req.tokens),
+                     **{kk: jnp.asarray(v)
+                        for kk, v in (req.extras or {}).items()}}
+            c1 = self._fresh_caches(1, batch)
+            toks, _, c1 = self._chain_prefill(batch, c1)
+            cur = req.tokens.shape[1]
+            for _ in range(n_emitted - 1):
+                toks, _, c1 = self._chain_decode(toks, c1,
+                                                 self.bucket_for(cur + 1))
+                cur += 1
+            for k in range(self.n_stages):
+                if caches[k]:
+                    caches[k] = self._scatter_fns[k](caches[k], c1[k],
+                                                     np.int32(slot))
+            slot_tokens = jax.lax.dynamic_update_slice(slot_tokens, toks,
+                                                       (slot, 0))
+        self._note(f"replayed {len(inflight)} in-flight request(s) after "
+                   f"restoring stage(s) {dead}")
+        return caches, slot_tokens
+
+    # -- timing helpers (serve_bench) ---------------------------------------
+
+    def warmup(self, batch, gen_len: int) -> float:
+        t0 = time.perf_counter()
+        self.generate(batch, gen_len)
+        return time.perf_counter() - t0
+
+    def timed_decode(self, batch, steps: int) -> float:
+        """Steady-state pipelined decode seconds for ``steps`` tokens
+        (prefill outside the clock; same methodology as ServeEngine)."""
+        prompt_len = batch["tokens"].shape[1]
+        self._check_fit(prompt_len, steps + 1)
+        caches = self._fresh_caches(batch["tokens"].shape[0], batch)
+        toks, _, caches = self._chain_prefill(batch, caches)
+        jax.block_until_ready(toks)
+        cur = prompt_len
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            toks, _, caches = self._chain_decode(toks, caches,
+                                                 self.bucket_for(cur + 1))
+            cur += 1
+        jax.block_until_ready(toks)
+        return time.perf_counter() - t0

@@ -26,6 +26,14 @@ request's length are masked by its per-slot length until overwritten.
 Like the engine, the loop never reads a device value: the schedule depends
 only on statically known prompt/gen lengths, and all tokens are fetched in
 one sync at the end.
+
+The same slot bookkeeping also drives ``PipelineServeEngine`` (continuous
+batching *across* pipeline stages): the engine supplies per-stage cache
+banks (``slot_bank``), per-request admission (``admit_slot``), the chained
+decode step, and — under an injected stage ``kill`` — checkpoint-backed
+recovery with per-slot replay (``recover_and_replay``); the host-side
+schedule here is identical either way, which is why pipelined streams stay
+token-identical to the monolithic reference.
 """
 
 from __future__ import annotations
@@ -52,6 +60,17 @@ class Request:
     tokens: np.ndarray
     gen_len: int
     extras: dict | None = None
+
+
+def leaf_batch_axes(shapes):
+    """Per-leaf batch-axis index from a ``shapes(batch_size)`` eval-shape
+    callable: the one axis where a batch=1 and a batch=2 cache disagree
+    (only batch_size varies).  Shared by the monolithic slot bank and the
+    pipeline engine's per-stage banks."""
+    s1, s2 = shapes(1), shapes(2)
+    return jax.tree.map(
+        lambda a, b: int(np.argmax(np.array(a.shape) != np.array(b.shape))),
+        s1, s2)
 
 
 def _insert_leaf(full, one, slot, b_ax):
@@ -93,8 +112,6 @@ class SlotScheduler:
         self._admit = jax.jit(_admit, donate_argnums=(3,))
 
     def _leaf_batch_axes(self, proto_extras):
-        """Per-leaf batch-axis index: the one axis where a batch=1 and a
-        batch=2 cache eval_shape disagree (only batch_size varies)."""
         cfg, ml = self.engine.cfg, self.engine.max_len
 
         def shapes(b):
@@ -104,14 +121,19 @@ class SlotScheduler:
             return jax.eval_shape(
                 lambda: init_serve_cache(cfg, b, ml, batch=batch))
 
-        s1, s2 = shapes(1), shapes(2)
-        return jax.tree.map(
-            lambda a, b: int(np.argmax(np.array(a.shape) != np.array(b.shape))),
-            s1, s2)
+        return leaf_batch_axes(shapes)
 
-    def run(self, requests: list[Request], engine: str = "fast"):
+    def run(self, requests: list[Request], engine: str = "fast",
+            kill: dict | None = None):
         """Serve `requests` to completion; returns (streams, stats) with
-        streams[i] the i-th request's np int32 greedy tokens (gen_len,)."""
+        streams[i] the i-th request's np int32 greedy tokens (gen_len,).
+
+        kill: optional ``{"after_step": s, "stage": k}`` — only meaningful
+        when the engine is a ``PipelineServeEngine``: stage ``k`` is killed
+        after the ``s``-th batched decode step, then restored from its
+        checkpoint onto a spare node with every in-flight request replayed
+        into its slot (see ``PipelineServeEngine.recover_and_replay``).
+        The streams stay identical to an undisturbed run."""
         if not requests:
             return [], {"wall_s": 0.0, "decode_steps": 0,
                         "slot_utilization": 0.0}
@@ -135,13 +157,18 @@ class SlotScheduler:
 
         eng = self.engine
         cfg, B = eng.cfg, self.slots
+        pipeline = getattr(eng, "is_pipeline", False)
         proto_extras = requests[0].extras or {}
-        if self._batch_axes is None:
-            self._batch_axes = self._leaf_batch_axes(proto_extras)
         proto_batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
         for k, v in proto_extras.items():
             proto_batch[k] = jnp.zeros((B,) + v.shape[1:], v.dtype)
-        cache = init_serve_cache(cfg, B, eng.max_len, batch=proto_batch)
+        if pipeline:
+            # per-stage cache banks; admission/scatter live on the engine
+            cache = eng.slot_bank(B, proto_batch)
+        else:
+            if self._batch_axes is None:
+                self._batch_axes = self._leaf_batch_axes(proto_extras)
+            cache = init_serve_cache(cfg, B, eng.max_len, batch=proto_batch)
         slot_tokens = jnp.zeros((B, 1), jnp.int32)
 
         t0 = time.perf_counter()
@@ -154,6 +181,7 @@ class SlotScheduler:
         step_maps: list[dict[int, int]] = []  # per-step slot -> rid
         n_steps = busy = 0
 
+        killed = False
         while next_idx < len(requests) or active:
             while free and next_idx < len(requests):
                 r = requests[next_idx]
@@ -161,9 +189,14 @@ class SlotScheduler:
                 slot = free.pop(0)
                 extras = {k: jnp.asarray(v)
                           for k, v in (r.extras or {}).items()}
-                tok, cache, slot_tokens = _quiet(
-                    self._admit, eng.params, jnp.asarray(r.tokens), extras,
-                    cache, slot_tokens, np.int32(slot))
+                if pipeline:
+                    tok, cache, slot_tokens = eng.admit_slot(
+                        jnp.asarray(r.tokens), extras, cache, slot_tokens,
+                        slot)
+                else:
+                    tok, cache, slot_tokens = _quiet(
+                        self._admit, eng.params, jnp.asarray(r.tokens),
+                        extras, cache, slot_tokens, np.int32(slot))
                 first_tok[r.rid] = tok
                 slot_len[slot] = r.tokens.shape[1]
                 if r.gen_len > 1:
@@ -171,6 +204,18 @@ class SlotScheduler:
                 else:
                     free.append(slot)
                     free.sort()
+            if (kill is not None and pipeline and not killed
+                    and n_steps >= kill["after_step"]):
+                # the stage dies after `after_step` completed batched decode
+                # steps (0 = right after the first admissions): params and
+                # cache banks are lost, the engine restores from checkpoint
+                # and replays every in-flight request into its slot
+                killed = True
+                eng.kill_stage(kill["stage"])
+                inflight = [(s, st[0], st[1])
+                            for s, st in sorted(active.items())]
+                cache, slot_tokens = eng.recover_and_replay(
+                    inflight, cache, slot_tokens, proto_batch)
             if not active:
                 continue
             bucket = eng.bucket_for(

@@ -85,6 +85,7 @@ def test_pipeline_parallel_matches_forward():
     out = run_py("""
         import jax, jax.numpy as jnp
         from repro.configs import get_config
+        from repro.core.stageplan import from_block_cuts
         from repro.models import init_params, forward
         from repro.launch.pp import make_pp_forward
         from repro.models.layers import set_mesh_axes
@@ -96,8 +97,10 @@ def test_pipeline_parallel_matches_forward():
         ref = forward(cfg, params, {"tokens": tokens}, kind="eval")[0][:, -1]
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
         set_mesh_axes(mesh.axis_names, mesh=mesh)
+        # stage boundaries read from the stage-execution IR (raw wire)
+        plan = from_block_cuts(cfg, [2])
         with mesh:
-            out = jax.jit(make_pp_forward(cfg, mesh, 2, compress_bits=0))(params, tokens)
+            out = jax.jit(make_pp_forward(cfg, mesh, 2, plan=plan))(params, tokens)
         print("ERR", float(jnp.max(jnp.abs(out - ref))))
     """)
     assert float(out.split()[-1]) < 1e-4

@@ -1,0 +1,252 @@
+"""PipelineServeEngine + stage IR adapters: param-subtree splitting, cut
+alignment, IR round-trips (SeiferPlan -> IR -> emulator preserves the
+pinned emulator-equivalence metrics byte-exactly), the deprecated raw-tuple
+emulator path, pp's IR-driven stage boundaries, and fault-tolerant stage
+replacement (kill / restore-from-checkpoint / replay).
+
+The full partitioned-vs-monolithic token-identity grid lives in the
+serve-equivalence contract (tests/data/serve_equivalence.json, pipeline/
+and pipeline-stream/ cells); this file covers the unit-level mechanics.
+"""
+
+import json
+import os
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import partition_and_place
+from repro.core.stageplan import (BoundarySpec, StageExecutionPlan, StageSpec,
+                                  from_block_cuts)
+from repro.emulator import emulate_plan, equivalence as emu_eq, plan_stage_args
+from repro.emulator.engine import simulate
+from repro.models import init_params
+from repro.models.config import SHAPES
+from repro.models.staging import extract_stage_params
+from repro.serve import PipelineServeEngine, StageDown
+from repro.serve.equivalence import make_batch
+
+KEY = jax.random.PRNGKey(0)
+EMU_FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                           "emulator_equivalence.json")
+
+
+def _leaf_bytes(tree):
+    return sum(a.size * a.dtype.itemsize for a in jax.tree_util.tree_leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# IR construction and validation
+# ---------------------------------------------------------------------------
+
+def test_from_block_cuts_layout():
+    cfg = get_config("granite-3-2b", "smoke").replace(n_layers=4)
+    plan = from_block_cuts(cfg, [1, 3], spare_nodes=(7,))
+    assert plan.n_stages == 3
+    assert plan.nodes == [0, 1, 2, 3]
+    assert plan.stages[0].layers[:2] == ("input", "embed")
+    assert plan.stages[-1].layers[-1] == "head"
+    assert plan.block_ranges(cfg.n_layers) == [(0, 1), (1, 3), (3, 4)]
+    assert plan.spare_nodes == (7,)
+    assert "3 stages" in plan.describe()
+
+
+def test_from_block_cuts_rejects_bad_cuts():
+    cfg = get_config("granite-3-2b", "smoke").replace(n_layers=4)
+    for cuts in ([0], [4], [2, 2], [3, 1]):
+        with pytest.raises(ValueError):
+            from_block_cuts(cfg, cuts)
+
+
+def test_block_ranges_reject_gaps():
+    plan = StageExecutionPlan(stages=[
+        StageSpec(0, ("input", "embed", "block0"), 1),
+        StageSpec(1, ("block2", "head"), 2),       # block1 missing
+    ])
+    with pytest.raises(ValueError):
+        plan.block_ranges(3)
+
+
+def test_granularity_enforced_for_group_families():
+    moe = get_config("llama4-maverick-400b-a17b", "smoke")   # interleave 2
+    params = init_params(moe, KEY)
+    plan = from_block_cuts(moe, [1])
+    with pytest.raises(ValueError):
+        PipelineServeEngine(moe, params, plan, max_len=32)
+
+
+def test_planner_emits_tiling_ranges():
+    """plan_stages -> execution_plan: stage block ranges tile the model."""
+    from repro.core.cluster import tpu_cluster
+    from repro.core.pipeline import plan_stages
+    cfg = get_config("llama3-405b", "full")
+    sp = plan_stages(cfg, SHAPES["prefill_32k"],
+                     cluster=tpu_cluster(n_pods=2, slots_per_pod=8),
+                     hbm_per_stage_bytes=16e9 * 64)
+    ep = sp.execution_plan()
+    ranges = ep.block_ranges(cfg.n_layers)
+    assert ranges[0][0] == 0 and ranges[-1][1] == cfg.n_layers
+    assert ep.arch == cfg.name
+    assert ep.nodes == list(sp.plan.placement.nodes)
+
+
+# ---------------------------------------------------------------------------
+# SeiferPlan -> IR -> emulator round-trip (byte-exact vs the pinned fixture)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sid", ["ff/ring5/ResNet50/cap64",
+                                 "fault/kill-stage1",
+                                 "fault/kill-revive"])
+def test_ir_roundtrip_preserves_emulator_fixture(sid):
+    with open(EMU_FIXTURE) as f:
+        fix = json.load(f)
+    sc = {s["id"]: s for s in emu_eq.scenarios()}[sid]
+    cluster, nodes, boundary, flops, faults, cfg = emu_eq.build_scenario(sc)
+    graph = emu_eq.PAPER_MODELS[sc["model"]]()
+    plan = partition_and_place(graph, emu_eq._make_cluster(sc["cluster"]),
+                               sc["cap_mb"] * 1e6, n_classes=3, rng=0)
+    ir = plan.execution_plan(cluster)
+    # the IR carries the emulator triple verbatim
+    assert ir.emulator_args() == (list(nodes), list(boundary), list(flops))
+    assert plan_stage_args(plan) == ir.emulator_args()
+    assert set(ir.spare_nodes) == set(range(cluster.n)) - set(nodes)
+    # and replaying the fixture scenario through the IR pins byte-exact
+    m = simulate(cluster, *ir.emulator_args(), cfg,
+                 n_batches=sc["n_batches"], duration_s=sc["duration_s"],
+                 arrival_rate_hz=sc["rate"], faults=faults, rng=0,
+                 engine="auto")
+    assert emu_eq.pin(m) == fix[sid]
+
+
+def test_raw_tuple_emulator_path_deprecated_but_working():
+    sc = {s["id"]: s for s in emu_eq.scenarios()}["ff/ring5/ResNet50/cap64"]
+    cluster, nodes, boundary, flops, _, cfg = emu_eq.build_scenario(sc)
+    ir = StageExecutionPlan(
+        stages=[StageSpec(k, (), nodes[k + 1], in_bytes=boundary[k],
+                          compute_flops=flops[k])
+                for k in range(len(boundary))],
+        dispatcher_node=nodes[0])
+    via_ir = emulate_plan(ir, cluster, cfg, n_batches=20)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        via_tuple = emulate_plan((nodes, boundary, flops), cluster, cfg,
+                                 n_batches=20)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert via_ir == via_tuple
+
+
+# ---------------------------------------------------------------------------
+# param subtree splitting
+# ---------------------------------------------------------------------------
+
+def test_stage_subtrees_partition_the_params():
+    cfg = get_config("granite-3-2b", "smoke").replace(n_layers=4)
+    params = init_params(cfg, KEY)
+    subs = [extract_stage_params(cfg, params, lo, hi, k == 0, k == 2)
+            for k, (lo, hi) in enumerate([(0, 1), (1, 3), (3, 4)])]
+    blocks = [jax.tree_util.tree_leaves(s["blocks"])[0].shape[0]
+              for s in subs]
+    assert blocks == [1, 2, 1]
+    assert "embed" in subs[0] and "embed" not in subs[1]
+    assert "final_norm" in subs[2] and "final_norm" not in subs[0]
+    # tied head: the embedding rides with the last stage too
+    assert "embed" in subs[2]
+    # middle stage carries blocks only: strictly smaller than the full tree
+    assert _leaf_bytes(subs[1]) < _leaf_bytes(params)
+
+
+def test_hybrid_shared_attention_duplicated_per_call_site_stage():
+    cfg = get_config("zamba2-7b", "smoke")         # 5 layers, attn every 2
+    params = init_params(cfg, KEY)
+    a = extract_stage_params(cfg, params, 0, 2, True, False)   # site at 0
+    b = extract_stage_params(cfg, params, 2, 4, False, False)  # site at 2
+    c = extract_stage_params(cfg, params, 4, 5, False, True)   # site at 4
+    assert all("shared_attn" in s for s in (a, b, c))
+    d = extract_stage_params(cfg, params, 1, 2, False, False)  # no site
+    assert "shared_attn" not in d
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant stage replacement
+# ---------------------------------------------------------------------------
+
+def _dense_engine(tmp_path, spares=(90,)):
+    cfg = get_config("granite-3-2b", "smoke").replace(n_layers=4)
+    params = init_params(cfg, KEY)
+    plan = from_block_cuts(cfg, [2], spare_nodes=spares)
+    eng = PipelineServeEngine(cfg, params, plan, max_len=32, kv_block=16,
+                              ckpt_dir=tmp_path / "ckpt")
+    return cfg, eng
+
+
+def test_kill_restore_replay_events(tmp_path):
+    cfg, eng = _dense_engine(tmp_path)
+    batch = make_batch(cfg, 1, 8, 3)
+    clean = eng.generate(batch, 6)
+    toks = eng.generate(batch, 6, kill={"after_step": 2, "stage": 1})
+    np.testing.assert_array_equal(clean, toks)
+    msgs = [m for _, m in eng.events]
+    assert any("FAILED" in m for m in msgs)
+    assert any("rescheduled" in m and "restored from checkpoint" in m
+               for m in msgs)
+    assert any("replayed" in m for m in msgs)
+    assert eng.node_of_stage[1] == 90           # moved onto the spare
+    assert (tmp_path / "ckpt" / "stage_1" / "step_00000000").exists()
+
+
+def test_no_spare_stalls(tmp_path):
+    cfg, eng = _dense_engine(tmp_path, spares=())
+    batch = make_batch(cfg, 1, 8, 3)
+    with pytest.raises(StageDown):
+        eng.generate(batch, 6, kill={"after_step": 1, "stage": 0})
+    assert any("NO SPARE NODE" in m for _, m in eng.events)
+
+
+def test_dead_stage_refuses_work(tmp_path):
+    cfg, eng = _dense_engine(tmp_path)
+    eng.kill_stage(0)
+    with pytest.raises(StageDown):
+        eng.kill_stage(0)                       # already dead
+    eng.restore_stage(0)
+    batch = make_batch(cfg, 1, 8, 3)
+    assert eng.generate(batch, 4).shape == (1, 4)
+
+
+def test_int8_wire_boundary(tmp_path):
+    """wire_bits=8: boundary activations cross stages rowwise-int8
+    quantized; the stream still decodes end to end (lossy, so no identity
+    pin — documented in BoundarySpec)."""
+    cfg = get_config("granite-3-2b", "smoke").replace(n_layers=4)
+    params = init_params(cfg, KEY)
+    plan = from_block_cuts(cfg, [2], wire_bits=8)
+    assert plan.compression == BoundarySpec(wire_bits=8)
+    eng = PipelineServeEngine(cfg, params, plan, max_len=32, kv_block=16,
+                              ckpt_dir=tmp_path / "c")
+    toks = eng.generate(make_batch(cfg, 2, 8, 0), 6)
+    assert toks.shape == (2, 6) and toks.dtype == np.int32
+
+
+# ---------------------------------------------------------------------------
+# pp / describe integration
+# ---------------------------------------------------------------------------
+
+def test_pp_rejects_mismatched_plan():
+    from repro.launch.pp import make_pp_forward
+    cfg = get_config("deepseek-7b", "smoke").replace(n_layers=4)
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    with pytest.raises(ValueError, match="stages"):
+        make_pp_forward(cfg, mesh, 2, plan=from_block_cuts(cfg, [2]))
+
+
+def test_describe_reports_per_stage_latencies():
+    from repro.configs.paper_cnns import PAPER_MODELS
+    from repro.core.cluster import random_geometric_cluster
+    plan = partition_and_place(PAPER_MODELS["ResNet50"](),
+                               random_geometric_cluster(12, rng=3), 30e6,
+                               n_classes=3, rng=0)
+    text = plan.describe()
+    assert "transfer" in text and "compute" in text
+    assert "bottleneck" in text
