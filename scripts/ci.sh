@@ -9,6 +9,12 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+echo "--- lint: repro.analysis --check src tests"
+# AST contract linter (compat boundary, jit purity, donation, PRNG
+# discipline, determinism, pallas structure).  Runs before pytest: a
+# contract violation fails fast, without waiting on the suite.
+PYTHONPATH=src python -m repro.analysis --check src tests benchmarks examples
+
 python -m pytest -x -q
 
 echo "--- smoke: examples/quickstart.py"

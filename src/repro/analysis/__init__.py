@@ -1,0 +1,59 @@
+"""Static contract linter for the repro codebase (stdlib ``ast``, no deps).
+
+The repo's equivalence culture — planner bit-identity, emulator
+metrics-identity, serving token-identity (ROADMAP "Standing contracts") —
+is enforced dynamically by fixture replay.  This package enforces the
+*preconditions* of those contracts statically, before a fixture diff can
+even happen.  Six rules:
+
+==================  =======================================================
+rule id             catches
+==================  =======================================================
+compat-boundary     raw version-sensitive JAX APIs (``shard_map``,
+                    ``.cost_analysis()``, pltpu ``CompilerParams``, and the
+                    import forms that bypass them) outside
+                    ``src/repro/compat/``
+jit-purity          host syncs and Python side effects (``.item()``,
+                    ``np.asarray``, ``print``, ``block_until_ready``,
+                    wall-clock reads, ``global`` mutation, ``if x.any():``)
+                    inside code reachable from ``jax.jit`` /
+                    ``pl.pallas_call`` / ``shard_map`` entry points —
+                    including the factory idiom ``jax.jit(make_step(cfg))``
+                    across modules
+donation-after-use  reading a buffer after it was donated to a
+                    ``jax.jit(..., donate_argnums=...)`` call and before it
+                    is rebound (invalid on accelerators; CPU silently
+                    copies, so fixture replay never catches it)
+prng-discipline     a ``jax.random`` key consumed by two draws without an
+                    intervening split/rebind (correlated streams)
+determinism         wall-clock reads, global stdlib/numpy RNG state, and
+                    unordered-set iteration inside the fixture-pinned
+                    paths ``repro/core/`` and ``repro/emulator/``
+pallas-structure    ``pallas_call`` BlockSpec ``index_map`` arity vs grid
+                    rank; literal ``out_shape`` dtype vs the kernel's
+                    literal ``.astype`` write
+==================  =======================================================
+
+**Suppressions**: ``# repro: ignore[rule-id]`` on the flagged line (comma
+-separate for several rules; bare ``# repro: ignore`` suppresses every
+rule on that line).  Suppressions should carry a justification comment —
+they are the documented escape hatch for deliberate trace-time toggles
+and fixture-pinned stimulus generators.
+
+**CLI**: ``python -m repro.analysis [--json] [--check] [--rule ID] paths``;
+``--check`` exits 1 on any unsuppressed finding (wired into scripts/ci.sh
+before pytest).  ``--json`` output is stable (sorted findings, sorted
+keys) for tooling.
+
+**Adding a rule**: see ``repro.analysis.rules`` — subclass ``Rule``, give
+it an ``id``/``summary`` (and ``scopes`` when it only binds inside pinned
+paths), implement ``check(project)``, register it in ``_RULE_CLASSES``,
+and seed one caught-violation + one clean fixture pair under
+``tests/data/analysis/`` (tests/test_analysis.py asserts both per rule).
+"""
+
+from .engine import AnalysisResult, Finding, analyze_paths, load_project
+from .rules import all_rules
+
+__all__ = ["AnalysisResult", "Finding", "analyze_paths", "load_project",
+           "all_rules"]

@@ -1,0 +1,59 @@
+"""CLI: ``python -m repro.analysis [--json] [--check] [--rule ID]... paths``
+
+Exit status: 0 in report mode; with ``--check``, 1 when any unsuppressed
+finding exists (the CI gate in scripts/ci.sh), 2 on usage errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .engine import analyze_paths
+from .rules import all_rules
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST contract linter for the repro codebase: jit "
+                    "purity, donation, PRNG discipline, determinism, "
+                    "compat boundary, pallas structure.")
+    parser.add_argument("paths", nargs="*",
+                        help="files and/or directories to analyze")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="stable machine-readable output")
+    parser.add_argument("--check", action="store_true",
+                        help="exit 1 if any unsuppressed finding remains")
+    parser.add_argument("--rule", action="append", metavar="ID",
+                        help="run only this rule (repeatable); default: all")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print rule ids and summaries, then exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules().values():
+            print(f"{rule.id:20s} {rule.summary}")
+        return 0
+    if not args.paths:
+        parser.error("at least one path is required")
+
+    try:
+        result = analyze_paths(args.paths, rules=args.rule)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.as_json:
+        print(result.to_json())
+    else:
+        for f in result.findings:
+            print(f.format())
+        print(f"{len(result.findings)} finding(s), "
+              f"{len(result.suppressed)} suppressed, "
+              f"{result.n_files} file(s) analyzed")
+    return 1 if (args.check and result.findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,178 @@
+"""Shared AST plumbing for the contract linter: parsed modules, import/alias
+resolution, dotted-name canonicalization, and inline suppressions.
+
+Every rule works on :class:`Module` objects.  The key service is
+:meth:`Module.dotted`: it folds a ``Name``/``Attribute`` chain back into the
+canonical dotted path of what the code actually refers to, using the module's
+import table — so ``pl.pallas_call`` resolves to
+``jax.experimental.pallas.pallas_call`` whatever the local alias is, and a
+bare ``shard_map`` imported ``from jax.experimental.shard_map import
+shard_map`` resolves to its raw origin instead of hiding behind the local
+name (the failure mode of the old regex enforcement in tests/test_compat.py).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+# names that resolve to themselves when not shadowed by an import/assignment
+_BUILTINS = {"print", "set", "list", "tuple", "dict", "sorted", "enumerate",
+             "frozenset", "min", "max", "sum", "len", "range", "zip", "map",
+             "filter", "int", "float", "bool", "str"}
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*ignore(?:\[([A-Za-z0-9_,\- ]+)\])?")
+
+
+def parse_suppressions(source: str) -> dict[int, set[str] | None]:
+    """``# repro: ignore[rule-id]`` (or ``# repro: ignore`` = every rule) on
+    a line suppresses findings reported *at that line*.  Multiple ids:
+    ``# repro: ignore[rule-a,rule-b]``."""
+    out: dict[int, set[str] | None] = {}
+    for lineno, line in enumerate(source.splitlines(), 1):
+        if "#" not in line:
+            continue
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        ids = m.group(1)
+        out[lineno] = (None if ids is None else
+                       {s.strip() for s in ids.split(",") if s.strip()})
+    return out
+
+
+def module_name_for(rel: str) -> str | None:
+    """Dotted module name from a repo-relative posix path (src/ stripped),
+    or None for paths that aren't importable source (fixture corpora)."""
+    parts = Path(rel).parts
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if not parts or not parts[-1].endswith(".py"):
+        return None
+    parts = parts[:-1] + (parts[-1][:-3],)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    if not parts:
+        return None
+    return ".".join(parts)
+
+
+@dataclass
+class Module:
+    """One parsed source file plus the tables every rule shares."""
+
+    path: Path
+    rel: str                              # repo-relative posix path
+    source: str
+    tree: ast.Module
+    name: str | None = None               # dotted module name, if importable
+    aliases: dict[str, str] = field(default_factory=dict)
+    suppressions: dict[int, set[str] | None] = field(default_factory=dict)
+    functions: dict[str, list[ast.FunctionDef]] = field(default_factory=dict)
+
+    @classmethod
+    def load(cls, path: Path, rel: str) -> "Module":
+        source = path.read_text()
+        tree = ast.parse(source, filename=str(path))
+        mod = cls(path=path, rel=rel, source=source, tree=tree,
+                  name=module_name_for(rel),
+                  suppressions=parse_suppressions(source))
+        mod._index_imports()
+        mod._index_functions()
+        return mod
+
+    # -- import / alias table ----------------------------------------------
+
+    def _index_imports(self) -> None:
+        pkg = None
+        if self.name is not None:
+            # package context for relative imports: the module's own package
+            pkg = self.name if self.rel.endswith("__init__.py") \
+                else self.name.rsplit(".", 1)[0] if "." in self.name else ""
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom):
+                base = node.module or ""
+                if node.level:              # relative: resolve against pkg
+                    if pkg is None:
+                        continue
+                    up = pkg.split(".") if pkg else []
+                    up = up[:len(up) - (node.level - 1)] if node.level > 1 \
+                        else up
+                    base = ".".join(up + ([node.module] if node.module
+                                          else []))
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.aliases[a.asname or a.name] = (
+                        f"{base}.{a.name}" if base else a.name)
+
+    def _index_functions(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions.setdefault(node.name, []).append(node)
+
+    # -- dotted-name resolution --------------------------------------------
+
+    def dotted(self, node: ast.AST) -> str | None:
+        """Canonical dotted path for a Name/Attribute chain, or None when
+        the base is a local value the import table can't resolve."""
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        base = self.aliases.get(node.id)
+        if base is None:
+            if node.id in _BUILTINS and not parts:
+                return node.id
+            return None
+        parts.append(base)
+        return ".".join(reversed(parts))
+
+    def lookup(self, name: str) -> list[ast.FunctionDef]:
+        return self.functions.get(name, [])
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        ids = self.suppressions.get(line, False)
+        if ids is False:
+            return False
+        return ids is None or rule in ids
+
+
+def call_kw(call: ast.Call, name: str) -> ast.expr | None:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def const_of(node: ast.AST | None):
+    """Literal value of a Constant / tuple-or-list of Constants, else None."""
+    if isinstance(node, ast.Constant):
+        return node.value
+    if isinstance(node, (ast.Tuple, ast.List)):
+        vals = [const_of(e) for e in node.elts]
+        if all(v is not None for v in vals):
+            return tuple(vals)
+    return None
+
+
+def walk_scope(fn: ast.AST):
+    """Yield nodes of ``fn`` without descending into nested function/class
+    definitions (their bodies are separate scopes)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))

@@ -1,0 +1,196 @@
+"""Rule engine: file collection, project-wide symbol resolution, rule
+execution, suppression filtering, and output formatting.
+
+A :class:`Project` parses every file once and gives rules two services
+beyond the per-file :class:`~repro.analysis.astutil.Module` tables:
+
+* ``resolve(modname, symbol)`` — find the defining module/FunctionDef for a
+  symbol, following re-export chains (``from .model import prefill`` in a
+  package ``__init__``) so cross-module analyses (jit reachability) see
+  through the repo's facade imports;
+* path-scoped module iteration — rules that only bind inside pinned paths
+  (determinism in ``repro/core/``, ``repro/emulator/``) declare substring
+  scopes instead of hardcoding walks.
+
+Fixture corpora under ``tests/data/`` are skipped when *walking
+directories* (they exist to be analyzed by the linter's own tests, which
+pass the files explicitly) — explicit file arguments are always analyzed.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+from pathlib import Path
+
+from .astutil import Module
+
+_SKIP_DIRS = {"__pycache__", ".git", ".claude"}
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    path: str            # repo-relative posix path
+    line: int
+    col: int
+    rule: str
+    message: str
+    hint: str = ""
+
+    def format(self) -> str:
+        s = f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+        if self.hint:
+            s += f"\n    hint: {self.hint}"
+        return s
+
+    def to_dict(self) -> dict:
+        return {"path": self.path, "line": self.line, "col": self.col,
+                "rule": self.rule, "message": self.message, "hint": self.hint}
+
+
+class Rule:
+    """A named check over a Project.  Subclasses set ``id``/``summary`` and
+    implement ``check(project) -> iterable[Finding]``; ``scopes`` (path
+    substrings) restrict which modules ``in_scope`` yields, ``excludes``
+    carve out exempt subtrees (the compat boundary's own home)."""
+
+    id: str = ""
+    summary: str = ""
+    scopes: tuple[str, ...] | None = None       # None = everywhere
+    excludes: tuple[str, ...] = ()
+
+    def applies(self, rel: str) -> bool:
+        if any(x in rel for x in self.excludes):
+            return False
+        return self.scopes is None or any(s in rel for s in self.scopes)
+
+    def in_scope(self, project: "Project"):
+        return (m for m in project.modules if self.applies(m.rel))
+
+    def check(self, project: "Project"):     # pragma: no cover - interface
+        raise NotImplementedError
+
+    def finding(self, mod: Module, node: ast.AST, message: str,
+                hint: str = "") -> Finding:
+        return Finding(path=mod.rel, line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0) + 1,
+                       rule=self.id, message=message, hint=hint)
+
+
+class Project:
+    def __init__(self, modules: list[Module], errors: list[Finding]):
+        self.modules = modules
+        self.errors = errors
+        self._by_name = {m.name: m for m in modules if m.name}
+
+    def module_named(self, name: str) -> Module | None:
+        return self._by_name.get(name)
+
+    def resolve(self, dotted: str, _depth: int = 0):
+        """(module, FunctionDef) defining ``dotted`` ("repro.models.prefill"),
+        following re-export chains through package ``__init__`` import
+        tables.  None when the symbol lives outside the analyzed tree."""
+        if _depth > 6 or "." not in dotted:
+            return None
+        modname, sym = dotted.rsplit(".", 1)
+        mod = self._by_name.get(modname)
+        if mod is None:
+            return None
+        defs = mod.lookup(sym)
+        # prefer a top-level def: re-exported symbols are module-level
+        for fn in defs:
+            return mod, fn
+        target = mod.aliases.get(sym)
+        if target is not None and target != dotted:
+            return self.resolve(target, _depth + 1)
+        return None
+
+
+def collect_files(paths, root: Path) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_file():
+            files.append(p)
+            continue
+        for f in sorted(p.rglob("*.py")):
+            parts = f.parts
+            if any(d in _SKIP_DIRS for d in parts):
+                continue
+            # fixture corpora are linter *inputs*, not source under contract
+            if any(parts[i] == "tests" and parts[i + 1] == "data"
+                   for i in range(len(parts) - 1)):
+                continue
+            files.append(f)
+    seen, out = set(), []
+    for f in files:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            out.append(f)
+    return out
+
+
+def load_project(paths, root: Path | None = None) -> Project:
+    root = Path.cwd() if root is None else Path(root)
+    modules, errors = [], []
+    for f in collect_files(paths, root):
+        try:
+            rel = f.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        try:
+            modules.append(Module.load(f, rel))
+        except SyntaxError as e:
+            errors.append(Finding(path=rel, line=e.lineno or 1, col=1,
+                                  rule="parse-error",
+                                  message=f"file does not parse: {e.msg}"))
+    return Project(modules, errors)
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    findings: list[Finding]              # unsuppressed, sorted
+    suppressed: list[Finding]            # matched an inline ignore
+    n_files: int
+
+    def to_json(self) -> str:
+        """Stable machine-readable form: sorted findings, sorted keys."""
+        payload = {
+            "version": 1,
+            "n_files": self.n_files,
+            "n_findings": len(self.findings),
+            "n_suppressed": len(self.suppressed),
+            "findings": [f.to_dict() for f in self.findings],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+        }
+        return json.dumps(payload, indent=2, sort_keys=True)
+
+
+def analyze_paths(paths, rules=None, root: Path | None = None
+                  ) -> AnalysisResult:
+    """Run ``rules`` (ids, or None = all registered) over ``paths`` (files
+    and/or directory trees).  Returns sorted findings with inline
+    suppressions split out."""
+    from .rules import all_rules
+
+    registry = all_rules()
+    if rules is not None:
+        unknown = set(rules) - set(registry)
+        if unknown:
+            raise ValueError(f"unknown rule id(s): {sorted(unknown)}")
+        registry = {k: v for k, v in registry.items() if k in rules}
+    project = load_project(paths, root)
+    mods = {m.rel: m for m in project.modules}
+    findings, suppressed = list(project.errors), []
+    for rule in registry.values():
+        for f in rule.check(project):
+            mod = mods.get(f.path)
+            if mod is not None and mod.is_suppressed(f.rule, f.line):
+                suppressed.append(f)
+            else:
+                findings.append(f)
+    return AnalysisResult(findings=sorted(set(findings)),
+                          suppressed=sorted(set(suppressed)),
+                          n_files=len(project.modules))

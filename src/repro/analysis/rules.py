@@ -1,0 +1,26 @@
+"""Rule registry.  Adding a rule: subclass :class:`repro.analysis.engine.Rule`
+(set ``id``/``summary``, optional ``scopes``/``excludes``, implement
+``check(project)``) and list it in ``_RULE_CLASSES`` — the CLI, the JSON
+output, and ``analyze_paths(rules=[...])`` selection pick it up from here.
+"""
+
+from __future__ import annotations
+
+from .rules_compat import CompatBoundaryRule
+from .rules_jit import DonationAfterUseRule, JitPurityRule
+from .rules_pallas import PallasStructureRule
+from .rules_rng import DeterminismRule, PrngDisciplineRule
+
+_RULE_CLASSES = (
+    CompatBoundaryRule,
+    JitPurityRule,
+    DonationAfterUseRule,
+    PrngDisciplineRule,
+    DeterminismRule,
+    PallasStructureRule,
+)
+
+
+def all_rules():
+    """{rule id: rule instance}, in stable registration order."""
+    return {cls.id: cls() for cls in _RULE_CLASSES}

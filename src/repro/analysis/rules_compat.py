@@ -1,0 +1,107 @@
+"""compat-boundary: version-sensitive JAX APIs must go through repro.compat.
+
+The standing compat contract (ROADMAP, PR 1) routes ``shard_map``,
+``cost_analysis`` and pallas TPU compiler params through
+``src/repro/compat/`` so version skew lands in one file.  The old
+enforcement greped for textual patterns; this rule resolves real
+imports/attribute chains, so an aliased ``from jax.experimental.shard_map
+import shard_map as smap`` is caught even though no flagged substring
+appears at the use site.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .engine import Project, Rule
+
+_HINT = "route this through repro.compat (see src/repro/compat/jax_api.py)"
+
+# raw dotted targets (canonical, post-alias): anything here outside compat/
+# is a boundary violation
+_RAW_SHARD_MAP_PREFIXES = ("jax.shard_map", "jax.experimental.shard_map")
+_PLTPU_PARAMS = ("jax.experimental.pallas.tpu.CompilerParams",
+                 "jax.experimental.pallas.tpu.TPUCompilerParams")
+
+
+class CompatBoundaryRule(Rule):
+    id = "compat-boundary"
+    summary = ("raw version-sensitive JAX API (shard_map / .cost_analysis() "
+               "/ pltpu CompilerParams) used outside repro.compat")
+    excludes = ("repro/compat/",)
+
+    def check(self, project: Project):
+        for mod in self.in_scope(project):
+            yield from self._check_module(mod)
+
+    def _check_module(self, mod):
+        # flag only the outermost link of an attribute chain (jax.
+        # experimental.shard_map.shard_map is one finding, not three)
+        inner = {id(n.value) for n in ast.walk(mod.tree)
+                 if isinstance(n, ast.Attribute)}
+        for node in ast.walk(mod.tree):
+            # import forms that would bypass attribute-chain detection
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                yield from self._check_import(mod, node)
+                continue
+            if id(node) in inner:
+                continue
+            if isinstance(node, ast.Attribute):
+                dotted = mod.dotted(node)
+                if dotted and self._is_raw(dotted):
+                    yield self.finding(
+                        mod, node, f"raw version-sensitive API `{dotted}`",
+                        _HINT)
+            elif isinstance(node, ast.Name):
+                dotted = mod.aliases.get(node.id)
+                if dotted and self._is_raw(dotted) and not isinstance(
+                        getattr(node, "ctx", None), ast.Store):
+                    yield self.finding(
+                        mod, node,
+                        f"`{node.id}` is raw version-sensitive API "
+                        f"`{dotted}`", _HINT)
+            elif isinstance(node, ast.Call):
+                yield from self._check_cost_analysis(mod, node)
+
+    @staticmethod
+    def _is_raw(dotted: str) -> bool:
+        if dotted in _PLTPU_PARAMS:
+            return True
+        return any(dotted == p or dotted.startswith(p + ".")
+                   for p in _RAW_SHARD_MAP_PREFIXES)
+
+    def _check_import(self, mod, node):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if self._is_raw(a.name):
+                    yield self.finding(
+                        mod, node, f"raw import of `{a.name}`", _HINT)
+            return
+        base = (node.module or "")
+        if not base.startswith("jax"):
+            return
+        for a in node.names:
+            full = f"{base}.{a.name}"
+            if (self._is_raw(full) or a.name == "shard_map"
+                    or a.name.endswith("CompilerParams")):
+                yield self.finding(
+                    mod, node,
+                    f"raw version-sensitive import `from {base} import "
+                    f"{a.name}`", _HINT)
+
+    def _check_cost_analysis(self, mod, call: ast.Call):
+        """`X.cost_analysis()` (the zero-arg method form whose payload shape
+        changed across JAX versions) — `repro.compat.cost_analysis(X)` is the
+        normalized spelling."""
+        f = call.func
+        if not (isinstance(f, ast.Attribute) and f.attr == "cost_analysis"):
+            return
+        if call.args or call.keywords:
+            return           # compat.cost_analysis(compiled) takes the object
+        dotted = mod.dotted(f)
+        if dotted is not None and dotted.startswith("repro.compat"):
+            return
+        yield self.finding(
+            mod, call, "raw `.cost_analysis()` method call",
+            "use repro.compat.cost_analysis(compiled) — payload shape "
+            "differs across JAX versions")

@@ -1,0 +1,404 @@
+"""jit-purity and donation-after-use: the serving fast path's contracts.
+
+**jit-purity** — the serving/token-identity contracts (ROADMAP PR 4-5)
+require that nothing inside a jitted step syncs with the host or mutates
+Python state: a stray ``.item()`` / ``np.asarray`` / ``print`` /
+``block_until_ready`` in the decode loop silently serializes async
+dispatch (or retraces), destroying exactly the throughput the fixtures
+pin.  The rule finds jit/pallas/shard_map entry points (decorators, direct
+``jax.jit(f)`` calls, and the repo's factory idiom
+``jax.jit(make_step(cfg))`` — including across modules through facade
+re-exports), closes over every function they reference, and flags host
+syncs, wall-clock reads, and ``global`` mutation inside that traced set.
+
+**donation-after-use** — ``donate_argnums`` invalidates the argument
+buffer: on accelerators a read after the call returns garbage (CPU
+silently copies, which is why fixture replay never catches it — the bug
+class only exists in production).  The rule tracks bindings created by
+``jax.jit(..., donate_argnums=...)`` (variables, ``self.`` attributes, and
+decorated defs) and walks each function's statements, flagging a read of a
+donated binding after the donating call before any rebind — across loop
+iterations too (the body is scanned twice).
+
+Known limits (documented so suppressions stay honest): donation through
+wrapper helpers (``_quiet(fn, *args)``) and closure captures are not
+tracked; purity entry detection follows references, so a traced helper
+that is *also* called from host code is held to the traced standard.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .astutil import Module, call_kw, const_of, walk_scope
+from .engine import Project, Rule
+
+_JIT_WRAPPERS = ("jax.jit", "jax.pmap")
+_TRACED_CALLS = _JIT_WRAPPERS + (
+    "jax.experimental.pallas.pallas_call", "repro.compat.shard_map",
+    "jax.shard_map", "jax.experimental.shard_map.shard_map")
+
+_HOST_CALLS = {
+    "numpy.asarray": "np.asarray forces a device->host transfer",
+    "numpy.array": "np.array forces a device->host transfer",
+    "jax.device_get": "device_get is a host sync",
+    "jax.block_until_ready": "block_until_ready stalls async dispatch",
+    "print": "print executes at trace time only (or syncs via callbacks)",
+    "time.time": "wall-clock reads are trace-time constants inside jit",
+    "time.perf_counter": "wall-clock reads are trace-time constants "
+                         "inside jit",
+    "time.monotonic": "wall-clock reads are trace-time constants inside jit",
+    "time.process_time": "wall-clock reads are trace-time constants "
+                         "inside jit",
+}
+
+_MAX_REACHABLE = 800
+
+
+def _is_jit_decorator(mod: Module, dec: ast.expr) -> bool:
+    d = mod.dotted(dec)
+    if d in _JIT_WRAPPERS:
+        return True
+    if isinstance(dec, ast.Call):
+        f = mod.dotted(dec.func)
+        if f in _JIT_WRAPPERS:
+            return True
+        if f == "functools.partial" and dec.args:
+            return mod.dotted(dec.args[0]) in _JIT_WRAPPERS
+    return False
+
+
+class JitPurityRule(Rule):
+    id = "jit-purity"
+    summary = ("host sync / Python side effect inside code reachable from a "
+               "jax.jit, pallas_call, or shard_map entry point")
+
+    # -- entry discovery ----------------------------------------------------
+
+    def _entries(self, project: Project):
+        """Yield (module, function-or-lambda) traced entry points."""
+        for mod in project.modules:
+            for fns in mod.functions.values():
+                for fn in fns:
+                    if any(_is_jit_decorator(mod, d)
+                           for d in fn.decorator_list):
+                        yield mod, fn
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                if mod.dotted(node.func) not in _TRACED_CALLS:
+                    continue
+                if not node.args:
+                    continue
+                yield from self._resolve_traced_arg(project, mod,
+                                                    node.args[0])
+
+    def _resolve_traced_arg(self, project, mod, arg, _depth=0):
+        """The thing being traced: a def, a lambda, or a factory call whose
+        nested defs are the real step bodies."""
+        if _depth > 3:
+            return
+        if isinstance(arg, ast.Lambda):
+            yield mod, arg
+            return
+        if isinstance(arg, ast.Call):
+            f = arg.func
+            if mod.dotted(f) == "functools.partial" and arg.args:
+                yield from self._resolve_traced_arg(project, mod,
+                                                    arg.args[0], _depth + 1)
+                return
+            # factory idiom: jax.jit(make_step(cfg)) — the nested defs of
+            # the factory are what actually gets traced
+            for fmod, fdef in _resolve_callable(project, mod, f):
+                for sub in ast.walk(fdef):
+                    if sub is not fdef and isinstance(
+                            sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        yield fmod, sub
+            return
+        yield from _resolve_callable(project, mod, arg)
+
+    # -- reachability closure ----------------------------------------------
+
+    def check(self, project: Project):
+        seen: set[tuple[str, int]] = set()
+        work = []
+        for mod, fn in self._entries(project):
+            key = (mod.rel, fn.lineno, getattr(fn, "col_offset", 0))
+            if key not in seen:
+                seen.add(key)
+                work.append((mod, fn))
+        findings = []
+        while work and len(seen) < _MAX_REACHABLE:
+            mod, fn = work.pop()
+            findings.extend(self._scan_scope(mod, fn))
+            for nmod, nfn in self._referenced(project, mod, fn):
+                key = (nmod.rel, nfn.lineno, getattr(nfn, "col_offset", 0))
+                if key not in seen:
+                    seen.add(key)
+                    work.append((nmod, nfn))
+        return findings
+
+    def _referenced(self, project, mod, fn):
+        """Functions referenced from ``fn``'s scope: local defs, self
+        methods, and imported repro symbols (through facade re-exports)."""
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in [stmt, *walk_scope(stmt)]:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield mod, node        # nested def: traced when referenced
+                    continue
+                if isinstance(node, ast.Name) and isinstance(
+                        node.ctx, ast.Load):
+                    yield from _resolve_callable(project, mod, node)
+                elif (isinstance(node, ast.Attribute)
+                      and isinstance(node.ctx, ast.Load)):
+                    yield from _resolve_callable(project, mod, node,
+                                                 attr_ok=True)
+
+    # -- detectors ----------------------------------------------------------
+
+    def _scan_scope(self, mod, fn):
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in [stmt, *walk_scope(stmt)]:
+                if isinstance(node, ast.Global):
+                    yield self.finding(
+                        mod, node,
+                        f"`global {', '.join(node.names)}` inside jit-traced "
+                        "code: mutation happens at trace time, not per call",
+                        "trace-time toggles are legal but easy to misuse — "
+                        "suppress with a justification if deliberate")
+                elif isinstance(node, ast.Call):
+                    yield from self._check_call(mod, node)
+                elif isinstance(node, ast.If):
+                    yield from self._check_branch(mod, node)
+
+    def _check_call(self, mod, call):
+        f = call.func
+        if (isinstance(f, ast.Attribute) and f.attr == "item"
+                and not call.args and not call.keywords):
+            yield self.finding(
+                mod, call, "`.item()` inside jit-traced code is a host sync",
+                "keep values on device; fetch once outside the jitted step")
+            return
+        dotted = mod.dotted(f)
+        if dotted in _HOST_CALLS:
+            yield self.finding(
+                mod, call, f"`{dotted}` inside jit-traced code: "
+                f"{_HOST_CALLS[dotted]}",
+                "hoist host-side work out of the traced function")
+
+    def _check_branch(self, mod, node):
+        """`if x.any():` / `if x.all():` — a tracer-dependent Python branch
+        either fails under jit or silently bakes in the traced value."""
+        for sub in ast.walk(node.test):
+            if (isinstance(sub, ast.Call)
+                    and isinstance(sub.func, ast.Attribute)
+                    and sub.func.attr in ("any", "all") and not sub.args):
+                yield self.finding(
+                    mod, node,
+                    f"Python `if` on `.{sub.func.attr}()` inside jit-traced "
+                    "code is tracer-dependent control flow",
+                    "use jnp.where / jax.lax.cond, or hoist the decision to "
+                    "the host")
+
+
+def _resolve_callable(project, mod, node, attr_ok=False):
+    """(module, def) candidates a Name/Attribute may refer to."""
+    if isinstance(node, ast.Name):
+        defs = mod.lookup(node.id)
+        if defs:
+            for d in defs:
+                yield mod, d
+            return
+        target = mod.aliases.get(node.id)
+        if target:
+            hit = project.resolve(target)
+            if hit:
+                yield hit
+        return
+    if not (attr_ok and isinstance(node, ast.Attribute)):
+        return
+    if isinstance(node.value, ast.Name) and node.value.id == "self":
+        for d in mod.lookup(node.attr):
+            yield mod, d
+        return
+    dotted = mod.dotted(node)
+    if dotted:
+        hit = project.resolve(dotted)
+        if hit:
+            yield hit
+
+
+# ---------------------------------------------------------------------------
+# donation-after-use
+# ---------------------------------------------------------------------------
+
+class DonationAfterUseRule(Rule):
+    id = "donation-after-use"
+    summary = ("a buffer donated to a jitted call is read again before being "
+               "rebound")
+
+    def check(self, project: Project):
+        for mod in project.modules:
+            donors = self._donating_bindings(mod)
+            if not donors:
+                continue
+            for fns in mod.functions.values():
+                for fn in fns:
+                    yield from self._scan_block(mod, donors, fn.body, {})
+
+    # -- pass A: which names are donating jitted callables ------------------
+
+    def _donating_bindings(self, mod: Module):
+        """{binding key: (donated positions, donated kwarg names)} for
+        `x = jax.jit(f, donate_argnums=...)`, `self.x = jax.jit(...)`, and
+        defs decorated with a donating jit."""
+        donors: dict[str, tuple[set[int], set[str]]] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                spec = self._donation_spec(mod, node.value)
+                key = _binding_key(node.targets[0])
+                if spec and key:
+                    donors[key] = spec
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    spec = self._donation_spec(mod, dec)
+                    if spec:
+                        donors[node.name] = spec
+        return donors
+
+    def _donation_spec(self, mod, node):
+        if not isinstance(node, ast.Call):
+            return None
+        f = mod.dotted(node.func)
+        if f == "functools.partial" and node.args:
+            if mod.dotted(node.args[0]) not in _JIT_WRAPPERS:
+                return None
+        elif f not in _JIT_WRAPPERS:
+            return None
+        nums = const_of(call_kw(node, "donate_argnums"))
+        names = const_of(call_kw(node, "donate_argnames"))
+        pos = (set(nums) if isinstance(nums, tuple)
+               else {nums} if isinstance(nums, int) else set())
+        kws = (set(names) if isinstance(names, tuple)
+               else {names} if isinstance(names, str) else set())
+        if not pos and not kws:
+            return None
+        return pos, kws
+
+    # -- pass B: statement-level dataflow ------------------------------------
+
+    def _scan_block(self, mod, donors, stmts, donated):
+        """donated: {name: line of the donating call}; mutated in place for
+        sequential flow, copied at branches."""
+        for stmt in stmts:
+            # 1. reads of already-donated bindings
+            yield from self._check_reads(mod, stmt, donated)
+            # 2. control flow
+            if isinstance(stmt, (ast.If,)):
+                d1, d2 = dict(donated), dict(donated)
+                yield from self._scan_block(mod, donors, stmt.body, d1)
+                yield from self._scan_block(mod, donors, stmt.orelse, d2)
+                donated.clear()
+                donated.update({**d1, **d2})
+                continue
+            if isinstance(stmt, (ast.For, ast.While)):
+                # two passes over the body: the second catches a read in
+                # iteration i+1 of a buffer donated in iteration i
+                seen = set()
+                for _ in range(2):
+                    d = dict(donated)
+                    for f in self._scan_block(mod, donors, stmt.body, d):
+                        if f not in seen:
+                            seen.add(f)
+                            yield f
+                    donated.update(d)
+                yield from self._scan_block(mod, donors, stmt.orelse, donated)
+                continue
+            if isinstance(stmt, (ast.With,)):
+                yield from self._scan_block(mod, donors, stmt.body, donated)
+                continue
+            if isinstance(stmt, ast.Try):
+                for blk in (stmt.body, *(h.body for h in stmt.handlers),
+                            stmt.orelse, stmt.finalbody):
+                    yield from self._scan_block(mod, donors, blk, donated)
+                continue
+            # 3. new donations from calls in this statement
+            for call in (n for n in [stmt, *walk_scope(stmt)]
+                         if isinstance(n, ast.Call)):
+                key = _binding_key(call.func)
+                if key is None or key not in donors:
+                    continue
+                pos, kws = donors[key]
+                for i in pos:
+                    if i < len(call.args):
+                        nm = _binding_key(call.args[i])
+                        if nm:
+                            donated[nm] = (call.lineno, key)
+                for kw in call.keywords:
+                    if kw.arg in kws:
+                        nm = _binding_key(kw.value)
+                        if nm:
+                            donated[nm] = (call.lineno, key)
+            # 4. rebinds clear donation state
+            for name in _bound_names(stmt):
+                donated.pop(name, None)
+
+    def _check_reads(self, mod, stmt, donated):
+        if not donated:
+            return
+        # compound statements: only their header expressions are read at
+        # this flow point — bodies are scanned recursively with their own
+        # state (a branch may rebind before reading)
+        if isinstance(stmt, (ast.If, ast.While)):
+            roots = [stmt.test]
+        elif isinstance(stmt, ast.For):
+            roots = [stmt.iter]
+        elif isinstance(stmt, ast.With):
+            roots = [i.context_expr for i in stmt.items]
+        elif isinstance(stmt, ast.Try):
+            return
+        else:
+            roots = [stmt]
+        # a statement that rebinds a name may also read it on the RHS of
+        # the *same* donating call (cache = f(cache)) — reads checked here
+        # are against the state *before* this statement, which is correct:
+        # only names donated by *earlier* statements are in `donated`.
+        for node in (n for r in roots for n in [r, *walk_scope(r)]):
+            if (isinstance(node, (ast.Name, ast.Attribute))
+                    and isinstance(getattr(node, "ctx", None), ast.Load)):
+                key = _binding_key(node)
+                if key in donated:
+                    line, fn = donated[key]
+                    yield self.finding(
+                        mod, node,
+                        f"`{key}` was donated to `{fn}` on line {line} and "
+                        "read again before being rebound",
+                        "a donated buffer is invalid after the call on "
+                        "accelerators (CPU silently copies); rebind it from "
+                        "the call's result or drop the donation")
+
+
+def _binding_key(node) -> str | None:
+    """Trackable binding: a plain name or a `self.x` attribute."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if (isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return f"self.{node.attr}"
+    return None
+
+
+def _bound_names(stmt):
+    for node in [stmt, *walk_scope(stmt)]:
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            if isinstance(getattr(node, "ctx", None),
+                          (ast.Store, ast.Del)):
+                key = _binding_key(node)
+                if key:
+                    yield key
+        elif isinstance(node, ast.NamedExpr):
+            key = _binding_key(node.target)
+            if key:
+                yield key

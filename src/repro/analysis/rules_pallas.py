@@ -1,0 +1,188 @@
+"""pallas-structure: shape-level consistency of ``pallas_call`` sites.
+
+Two cheap-but-painful kernel bug classes are checked statically:
+
+* **index_map arity vs grid rank** — a BlockSpec ``index_map`` lambda must
+  take exactly one argument per grid dimension; a mismatch surfaces as an
+  opaque tracing error (or, with defaulted parameters, silently wrong
+  indexing) only when the kernel finally runs.
+* **out_shape dtype vs written dtype** — when both the declared
+  ``jax.ShapeDtypeStruct(..., jnp.X)`` dtype and the kernel's
+  ``ref[...] = value.astype(jnp.Y)`` write are spelled as literal
+  ``jnp.<dtype>`` attributes, X and Y must agree; a disagreement truncates
+  or up-casts on every store.  Non-literal dtypes (``o_ref.dtype``,
+  factory parameters) are out of scope by design — no guessing.
+
+Kernel bodies are resolved within the module (direct name or
+``functools.partial(kernel, ...)``, including through a local variable
+binding), which covers the repo's kernel idiom (kernels/*/kernel.py).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .astutil import call_kw
+from .engine import Project, Rule
+
+_JNP = ("jax.numpy.", "numpy.")
+
+
+class PallasStructureRule(Rule):
+    id = "pallas-structure"
+    summary = ("pallas_call BlockSpec index_map arity mismatches the grid "
+               "rank, or out_shape dtype disagrees with the kernel's write")
+
+    def check(self, project: Project):
+        for mod in self.in_scope(project):
+            yield from self._walk(mod, mod.tree, None)
+
+    def _walk(self, mod, node, enclosing):
+        """Visit every node, remembering the innermost enclosing function
+        (local kernel bindings like ``kern = partial(...)`` live there)."""
+        for child in ast.iter_child_nodes(node):
+            enc = (child if isinstance(child, (ast.FunctionDef,
+                                               ast.AsyncFunctionDef))
+                   else enclosing)
+            if (isinstance(child, ast.Call) and mod.dotted(child.func) ==
+                    "jax.experimental.pallas.pallas_call"):
+                yield from self._check_site(mod, enclosing, child)
+            yield from self._walk(mod, child, enc)
+
+    # -- per-site checks ----------------------------------------------------
+
+    def _check_site(self, mod, enclosing, call: ast.Call):
+        grid = call_kw(call, "grid")
+        if isinstance(grid, ast.Name) and enclosing is not None:
+            # grid bound locally: grid = (m // bm, n // bn)
+            for stmt in ast.walk(enclosing):
+                if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                        and isinstance(stmt.targets[0], ast.Name)
+                        and stmt.targets[0].id == grid.id):
+                    grid = stmt.value
+                    break
+        rank = None
+        if isinstance(grid, (ast.Tuple, ast.List)):
+            rank = len(grid.elts)
+        elif isinstance(grid, ast.Constant) and isinstance(grid.value, int):
+            rank = 1
+        specs = (_spec_list(call_kw(call, "in_specs"))
+                 + _spec_list(call_kw(call, "out_specs")))
+        if rank is not None:
+            for spec in specs:
+                yield from self._check_index_map(mod, spec, rank)
+        yield from self._check_dtypes(mod, enclosing, call)
+
+    def _check_index_map(self, mod, spec, rank):
+        if not (isinstance(spec, ast.Call)
+                and (mod.dotted(spec.func) or "").endswith("BlockSpec")):
+            return
+        imap = (spec.args[1] if len(spec.args) > 1
+                else call_kw(spec, "index_map"))
+        if not isinstance(imap, ast.Lambda):
+            return
+        a = imap.args
+        if a.vararg or a.kwarg:
+            return
+        arity = len(a.args) + len(a.posonlyargs)
+        required = arity - len(a.defaults)
+        if not required <= rank <= arity:
+            yield self.finding(
+                mod, imap,
+                f"BlockSpec index_map takes {arity} argument(s) but the "
+                f"grid has rank {rank}",
+                "index_map receives exactly one program index per grid "
+                "dimension")
+
+    # -- out dtype vs kernel write ------------------------------------------
+
+    def _check_dtypes(self, mod, enclosing, call: ast.Call):
+        if not call.args:
+            return
+        kernel = _resolve_kernel(mod, enclosing, call.args[0])
+        if kernel is None:
+            return
+        out_shape = call_kw(call, "out_shape")
+        outs = (out_shape.elts if isinstance(out_shape, (ast.Tuple, ast.List))
+                else [out_shape] if out_shape is not None else [])
+        declared = [_sds_dtype(mod, o) for o in outs]
+        if not any(declared):
+            return
+        n_in = len(_spec_list(call_kw(call, "in_specs"))) or len(call.args) - 1
+        params = [a.arg for a in kernel.args.args]
+        out_params = params[n_in:n_in + len(outs)]
+        for node in ast.walk(kernel):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+                continue
+            tgt = node.targets[0]
+            if not (isinstance(tgt, ast.Subscript)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id in out_params):
+                continue
+            want = declared[out_params.index(tgt.value.id)]
+            got = _astype_dtype(mod, node.value)
+            if want and got and want != got:
+                yield self.finding(
+                    mod, node,
+                    f"kernel writes `{tgt.value.id}` as jnp.{got} but "
+                    f"out_shape declares jnp.{want}",
+                    "the declared out_shape dtype is what XLA allocates — "
+                    "align the astype with it (or drop the literal)")
+
+
+def _spec_list(node):
+    if node is None:
+        return []
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return [node]
+
+
+def _resolve_kernel(mod, enclosing, arg):
+    """kernel arg -> its FunctionDef in this module: a bare name, a
+    functools.partial(name, ...), or a local variable bound to either."""
+    for _ in range(3):
+        if isinstance(arg, ast.Call) and mod.dotted(
+                arg.func) == "functools.partial" and arg.args:
+            arg = arg.args[0]
+            continue
+        break
+    if not isinstance(arg, ast.Name):
+        return None
+    defs = mod.lookup(arg.id)
+    if defs:
+        return defs[0]
+    if enclosing is not None:       # local binding: kern = partial(_kern, …)
+        for stmt in ast.walk(enclosing):
+            if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)
+                    and stmt.targets[0].id == arg.id):
+                return _resolve_kernel(mod, None, stmt.value)
+    return None
+
+
+def _dtype_literal(mod, node):
+    """'int8' from a literal jnp.<dtype>/np.<dtype> attribute, else None."""
+    if not isinstance(node, ast.Attribute):
+        return None
+    dotted = mod.dotted(node)
+    if dotted and any(dotted.startswith(p) for p in _JNP):
+        return dotted.rsplit(".", 1)[1]
+    return None
+
+
+def _sds_dtype(mod, node):
+    """Declared dtype of a jax.ShapeDtypeStruct(shape, dtype) literal."""
+    if not (isinstance(node, ast.Call)
+            and (mod.dotted(node.func) or "").endswith("ShapeDtypeStruct")):
+        return None
+    dt = node.args[1] if len(node.args) > 1 else call_kw(node, "dtype")
+    return _dtype_literal(mod, dt)
+
+
+def _astype_dtype(mod, value):
+    """'int8' from `<expr>.astype(jnp.int8)`, else None."""
+    if (isinstance(value, ast.Call) and isinstance(value.func, ast.Attribute)
+            and value.func.attr == "astype" and value.args):
+        return _dtype_literal(mod, value.args[0])
+    return None

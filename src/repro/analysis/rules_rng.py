@@ -1,0 +1,202 @@
+"""prng-discipline and determinism: guard the bit-identity contracts.
+
+**prng-discipline** — JAX keys are single-use: two draws from one key are
+perfectly correlated, the classic silent-statistics bug.  Per function
+scope, the rule counts draw-consumptions of each key name (any
+``jax.random.*`` call except the non-consuming key-management functions);
+a second draw without a rebind in between is flagged — including the
+one-draw-inside-a-loop form, caught by scanning loop bodies twice.
+
+**determinism** — the planner/emulator fixtures (ROADMAP PR 2-3) pin
+outputs hex-exact, so anything feeding a pinned decision must be a pure
+function of (inputs, seed): wall-clock reads, the *global* stdlib/numpy
+RNG state (seeded ``Generator`` objects are fine), and iteration over
+unordered sets are flagged inside the pinned paths ``repro/core/`` and
+``repro/emulator/``.  Order-insensitive reducers (``sorted(set(...))``,
+``min``/``max``/``sum``/``len``) are not flagged; where ordering is
+provably irrelevant, suppress with a justification.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .astutil import walk_scope
+from .engine import Project, Rule
+
+# jax.random functions that manage keys rather than consuming entropy
+_NONCONSUMING = {"split", "fold_in", "PRNGKey", "key", "key_data",
+                 "wrap_key_data", "key_impl", "clone"}
+
+
+def _draw_name(mod, call: ast.Call) -> str | None:
+    dotted = mod.dotted(call.func)
+    if not dotted or not dotted.startswith("jax.random."):
+        return None
+    leaf = dotted.rsplit(".", 1)[1]
+    return None if leaf in _NONCONSUMING else leaf
+
+
+class PrngDisciplineRule(Rule):
+    id = "prng-discipline"
+    summary = ("a jax.random key is consumed by two draws without an "
+               "intervening split/rebind")
+
+    def check(self, project: Project):
+        for mod in self.in_scope(project):
+            scopes = [mod.tree] + [fn for fns in mod.functions.values()
+                                   for fn in fns]
+            for scope in scopes:
+                yield from self._scan_block(mod, scope.body, {})
+
+    def _scan_block(self, mod, stmts, counts):
+        """counts: {key name: draws since last rebind}."""
+        for stmt in stmts:
+            if isinstance(stmt, ast.If):
+                c1, c2 = dict(counts), dict(counts)
+                yield from self._scan_block(mod, stmt.body, c1)
+                yield from self._scan_block(mod, stmt.orelse, c2)
+                counts.clear()
+                for k in set(c1) | set(c2):
+                    counts[k] = max(c1.get(k, 0), c2.get(k, 0))
+                continue
+            if isinstance(stmt, (ast.For, ast.While)):
+                seen = set()
+                for _ in range(2):      # second pass: loop-carried reuse
+                    c = dict(counts)
+                    for f in self._scan_block(mod, stmt.body, c):
+                        if f not in seen:
+                            seen.add(f)
+                            yield f
+                    counts.update(c)
+                yield from self._scan_block(mod, stmt.orelse, counts)
+                continue
+            if isinstance(stmt, (ast.With, ast.Try)):
+                blocks = ([stmt.body] if isinstance(stmt, ast.With) else
+                          [stmt.body, *(h.body for h in stmt.handlers),
+                           stmt.orelse, stmt.finalbody])
+                for blk in blocks:
+                    yield from self._scan_block(mod, blk, counts)
+                continue
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue                # separate scope, scanned on its own
+            for call in (n for n in [stmt, *walk_scope(stmt)]
+                         if isinstance(n, ast.Call)):
+                draw = _draw_name(mod, call)
+                if draw is None:
+                    continue
+                # the key is the first positional (or `key=`) argument of
+                # every jax.random draw; later args (shapes, bounds) are
+                # never keys
+                key_args = call.args[:1] + [kw.value for kw in call.keywords
+                                            if kw.arg == "key"]
+                for arg in key_args:
+                    if not isinstance(arg, ast.Name):
+                        continue
+                    n = counts.get(arg.id, 0) + 1
+                    counts[arg.id] = n
+                    if n >= 2:
+                        yield self.finding(
+                            mod, call,
+                            f"PRNG key `{arg.id}` is consumed by "
+                            f"`jax.random.{draw}` after an earlier draw "
+                            "without an intervening split",
+                            "keys are single-use: `k1, k2 = jax.random."
+                            f"split({arg.id})` or fold_in a counter per use")
+            for name in _stored_names(stmt):
+                counts.pop(name, None)
+
+
+def _stored_names(stmt):
+    for node in [stmt, *walk_scope(stmt)]:
+        if isinstance(node, ast.Name) and isinstance(node.ctx,
+                                                     (ast.Store, ast.Del)):
+            yield node.id
+        elif isinstance(node, ast.NamedExpr) and isinstance(node.target,
+                                                            ast.Name):
+            yield node.target.id
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+_WALLCLOCK = {"time.time", "time.time_ns", "time.perf_counter",
+              "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+              "datetime.datetime.now", "datetime.datetime.utcnow"}
+
+# legacy global-state numpy draws; generator methods (rng.normal) resolve to
+# a local name and are never flagged
+_NP_GLOBAL = {"seed", "rand", "randn", "randint", "random", "random_sample",
+              "choice", "shuffle", "permutation", "uniform", "normal",
+              "standard_normal", "exponential", "poisson", "beta", "gamma"}
+
+_ORDER_LEAKS = {"list", "tuple", "enumerate"}   # materialize iteration order
+
+
+class DeterminismRule(Rule):
+    id = "determinism"
+    summary = ("wall-clock, global RNG state, or unordered-set iteration "
+               "inside a fixture-pinned deterministic path")
+    scopes = ("repro/core/", "repro/emulator/")
+
+    def check(self, project: Project):
+        for mod in self.in_scope(project):
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Call):
+                    yield from self._check_call(mod, node)
+                elif isinstance(node, (ast.For, ast.AsyncFor)):
+                    yield from self._check_iter(mod, node.iter)
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.DictComp, ast.GeneratorExp)):
+                    for gen in node.generators:
+                        yield from self._check_iter(mod, gen.iter)
+
+    def _check_call(self, mod, call):
+        dotted = mod.dotted(call.func)
+        if dotted is None:
+            return
+        if dotted in _WALLCLOCK:
+            yield self.finding(
+                mod, call, f"`{dotted}` read inside a pinned deterministic "
+                "path", "pinned planner/emulator outputs must be a function "
+                "of (inputs, seed); take timestamps outside, or suppress if "
+                "the value never feeds a pinned output")
+        elif (dotted.startswith("random.")
+              and dotted.rsplit(".", 1)[1] not in ("Random", "SystemRandom")):
+            yield self.finding(
+                mod, call, f"global stdlib RNG `{dotted}` inside a pinned "
+                "deterministic path",
+                "use an explicit seeded generator (np.random.default_rng "
+                "(seed) / random.Random(seed)) threaded through the call")
+        elif (dotted.startswith("numpy.random.")
+              and dotted.rsplit(".", 1)[1] in _NP_GLOBAL):
+            yield self.finding(
+                mod, call, f"legacy global numpy RNG `{dotted}` inside a "
+                "pinned deterministic path",
+                "use np.random.default_rng(seed) and thread the Generator "
+                "through (the planner equivalence contract pins its stream)")
+        elif (dotted in _ORDER_LEAKS and len(call.args) == 1
+              and self._is_set_expr(mod, call.args[0])):
+            yield self.finding(
+                mod, call, f"`{dotted}()` over an unordered set materializes "
+                "a nondeterministic order in a pinned path",
+                "wrap in sorted(...), or suppress with a proof that order "
+                "is irrelevant")
+
+    def _check_iter(self, mod, it):
+        if self._is_set_expr(mod, it):
+            yield self.finding(
+                mod, it, "iteration over an unordered set feeds ordered "
+                "decisions in a pinned path",
+                "iterate sorted(...) (the planner does: placement.py), or "
+                "suppress with a proof that order is irrelevant")
+
+    @staticmethod
+    def _is_set_expr(mod, node) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call):
+            return mod.dotted(node.func) in ("set", "frozenset")
+        return False

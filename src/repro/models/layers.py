@@ -34,7 +34,9 @@ def set_mesh_axes(axes, drop_for_activations=(), mode: str = "train",
     weight-stationary 2-D TP (feature dims alternate data/model so every
     matmul contracts against an aligned weight shard; only tiny activation
     all-reduces hit the wire — §Perf iteration on decode cells)."""
-    global _ACTIVE_AXES, _DROPPED_AXES, _ACT_MODE, _ACTIVE_MESH
+    # trace-time toggle: launch code calls this OUTSIDE jit; jitted fns only
+    # read the globals while tracing.
+    global _ACTIVE_AXES, _DROPPED_AXES, _ACT_MODE, _ACTIVE_MESH  # repro: ignore[jit-purity]
     _ACTIVE_AXES = tuple(axes) if axes is not None else None
     _DROPPED_AXES = frozenset(drop_for_activations)
     _ACT_MODE = mode
@@ -106,7 +108,9 @@ _DECODE_KV_BUCKET: int | None = None
 
 
 def set_decode_kv_bucket(n: int | None):
-    global _DECODE_KV_BUCKET
+    # trace-time toggle: the engine sets the bucket before retracing decode;
+    # never called under a trace.
+    global _DECODE_KV_BUCKET  # repro: ignore[jit-purity]
     _DECODE_KV_BUCKET = n
 
 

@@ -1,0 +1,16 @@
+"""Corpus: seeded compat-boundary violations.  Never imported, only parsed."""
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.experimental.pallas import tpu as pltpu
+
+
+def sharded(fn, mesh):
+    return shard_map(fn, mesh=mesh, in_specs=None, out_specs=None)
+
+
+def tpu_params():
+    return pltpu.CompilerParams(dimension_semantics=("parallel",))
+
+
+def flops_of(fn, x):
+    return jax.jit(fn).lower(x).compile().cost_analysis()

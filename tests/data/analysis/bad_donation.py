@@ -1,0 +1,15 @@
+"""Corpus: seeded donation-after-use violation (read after donate)."""
+import jax
+
+
+def _step(state, batch):
+    return state
+
+
+step = jax.jit(_step, donate_argnums=(0,))
+
+
+def train(state, batch):
+    new_state = step(state, batch)
+    stale = state[0]        # state's buffers were donated to step()
+    return new_state, stale

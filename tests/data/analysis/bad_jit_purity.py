@@ -1,0 +1,17 @@
+"""Corpus: seeded jit-purity violations (host effects reachable from jit)."""
+import jax
+import jax.numpy as jnp
+
+
+def _debug(x):
+    print("loss", x)
+    return x
+
+
+def step(params, x):
+    y = jnp.dot(params, x)
+    _debug(y)
+    return y.sum() + y.max().item()
+
+
+run = jax.jit(step)

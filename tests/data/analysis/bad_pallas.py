@@ -1,0 +1,19 @@
+"""Corpus: seeded pallas-structure violations (arity and dtype)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scale_kernel(x_ref, o_ref):
+    o_ref[...] = (x_ref[...] * 2.0).astype(jnp.float32)
+
+
+def scale(x):
+    m, n = x.shape
+    return pl.pallas_call(
+        _scale_kernel,
+        grid=(m // 8, n // 128),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.bfloat16),
+    )(x)

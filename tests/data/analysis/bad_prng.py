@@ -1,0 +1,8 @@
+"""Corpus: seeded prng-discipline violation (key reused across draws)."""
+import jax
+
+
+def sample(key, shape):
+    a = jax.random.normal(key, shape)
+    b = jax.random.uniform(key, shape)
+    return a + b

@@ -1,0 +1,16 @@
+"""Corpus: clean — version-sensitive APIs only via the compat layer."""
+import jax
+
+from repro.compat import cost_analysis, shard_map, tpu_compiler_params
+
+
+def sharded(fn, mesh):
+    return shard_map(fn, mesh=mesh, in_specs=None, out_specs=None)
+
+
+def tpu_params():
+    return tpu_compiler_params(dimension_semantics=("parallel",))
+
+
+def flops_of(fn, x):
+    return cost_analysis(jax.jit(fn), x)

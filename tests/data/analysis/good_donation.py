@@ -1,0 +1,14 @@
+"""Corpus: clean — the donated buffer is rebound before any further read."""
+import jax
+
+
+def _step(state, batch):
+    return state
+
+
+step = jax.jit(_step, donate_argnums=(0,))
+
+
+def train(state, batch):
+    state = step(state, batch)
+    return state, state[0]

@@ -1,0 +1,16 @@
+"""Corpus: clean — host effects live outside every traced entry point."""
+import jax
+import jax.numpy as jnp
+
+
+def step(params, x):
+    y = jnp.dot(params, x)
+    return y.sum()
+
+
+run = jax.jit(step)
+
+
+def report(loss):
+    # host side: called after run(), never under a trace
+    print("loss", float(loss))

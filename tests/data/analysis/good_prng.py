@@ -1,0 +1,9 @@
+"""Corpus: clean — one draw per key, split before reuse."""
+import jax
+
+
+def sample(key, shape):
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, shape)
+    b = jax.random.uniform(kb, shape)
+    return a + b

@@ -1,0 +1,11 @@
+"""Corpus: seeded determinism violations (path carries repro/core/)."""
+import time
+
+import numpy as np
+
+
+def plan_order(edges):
+    t0 = time.time()
+    nodes = list({a for a, _ in edges})
+    np.random.shuffle(nodes)
+    return nodes, t0

@@ -1,0 +1,14 @@
+"""Corpus: violations silenced by inline suppressions."""
+import jax
+
+
+def sample(key, shape):
+    a = jax.random.normal(key, shape)
+    b = jax.random.normal(key, shape)  # repro: ignore[prng-discipline]
+    return a + b
+
+
+def sample_bare(key, shape):
+    a = jax.random.normal(key, shape)
+    b = jax.random.normal(key, shape)  # repro: ignore
+    return a + b

@@ -1,0 +1,110 @@
+"""repro.analysis: per-rule corpus catch/clean, suppressions, CLI, JSON.
+
+Each rule must catch its seeded violation in tests/data/analysis/ and stay
+silent on the matching clean file — the contract promised by the module
+docstring ("Adding a rule") and enforced here.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import all_rules, analyze_paths
+
+REPO = Path(__file__).resolve().parents[1]
+CORPUS = REPO / "tests" / "data" / "analysis"
+
+# rule id -> (seeded-violation file, clean file) relative to CORPUS
+CASES = {
+    "compat-boundary": ("bad_compat.py", "good_compat.py"),
+    "jit-purity": ("bad_jit_purity.py", "good_jit_purity.py"),
+    "donation-after-use": ("bad_donation.py", "good_donation.py"),
+    "prng-discipline": ("bad_prng.py", "good_prng.py"),
+    "determinism": ("repro/core/bad_determinism.py",
+                    "repro/core/good_determinism.py"),
+    "pallas-structure": ("bad_pallas.py", "good_pallas.py"),
+}
+
+
+def _run_cli(*argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, env=env, cwd=REPO)
+
+
+def test_every_registered_rule_has_a_corpus_case():
+    assert set(all_rules()) == set(CASES)
+
+
+@pytest.mark.parametrize("rule", sorted(CASES), ids=sorted(CASES))
+def test_rule_catches_seeded_violation(rule):
+    bad, good = CASES[rule]
+    caught = analyze_paths([str(CORPUS / bad)], rules=[rule])
+    assert caught.findings, f"{rule} missed its seeded violation in {bad}"
+    assert all(f.rule == rule for f in caught.findings)
+    assert all(f.line > 0 and f.hint for f in caught.findings)
+    clean = analyze_paths([str(CORPUS / good)], rules=[rule])
+    assert not clean.findings, f"{rule} false-positived on {good}"
+
+
+def test_findings_carry_location_and_sort_stably():
+    res = analyze_paths([str(CORPUS / "bad_compat.py")])
+    assert res.findings == sorted(res.findings)
+    f = res.findings[0]
+    assert f.path.endswith("bad_compat.py") and f.line >= 1 and f.col >= 1
+    assert f.rule and f.message and f.hint
+
+
+def test_suppression_comment_silences_and_is_counted():
+    res = analyze_paths([str(CORPUS / "suppressed.py")])
+    assert not res.findings
+    # one ignore[prng-discipline] + one bare ignore
+    assert len(res.suppressed) == 2
+    assert all(s.rule == "prng-discipline" for s in res.suppressed)
+
+
+def test_corpus_is_excluded_from_directory_walks():
+    # CI runs `--check src tests`; the seeded-bad corpus must not trip it
+    res = analyze_paths([str(REPO / "tests")])
+    assert not any("data" in Path(f.path).parts for f in res.findings)
+
+
+def test_unknown_rule_id_raises():
+    with pytest.raises(ValueError):
+        analyze_paths([str(CORPUS / "bad_prng.py")], rules=["no-such-rule"])
+
+
+def test_cli_check_exit_codes():
+    bad = _run_cli("--check", str(CORPUS / "bad_prng.py"))
+    assert bad.returncode == 1
+    good = _run_cli("--check", str(CORPUS / "good_prng.py"))
+    assert good.returncode == 0
+    report_only = _run_cli(str(CORPUS / "bad_prng.py"))
+    assert report_only.returncode == 0          # no --check: report, exit 0
+    usage = _run_cli("--rule", "no-such-rule", str(CORPUS / "bad_prng.py"))
+    assert usage.returncode == 2
+
+
+def test_cli_json_is_stable_and_machine_readable():
+    runs = [_run_cli("--json", str(CORPUS / "bad_pallas.py"))
+            for _ in range(2)]
+    assert runs[0].stdout == runs[1].stdout
+    payload = json.loads(runs[0].stdout)
+    assert payload["n_files"] == 1
+    rules = {f["rule"] for f in payload["findings"]}
+    assert rules == {"pallas-structure"}
+    for f in payload["findings"]:
+        assert sorted(f) == ["col", "hint", "line", "message", "path", "rule"]
+
+
+def test_cli_list_rules():
+    out = _run_cli("--list-rules")
+    assert out.returncode == 0
+    for rule_id in CASES:
+        assert rule_id in out.stdout

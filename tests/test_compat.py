@@ -1,7 +1,5 @@
 """Tests for the repro.compat version-portability layer."""
 
-import os
-import re
 from pathlib import Path
 
 import jax
@@ -207,40 +205,19 @@ class TestHypothesisFallback:
 # ---------------------------------------------------------------------------
 # enforcement: no raw version-sensitive JAX APIs outside repro.compat
 # ---------------------------------------------------------------------------
-
-RAW_SHARD_MAP = re.compile(r"jax\.shard_map|jax\.experimental\.shard_map")
-RAW_COST = re.compile(r"\.cost_analysis\(\)")
-RAW_PLTPU_PARAMS = re.compile(r"pltpu\.(?:TPU)?CompilerParams")
-# import forms that would bypass the dotted-attribute patterns above
-RAW_IMPORT = re.compile(
-    r"from\s+jax[\w.]*\s+import\s+[^\n]*\b(shard_map|CompilerParams)\b")
-
-
-def _py_files():
-    for base in ("src", "benchmarks", "examples", "tests"):
-        yield from sorted((ROOT / base).rglob("*.py"))
+# The old regex tables (RAW_SHARD_MAP / RAW_COST / RAW_PLTPU_PARAMS /
+# RAW_IMPORT) are gone: repro.analysis resolves import aliases through the
+# AST, so `import jax.experimental.shard_map as smap` or a re-exported name
+# is caught where a line regex would miss it — and a comment mentioning
+# shard_map no longer needs hand-carved exclusions.
 
 
 def test_no_raw_version_sensitive_api_outside_compat():
-    me = Path(__file__).resolve()
-    offenders = []
-    for path in _py_files():
-        if path.resolve() == me:
-            continue
-        rel = path.relative_to(ROOT)
-        if rel.parts[:3] == ("src", "repro", "compat"):
-            continue
-        text = path.read_text()
-        for lineno, line in enumerate(text.splitlines(), 1):
-            code = line.split("#", 1)[0]
-            if RAW_SHARD_MAP.search(code):
-                offenders.append(f"{rel}:{lineno}: raw shard_map")
-            if RAW_COST.search(code) and "def cost_analysis" not in code:
-                offenders.append(f"{rel}:{lineno}: raw cost_analysis()")
-            if RAW_PLTPU_PARAMS.search(code):
-                offenders.append(f"{rel}:{lineno}: raw pltpu CompilerParams")
-            if RAW_IMPORT.search(code):
-                offenders.append(f"{rel}:{lineno}: raw version-sensitive "
-                                 "import from jax")
+    from repro.analysis import analyze_paths
+
+    res = analyze_paths(
+        [ROOT / base for base in ("src", "benchmarks", "examples", "tests")],
+        rules=["compat-boundary"], root=ROOT)
+    offenders = [f.format() for f in res.findings]
     assert not offenders, \
         "use repro.compat instead of raw JAX APIs:\n" + "\n".join(offenders)

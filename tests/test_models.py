@@ -13,13 +13,14 @@ KEY = jax.random.PRNGKey(0)
 
 
 def make_batch(cfg, b, s, key=KEY):
-    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+    k_tok, k_vis, k_frm = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(k_tok, (b, s), 0, cfg.vocab)}
     if cfg.family == "vlm":
         batch["vision"] = jax.random.normal(
-            key, (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+            k_vis, (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
     if cfg.family == "encdec":
         batch["frames"] = jax.random.normal(
-            key, (b, s, cfg.d_model), jnp.bfloat16)
+            k_frm, (b, s, cfg.d_model), jnp.bfloat16)
     return batch
 
 
