@@ -43,7 +43,9 @@ import numpy as np
 from repro.configs.paper_cnns import PAPER_MODELS
 from repro.core import (blob_cluster, grid_cluster, partition_and_place,
                         random_geometric_cluster, ring_cluster)
-from repro.emulator import (NodeFault, RandomNodeFaults, evaluate_cells,
+from repro.core.stageplan import from_seifer
+from repro.emulator import (DriftingCluster, NodeFault, RandomNodeFaults,
+                            compare_replan, evaluate_cells,
                             metrics_identical, simulate)
 from repro.emulator.pipeline import emulate_plan
 
@@ -80,6 +82,18 @@ SWEEP_CASES = [
      (None,), 5000,
      RandomNodeFaults(n_faults=2, window_s=(10.0, 120.0),
                       recover_after_s=60.0)),
+]
+
+# static plan vs replan-every-period on a drifting cluster
+# (key, model, cap, n_nodes, period_s, horizon_s, rate_hz, seeds, drift);
+# every run (--update AND --check) asserts replan p99 < static p99 — the
+# closed-loop elastic-serving gate
+REPLAN_CASES = [
+    ("ResNet50/n20/drift2/p10", "ResNet50", 30e6, 20, 10.0, 80.0, 5.0,
+     (0, 1, 2),
+     DriftingCluster(decay_hops=2, decay_factor=0.55, decay_steps=4,
+                     decay_every_s=10.0, jitter=0.1, slow_nodes=1,
+                     slowdown_factor=0.4, start_s=5.0)),
 ]
 
 
@@ -173,6 +187,33 @@ def measure(reps: int, with_naive: bool) -> dict:
             e["naive_status"] = ("DNF" if projected > BUDGET_S
                                  else "within-budget")
         entries[f"sweep/{key}"] = e
+
+    for (key, model, cap, n, period, horizon, rate, seeds,
+         drift) in REPLAN_CASES:
+        g = PAPER_MODELS[model]()
+        cluster = random_geometric_cluster(n, rng=n)
+        xp = from_seifer(partition_and_place(g, cluster, cap, n_classes=3,
+                                             rng=0), cluster)
+
+        def fast():
+            return compare_replan(xp, cluster, drift=drift,
+                                  period_s=period, horizon_s=horizon,
+                                  arrival_rate_hz=rate, seeds=seeds)
+        med, lo = time_us(fast, reps)
+        out = fast()
+        s_p99 = out["static"]["p99_e2e_s"]
+        r_p99 = out["replan"]["p99_e2e_s"]
+        assert r_p99 < s_p99, (
+            f"replan/{key}: replan-every-{period}s p99 ({r_p99:.4g}s) must "
+            f"beat static p99 ({s_p99:.4g}s) on the drifting cluster")
+        entries[f"replan/{key}"] = {
+            "median_us": med, "min_us": lo,
+            "static_p99_s": round(s_p99, 5),
+            "replan_p99_s": round(r_p99, 5),
+            "p99_speedup": round(s_p99 / r_p99, 2),
+            "moves": out["replan"]["moves"],
+            "replanned_windows": out["replan"]["replanned_windows"],
+        }
     return entries
 
 
@@ -200,10 +241,14 @@ def update(reps: int) -> None:
         json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")
     for name, e in sorted(entries.items()):
-        extra = (f"naive {e['naive_median_us']:.0f}us, x{e['speedup']}"
-                 if "naive_median_us" in e else
-                 f"naive projected {e.get('naive_projected_s', '?')}s "
-                 f"({e.get('naive_status', '?')})")
+        if "naive_median_us" in e:
+            extra = f"naive {e['naive_median_us']:.0f}us, x{e['speedup']}"
+        elif "p99_speedup" in e:
+            extra = (f"static p99 {e['static_p99_s']:.3g}s vs replan "
+                     f"{e['replan_p99_s']:.3g}s, x{e['p99_speedup']}")
+        else:
+            extra = (f"naive projected {e.get('naive_projected_s', '?')}s "
+                     f"({e.get('naive_status', '?')})")
         print(f"{name}: {e['median_us']:.0f}us ({extra})")
 
 

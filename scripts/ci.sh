@@ -17,6 +17,12 @@ PYTHONPATH=src python -m repro.analysis --check src tests benchmarks examples
 
 python -m pytest -x -q
 
+echo "--- smoke: fixture drift (one cell per pinned family)"
+# regenerates one small cell per pinned fixture (planner, emulator, serve)
+# through the reference path and byte-compares it against the committed
+# cell — catches silent generator drift without a full regeneration
+PYTHONPATH=src python scripts/fixture_drift_smoke.py
+
 echo "--- smoke: examples/quickstart.py"
 PYTHONPATH=src python examples/quickstart.py > /dev/null
 

@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""One-cell drift smoke over every pinned fixture family.
+
+    PYTHONPATH=src python scripts/fixture_drift_smoke.py
+
+Regenerates a single small cell per fixture family — planner, emulator,
+serving — through the same reference path ``write_fixture`` uses, and
+byte-compares its JSON encoding against the committed cell.  This catches
+silent fixture drift (a generator change that would rewrite committed
+cells on the next full regeneration) in seconds, without paying for a full
+``scripts/gen_*_fixture.py`` run.  A mismatch means the PR changed pinned
+semantics: either fix the change, or regenerate intentionally and say so
+in the PR description.  Run by scripts/ci.sh.
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DATA = os.path.join(os.path.dirname(__file__), "..", "tests", "data")
+
+
+def check(family: str, fixture: str, sc: dict, run) -> None:
+    with open(os.path.join(DATA, fixture)) as f:
+        committed = json.load(f)
+    cid = sc["id"]
+    if cid not in committed:
+        sys.exit(f"drift-smoke FAIL [{family}]: cell {cid!r} missing from "
+                 f"{fixture} — regenerate the fixture (scripts/gen_*.py) "
+                 "and commit it")
+    # the fixtures are dumped with sort_keys, so a canonical re-encoding of
+    # one cell is a faithful byte-level comparison of that cell
+    got = json.dumps(run(sc), sort_keys=True)
+    want = json.dumps(committed[cid], sort_keys=True)
+    if got != want:
+        sys.exit(f"drift-smoke FAIL [{family}]: regenerated cell {cid!r} "
+                 f"differs from the committed one in {fixture}.  The PR "
+                 "changed pinned semantics — revert, or regenerate the "
+                 "fixture intentionally and call it out in the PR.")
+    print(f"drift-smoke [{family}]: {cid} byte-stable")
+
+
+def main() -> None:
+    from repro.core import equivalence as core_eq
+    check("planner", "planner_equivalence.json",
+          core_eq.scenarios()[0], core_eq.run_scenario)
+
+    from repro.emulator import equivalence as emu_eq
+    check("emulator", "emulator_equivalence.json",
+          emu_eq.scenarios()[0], emu_eq.run_scenario)
+
+    from repro.serve import equivalence as serve_eq
+    sync = next(s for s in serve_eq.scenarios()
+                if s["id"].startswith("sync/"))
+    check("serve", "serve_equivalence.json", sync, serve_eq.run_scenario)
+    print("drift-smoke: OK")
+
+
+if __name__ == "__main__":
+    main()

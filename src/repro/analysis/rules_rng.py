@@ -139,7 +139,7 @@ class DeterminismRule(Rule):
     id = "determinism"
     summary = ("wall-clock, global RNG state, or unordered-set iteration "
                "inside a fixture-pinned deterministic path")
-    scopes = ("repro/core/", "repro/emulator/")
+    scopes = ("repro/core/", "repro/emulator/", "repro/serve/")
 
     def check(self, project: Project):
         for mod in self.in_scope(project):

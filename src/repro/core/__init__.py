@@ -22,6 +22,8 @@ from .partitioner import (NotPartitionable, PartitionInfeasible,
 from .placement import (PlacementInfeasible, PlacementResult, classify,
                         kpath_matching, place_with_retry, subgraph_k_path,
                         subgraph_k_path_reference)
+from .replan import (ReplanResult, StageMove, incremental_replan,
+                     stage_costs)
 from .stageplan import (BoundarySpec, StageExecutionPlan, StageSpec,
                         from_block_cuts, from_seifer)
 
@@ -41,6 +43,7 @@ __all__ = [
     "transfer_sizes",
     "PlacementInfeasible", "PlacementResult", "classify", "kpath_matching",
     "place_with_retry", "subgraph_k_path", "subgraph_k_path_reference",
+    "ReplanResult", "StageMove", "incremental_replan", "stage_costs",
     "BoundarySpec", "StageExecutionPlan", "StageSpec", "from_block_cuts",
     "from_seifer",
 ]

@@ -1,0 +1,150 @@
+"""Bounded incremental replanning: warm-start from the current plan.
+
+The full planner (Algorithm 1 partitioning + Algorithm 2/3 k-path
+placement) is built for cold starts and is deliberately rng-pinned
+(``tests/data/planner_equivalence.json``); re-running it on every
+telemetry update would re-enter the k > 12 greedy fallback from scratch
+and could emit an arbitrarily different plan whose migration cost dwarfs
+the drift it reacts to.  :func:`incremental_replan` instead *warm-starts*
+from the current :class:`~repro.core.stageplan.StageExecutionPlan`:
+
+* the partition (Algorithm 1's layer -> stage assignment) is reused
+  verbatim — stage boundaries, ``in_bytes`` and ``compute_flops`` never
+  change;
+* the placement is repaired by a deterministic greedy local search that
+  moves stages onto spare nodes, **bounded to at most ``max_moves``
+  moves** — the ≤ m-stage diff bound that keeps live-migration cost
+  proportional to the drift, not to the fleet.
+
+Each candidate move is scored with the emulator's steady-state stage cost
+(transfer-in + compute, the reciprocal-throughput bottleneck the paper
+minimizes) under the *measured* cluster state — typically a
+``repro.serve.telemetry.ClusterState`` estimate or the emulator's
+``effective_cluster`` oracle.  Moves are accepted only while they
+strictly lower the bottleneck by more than ``min_gain_s``, so the search
+cannot oscillate and always terminates within ``max_moves`` rounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from .stageplan import StageExecutionPlan
+
+# matches repro.emulator.pipeline.EmulatorConfig.node_flops — the serving
+# fleet's per-node FLOP rate used to turn stage FLOPs into seconds
+DEFAULT_NODE_FLOPS = 20e9
+
+_INF = float("inf")
+
+
+@dataclass(frozen=True)
+class StageMove:
+    """One placement diff: stage ``stage`` moves old_node -> new_node."""
+    stage: int
+    old_node: int
+    new_node: int
+
+
+@dataclass(frozen=True)
+class ReplanResult:
+    plan: StageExecutionPlan
+    moves: tuple[StageMove, ...]
+    bottleneck_before_s: float
+    bottleneck_after_s: float
+
+    @property
+    def changed(self) -> bool:
+        return bool(self.moves)
+
+
+def _stage_cost(in_bytes: float, flops: float, bw: float, scale: float,
+                node_flops: float) -> float:
+    """Steady-state service time of one stage: transfer-in + compute."""
+    if in_bytes == 0.0:
+        transfer = 0.0
+    elif bw > 0.0:
+        transfer = in_bytes / bw
+    else:
+        transfer = _INF
+    if flops == 0.0:
+        compute = 0.0
+    elif scale > 0.0:
+        compute = flops / node_flops / scale
+    else:
+        compute = _INF
+    return transfer + compute
+
+
+def stage_costs(plan: StageExecutionPlan, cluster, *,
+                node_flops: float = DEFAULT_NODE_FLOPS) -> list[float]:
+    """Per-stage service time of ``plan`` under ``cluster`` (index k =
+    stage k; the dispatcher contributes only the first hop's transfer)."""
+    nodes = plan.nodes
+    return [_stage_cost(s.in_bytes, s.compute_flops,
+                        float(cluster.bw[nodes[k], s.node]),
+                        float(cluster.compute_scale[s.node]), node_flops)
+            for k, s in enumerate(plan.stages)]
+
+
+def incremental_replan(plan: StageExecutionPlan, cluster, *,
+                       max_moves: int = 2, min_gain_s: float = 0.0,
+                       node_flops: float = DEFAULT_NODE_FLOPS
+                       ) -> ReplanResult:
+    """Repair ``plan``'s placement under a drifted ``cluster`` estimate.
+
+    Deterministic bounded local search: each round evaluates every
+    (stage, spare-node) move, commits the one that most lowers the
+    bottleneck stage cost (first minimum wins on ties — stages ascending,
+    spares in pool order), and returns the vacated node to the spare
+    pool.  Stops after ``max_moves`` rounds or when no move improves the
+    bottleneck by more than ``min_gain_s``.  The returned plan preserves
+    the partition exactly; only ``StageSpec.node`` and ``spare_nodes``
+    differ."""
+    n = plan.n_stages
+    nodes = [s.node for s in plan.stages]
+    spares = list(plan.spare_nodes)
+    inb = [s.in_bytes for s in plan.stages]
+    fl = [s.compute_flops for s in plan.stages]
+    bw = cluster.bw
+    scale = cluster.compute_scale
+
+    def cost(k: int, host: int, prev: int) -> float:
+        return _stage_cost(inb[k], fl[k], float(bw[prev, host]),
+                           float(scale[host]), node_flops)
+
+    def costs(ns: list[int]) -> list[float]:
+        prevs = [plan.dispatcher_node] + ns[:-1]
+        return [cost(k, ns[k], prevs[k]) for k in range(n)]
+
+    before = max(costs(nodes), default=0.0)
+    cur_max = before
+    moves: list[StageMove] = []
+    for _ in range(max_moves):
+        best = None                    # (new_max, k, spare)
+        for k in range(n):
+            for sp in spares:
+                if sp in nodes or sp == plan.dispatcher_node:
+                    continue
+                cand = nodes.copy()
+                cand[k] = sp
+                new_max = max(costs(cand))
+                if best is None or new_max < best[0]:
+                    best = (new_max, k, sp)
+        if best is None or not cur_max > best[0] + min_gain_s:
+            break
+        new_max, k, sp = best
+        moves.append(StageMove(k, nodes[k], sp))
+        spares.remove(sp)
+        spares.append(nodes[k])
+        nodes[k] = sp
+        cur_max = new_max
+
+    if not moves:
+        return ReplanResult(plan, (), before, before)
+    stages = [dataclasses.replace(s, node=nodes[k])
+              for k, s in enumerate(plan.stages)]
+    new_plan = dataclasses.replace(plan, stages=stages,
+                                   spare_nodes=tuple(spares))
+    return ReplanResult(new_plan, tuple(moves), before, cur_max)

@@ -1,14 +1,18 @@
 from .core import Event, Simulator
 from .pipeline import (EmulatorConfig, PipelineEmulator, emulate_plan,
                        metrics_identical, plan_stage_args, summarize)
-from .faults import (FaultInjector, LinkFault, NodeFault, RandomLinkFaults,
-                     RandomNodeFaults)
+from .faults import (CompositeFaultModel, DriftingCluster, EffectLedger,
+                     FaultInjector, LinkDegrade, LinkFault, NodeFault,
+                     NodeSlowdown, RandomLinkFaults, RandomNodeFaults,
+                     compose_faults, effective_cluster)
 from .engine import FlatEventEngine, lindley_scan, poisson_arrivals, simulate
-from .sweep import aggregate, evaluate_cells, sweep_plan
+from .sweep import aggregate, compare_replan, evaluate_cells, sweep_plan
 
 __all__ = ["Event", "Simulator", "PipelineEmulator", "EmulatorConfig",
            "emulate_plan", "plan_stage_args", "summarize", "metrics_identical",
-           "FaultInjector", "LinkFault", "NodeFault",
+           "FaultInjector", "LinkFault", "NodeFault", "LinkDegrade",
+           "NodeSlowdown", "DriftingCluster", "CompositeFaultModel",
+           "EffectLedger", "compose_faults", "effective_cluster",
            "RandomNodeFaults", "RandomLinkFaults",
            "FlatEventEngine", "lindley_scan", "poisson_arrivals", "simulate",
-           "aggregate", "evaluate_cells", "sweep_plan"]
+           "aggregate", "compare_replan", "evaluate_cells", "sweep_plan"]

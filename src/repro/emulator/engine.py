@@ -43,7 +43,8 @@ from heapq import heappop, heappush
 import numpy as np
 
 from repro.core.cluster import ClusterGraph
-from .faults import FaultInjector, LinkFault, NodeFault
+from .faults import (EffectLedger, FaultInjector, LinkDegrade, LinkFault,
+                     NodeFault, NodeSlowdown, link_key)
 from .pipeline import EmulatorConfig, PipelineEmulator, summarize
 
 __all__ = ["lindley_scan", "poisson_arrivals", "simulate", "FlatEventEngine"]
@@ -184,6 +185,7 @@ def _calendar_run(arrivals, comp, send, duration_s):
 # payloads are never compared)
 _ARRIVE, _DONE, _RETRY, _DELIVER = 0, 1, 2, 3
 _KILL, _REVIVE, _RESCHED, _DROP, _RESTORE, _SWEEP = 4, 5, 6, 7, 8, 9
+_DEGRADE, _UNDEGRADE, _SLOW, _UNSLOW = 10, 11, 12, 13
 
 
 class FlatEventEngine:
@@ -206,10 +208,13 @@ class FlatEventEngine:
             faults=()) -> dict:
         cfg = self.cfg
         cluster = self.cluster
-        scale = cluster.compute_scale
-        # fresh copy per run: a link fault still down at end-of-run must not
-        # leak into the next run (or into the caller's cluster)
+        # fresh copies per run: a link fault still down (or a node slowdown
+        # still active) at end-of-run must not leak into the next run (or
+        # into the caller's cluster)
+        scale = cluster.compute_scale.copy()
         bwmat = cluster.bw.copy()
+        links = EffectLedger()
+        slows = EffectLedger()
         n_stages = self.n_parts + 1
         last = n_stages - 1
         n_batches = arrivals.size
@@ -266,6 +271,16 @@ class FlatEventEngine:
             sending[k] = True
             attempt(k, outbox[k].popleft())
 
+        def set_scale(nd, eff):
+            # mirrors FaultInjector._set_scale: in-flight computes keep the
+            # service time they were scheduled with; later starts pay the
+            # new rate (the _DONE events already in the heap are unchanged)
+            scale[nd] = eff
+            for k in range(n_stages):
+                if node[k] == nd:
+                    comp_s[k] = (0.0 if flops[k] == 0.0
+                                 else flops[k] / node_flops / scale[nd])
+
         def release(nd):
             if (nd not in down and nd not in spares
                     and all(x != nd for x in node)):
@@ -311,6 +326,10 @@ class FlatEventEngine:
                                  cnt(), _REVIVE, f.node))
             elif isinstance(f, LinkFault):
                 heappush(q, (max(f.time_s, 0.0), cnt(), _DROP, fi))
+            elif isinstance(f, LinkDegrade):
+                heappush(q, (max(f.time_s, 0.0), cnt(), _DEGRADE, fi))
+            elif isinstance(f, NodeSlowdown):
+                heappush(q, (max(f.time_s, 0.0), cnt(), _SLOW, fi))
             else:
                 raise TypeError(f)
         if cfg.enable_straggler_migration:
@@ -381,16 +400,45 @@ class FlatEventEngine:
             elif op == _RESCHED:
                 do_reschedule(ev[3], False)
             elif op == _DROP:
-                f = faults[ev[3]]
-                saved = bwmat[f.a, f.b]
-                bwmat[f.a, f.b] = bwmat[f.b, f.a] = 0.0
+                fi = ev[3]
+                f = faults[fi]
+                eff = links.push(link_key(f.a, f.b),
+                                 float(bwmat[f.a, f.b]), fi, 0.0)
+                bwmat[f.a, f.b] = bwmat[f.b, f.a] = eff
                 log.append((now, f"link ({f.a},{f.b}) DOWN"))
-                heappush(q, (now + f.duration_s, cnt(), _RESTORE,
-                             f.a, f.b, saved))
+                heappush(q, (now + f.duration_s, cnt(), _RESTORE, fi))
             elif op == _RESTORE:
-                a, b, saved = ev[3:6]
-                bwmat[a, b] = bwmat[b, a] = saved
-                log.append((now, f"link ({a},{b}) restored"))
+                f = faults[ev[3]]
+                eff = links.pop(link_key(f.a, f.b), ev[3])
+                bwmat[f.a, f.b] = bwmat[f.b, f.a] = eff
+                log.append((now, f"link ({f.a},{f.b}) restored"))
+            elif op == _DEGRADE:
+                fi = ev[3]
+                f = faults[fi]
+                eff = links.push(link_key(f.a, f.b),
+                                 float(bwmat[f.a, f.b]), fi, f.factor)
+                bwmat[f.a, f.b] = bwmat[f.b, f.a] = eff
+                log.append((now, f"link ({f.a},{f.b}) degraded "
+                                 f"x{f.factor:g}"))
+                if f.duration_s is not None:
+                    heappush(q, (now + f.duration_s, cnt(), _UNDEGRADE, fi))
+            elif op == _UNDEGRADE:
+                f = faults[ev[3]]
+                eff = links.pop(link_key(f.a, f.b), ev[3])
+                bwmat[f.a, f.b] = bwmat[f.b, f.a] = eff
+                log.append((now, f"link ({f.a},{f.b}) drift cleared"))
+            elif op == _SLOW:
+                fi = ev[3]
+                f = faults[fi]
+                set_scale(f.node, slows.push(f.node, float(scale[f.node]),
+                                             fi, f.factor))
+                log.append((now, f"node {f.node} slowdown x{f.factor:g}"))
+                if f.duration_s is not None:
+                    heappush(q, (now + f.duration_s, cnt(), _UNSLOW, fi))
+            elif op == _UNSLOW:
+                f = faults[ev[3]]
+                set_scale(f.node, slows.pop(f.node, ev[3]))
+                log.append((now, f"node {f.node} slowdown cleared"))
             elif op == _SWEEP:
                 vals = [np.mean(svc[k][-5:]) for k in range(1, n_stages)
                         if svc[k]]
@@ -421,7 +469,8 @@ def simulate(cluster: ClusterGraph, nodes, boundary_bytes, compute_flops,
              engine: str = "auto") -> dict:
     """Emulate one plan; metrics-identical to ``PipelineEmulator``.
 
-    ``faults`` is a declarative list of :class:`NodeFault`/:class:`LinkFault`
+    ``faults`` is a declarative list of :class:`NodeFault` /
+    :class:`LinkFault` / :class:`LinkDegrade` / :class:`NodeSlowdown`
     (the reference wires the same list through ``FaultInjector`` *before*
     ``run`` — event ordering replicates that).  Engines:
 
@@ -433,9 +482,11 @@ def simulate(cluster: ClusterGraph, nodes, boundary_bytes, compute_flops,
     """
     cfg = cfg or EmulatorConfig()
     if engine == "reference":
+        # bw AND compute_scale are copied: link faults and node slowdowns
+        # mutate them, and the caller's cluster must never see that
         ref_cluster = ClusterGraph(bw=cluster.bw.copy(), pos=cluster.pos,
                                    labels=cluster.labels,
-                                   compute_scale=cluster.compute_scale)
+                                   compute_scale=cluster.compute_scale.copy())
         emu = PipelineEmulator(ref_cluster, nodes, boundary_bytes,
                                compute_flops, cfg, rng)
         if faults:

@@ -19,8 +19,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from .engine import simulate
-from .pipeline import EmulatorConfig
+from .engine import _calendar_run, _stage_constants, simulate
+from .faults import effective_cluster
+from .pipeline import EmulatorConfig, plan_stage_args
 
 
 def evaluate_cells(cluster, nodes, boundary_bytes, compute_flops, *,
@@ -84,6 +85,96 @@ def aggregate(cells: list[dict], n_batches: int) -> dict:
 
 def sweep_plan(plan, cluster, **kw) -> list[dict]:
     """``evaluate_cells`` for a StageExecutionPlan (or SeiferPlan)."""
-    from .pipeline import plan_stage_args
     nodes, boundary, flops = plan_stage_args(plan)
     return evaluate_cells(cluster, nodes, boundary, flops, **kw)
+
+
+def _tail(e2e: list[float], submitted: int) -> dict:
+    arr = np.array(e2e, dtype=np.float64)
+    if arr.size == 0:
+        return {"completed": 0, "submitted": submitted,
+                "mean_e2e_s": float("inf"), "p50_e2e_s": float("inf"),
+                "p95_e2e_s": float("inf"), "p99_e2e_s": float("inf")}
+    return {"completed": int(arr.size), "submitted": submitted,
+            "mean_e2e_s": float(arr.mean()),
+            "p50_e2e_s": float(np.percentile(arr, 50)),
+            "p95_e2e_s": float(np.percentile(arr, 95)),
+            "p99_e2e_s": float(np.percentile(arr, 99))}
+
+
+def compare_replan(plan, cluster, *, drift, period_s: float,
+                   horizon_s: float, arrival_rate_hz: float,
+                   seeds=(0,), cfg: EmulatorConfig | None = None,
+                   max_moves: int = 2, min_gain_s: float = 0.0) -> dict:
+    """Static plan vs replan-every-``period_s`` on a drifting cluster.
+
+    Quasi-static windowed emulation: the horizon is cut into
+    ``horizon_s / period_s`` windows; within each window the cluster is
+    frozen at its drifted state (``faults.effective_cluster`` — the
+    perfect-telemetry oracle) and the window's Poisson arrivals are run
+    through the vectorized calendar engine.  The *static* variant keeps
+    the seed plan's placement for every window; the *replan* variant
+    calls ``repro.core.replan.incremental_replan`` (diff bounded to
+    ``max_moves`` stage moves) at each window boundary against the same
+    oracle state, emulating telemetry-driven replanning with one-period
+    staleness at most.  Per-window tails are pooled over all seeds and
+    windows; batches that never finish under a dead link are counted in
+    ``submitted`` but excluded from the latency pool.
+
+    ``plan`` must be a StageExecutionPlan (or SeiferPlan, converted) with
+    ``spare_nodes`` — with an empty spare pool the replan variant
+    degenerates to static.
+    """
+    from repro.core.replan import incremental_replan
+    cfg = cfg or EmulatorConfig()
+    if hasattr(plan, "placement"):                       # SeiferPlan
+        plan = plan.execution_plan()
+    static_args = plan_stage_args(plan)
+    n_windows = int(np.ceil(horizon_s / period_s))
+
+    def window_e2e(eff, args, arrivals) -> np.ndarray:
+        nodes, boundary, flops = args
+        comp, send = _stage_constants(eff, nodes, boundary, flops, cfg)
+        _, e2e = _calendar_run(arrivals, comp, send, np.inf)
+        return e2e[np.isfinite(e2e)]
+
+    static_lat: list[float] = []
+    replan_lat: list[float] = []
+    static_sub = replan_sub = 0
+    total_moves = 0
+    replan_windows = 0
+    for seed in seeds:
+        schedule = drift.draw(seed, static_args[0])
+        rng = np.random.default_rng(int(seed))
+        # one Poisson stream for the whole horizon, split at window edges
+        t, arrivals = 0.0, []
+        while t < horizon_s:
+            arrivals.append(t)
+            t += rng.exponential(1.0 / arrival_rate_hz)
+        arrivals = np.array(arrivals)
+        current = plan
+        for w in range(n_windows):
+            t0 = w * period_s
+            eff = effective_cluster(cluster, schedule, t0)
+            sel = (arrivals >= t0) & (arrivals < t0 + period_s)
+            local = arrivals[sel] - t0
+            res = incremental_replan(current, eff, max_moves=max_moves,
+                                     min_gain_s=min_gain_s,
+                                     node_flops=cfg.node_flops)
+            current = res.plan
+            total_moves += len(res.moves)
+            replan_windows += bool(res.moves)
+            if local.size == 0:
+                continue
+            static_sub += int(local.size)
+            replan_sub += int(local.size)
+            static_lat.extend(window_e2e(eff, static_args, local))
+            replan_lat.extend(window_e2e(eff, plan_stage_args(current),
+                                         local))
+    out = {"period_s": period_s, "horizon_s": horizon_s,
+           "arrival_rate_hz": arrival_rate_hz, "n_seeds": len(seeds),
+           "static": _tail(static_lat, static_sub),
+           "replan": _tail(replan_lat, replan_sub)}
+    out["replan"]["moves"] = total_moves
+    out["replan"]["replanned_windows"] = replan_windows
+    return out

@@ -19,13 +19,29 @@ Three execution paths over the same ``repro.models`` serving contract
   backed fault-tolerant stage replacement with in-flight replay, and the
   same ``SlotScheduler`` for continuous batching across stages.
 
-See ROADMAP.md "Serving-perf contract" and "Deployment contract" for the
-lockstep/equivalence obligations and the BENCH_serve.json workflow.
+The **elastic** layer closes the control loop: ``TelemetryStream`` (per
+-stage ring-buffer telemetry, injected clock) feeds ``ClusterState`` (EWMA
+bandwidth/compute estimates) feeds ``PipelineServeEngine.replan_live``
+(bounded ``repro.core.replan`` diff, executed as checkpoint-backed live
+migrations with deterministic in-flight replay).  Restore/migration I/O
+runs under bounded retry/backoff (``RetryPolicy``); exhaustion surfaces as
+``RestoreExhausted`` (a ``StageDown``) on the restore path and
+``StageDegraded`` (stage keeps serving, placement degraded) on the
+migration path.
+
+See ROADMAP.md "Serving-perf contract", "Deployment contract" and
+"Telemetry & replan contract" for the lockstep/equivalence obligations and
+the BENCH_serve.json workflow.
 """
 
 from .engine import ServeEngine
-from .pipeline import PipelineServeEngine, StageDown
+from .pipeline import (PipelineServeEngine, RestoreExhausted, StageDegraded,
+                       StageDown)
+from .retry import RetryExhausted, RetryPolicy, retry_call
 from .scheduler import Request, SlotScheduler
+from .telemetry import ClusterState, TelemetryStream
 
-__all__ = ["PipelineServeEngine", "Request", "ServeEngine", "SlotScheduler",
-           "StageDown"]
+__all__ = ["ClusterState", "PipelineServeEngine", "Request",
+           "RestoreExhausted", "RetryExhausted", "RetryPolicy",
+           "ServeEngine", "SlotScheduler", "StageDegraded", "StageDown",
+           "TelemetryStream", "retry_call"]

@@ -8,8 +8,9 @@ staggered request streams through the slot scheduler for the non-MoE
 families, and *pipelined* cells (``pipeline/`` / ``pipeline-stream/``)
 that serve the same requests through ``PipelineServeEngine`` over a
 block-cut ``StageExecutionPlan`` (first/middle/last cuts x families, with
-mid-stream stage kill + restore variants) — and a capture function that
-pins the *reference* greedy token streams.  Tokens are ints, so the pin is
+mid-stream stage kill + restore variants and ``-replan`` cells that run a
+telemetry-triggered live migration mid-stream) — and a capture function
+that pins the *reference* greedy token streams.  Tokens are ints, so the pin is
 exact by nature (the token-level analogue of the float.hex() pins
 elsewhere).
 
@@ -81,10 +82,29 @@ PIPELINE_STREAM_CELLS = [
     ("mamba2-1.3b", 4, [2], {"after_step": 4, "stage": 1}),
 ]
 
+# telemetry-triggered live replanning (the elastic-serving loop): the
+# engine runs with a deterministic step clock and a uniform-bandwidth
+# cluster; boundary-transfer telemetry degrades the EWMA estimate of the
+# hops that carried traffic, ``replan_live`` moves a stage onto the spare,
+# and the in-flight work is replayed across the migrated placement.  Pins
+# are the monolithic REFERENCE tokens, so these cells enforce token
+# identity *across* a telemetry-driven live migration.
+PIPELINE_REPLAN_CELLS = [
+    ("granite-3-2b", 4, [2], {"after_step": 3}),
+    ("mamba2-1.3b", 4, [2], {"after_step": 3}),
+]
+PIPELINE_STREAM_REPLAN_CELLS = [
+    ("granite-3-2b", 4, [2], {"after_step": 4}),
+]
 
-def _pipe_id(prefix, arch, cuts, kill):
+
+def _pipe_id(prefix, arch, cuts, kill, replan=None):
     cid = f"{prefix}/{arch}/cut{'-'.join(map(str, cuts))}"
-    return cid + "-kill" if kill else cid
+    if kill:
+        cid += "-kill"
+    if replan:
+        cid += "-replan"
+    return cid
 
 
 def scenarios() -> list[dict]:
@@ -110,6 +130,18 @@ def scenarios() -> list[dict]:
         out.append({"id": _pipe_id("pipeline-stream", arch, cuts, kill),
                     "kind": "pipeline_stream", "arch": arch, "n_layers": nl,
                     "cuts": cuts, "kill": kill, "slots": 2,
+                    "requests": STREAM_REQUESTS, "seed": 1, "max_len": 32,
+                    "kv_block": 16})
+    for arch, nl, cuts, rp in PIPELINE_REPLAN_CELLS:
+        out.append({"id": _pipe_id("pipeline", arch, cuts, None, rp),
+                    "kind": "pipeline", "arch": arch, "n_layers": nl,
+                    "cuts": cuts, "kill": None, "replan": rp, "batch": 2,
+                    "prompt_len": 12, "gen_len": 8, "seed": 0, "max_len": 32,
+                    "kv_block": 16})
+    for arch, nl, cuts, rp in PIPELINE_STREAM_REPLAN_CELLS:
+        out.append({"id": _pipe_id("pipeline-stream", arch, cuts, None, rp),
+                    "kind": "pipeline_stream", "arch": arch, "n_layers": nl,
+                    "cuts": cuts, "kill": None, "replan": rp, "slots": 2,
                     "requests": STREAM_REQUESTS, "seed": 1, "max_len": 32,
                     "kv_block": 16})
     return out
@@ -140,15 +172,65 @@ def build_engine(sc: dict) -> ServeEngine:
                        kv_block=sc["kv_block"])
 
 
+class _StepClock:
+    """Deterministic clock for replan cells: +1.0 s per read, so the
+    telemetry samples — and therefore the fold -> replan decision — are
+    identical on every run and host."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
 def build_pipeline_engine(sc: dict, eng: ServeEngine):
     """The fast side of a pipeline scenario: the same params served
-    through a block-cut StageExecutionPlan."""
+    through a block-cut StageExecutionPlan.
+
+    Replan cells get a shape-priced plan (non-zero boundary in_bytes, so
+    stage moves have real transfer costs), a uniform-bandwidth cluster
+    with one spare, and a TelemetryStream on a deterministic step clock:
+    the hops that carry decode traffic accumulate tiny bytes-per-second
+    samples, their EWMA estimates decay, and ``replan_live`` moves a stage
+    onto the (unobserved, still-fast) spare."""
     from repro.core.stageplan import from_block_cuts
     from .pipeline import PipelineServeEngine
+    if sc.get("replan"):
+        from repro.core.cluster import ClusterGraph
+        from repro.models.config import SHAPES
+        from .telemetry import TelemetryStream
+        n_st = len(sc["cuts"]) + 1
+        n = n_st + 2                     # dispatcher + stages + one spare
+        bw = np.full((n, n), 200e6)
+        np.fill_diagonal(bw, 0.0)
+        cluster = ClusterGraph(bw=bw, pos=np.zeros((n, 2)),
+                               labels=[f"n{i}" for i in range(n)],
+                               compute_scale=np.ones(n))
+        plan = from_block_cuts(eng.cfg, sc["cuts"],
+                               nodes=tuple(range(n_st + 1)),
+                               spare_nodes=(n_st + 1,),
+                               shape=SHAPES["decode_32k"])
+        tel = TelemetryStream(n_st, clock=_StepClock())
+        return PipelineServeEngine(eng.cfg, eng.params, plan,
+                                   max_len=sc["max_len"],
+                                   kv_block=sc["kv_block"],
+                                   cluster=cluster, telemetry=tel)
     plan = from_block_cuts(eng.cfg, sc["cuts"], spare_nodes=(900, 901))
     return PipelineServeEngine(eng.cfg, eng.params, plan,
                                max_len=sc["max_len"],
                                kv_block=sc["kv_block"])
+
+
+def _replan_arg(sc: dict, peng) -> dict | None:
+    spec = sc.get("replan")
+    if spec is None:
+        return None
+    from .telemetry import ClusterState
+    return {"after_step": spec["after_step"],
+            "cluster": ClusterState(peng.cluster),
+            "max_moves": spec.get("max_moves", 1)}
 
 
 def _requests(cfg, sc) -> list[Request]:
@@ -182,7 +264,8 @@ def run_scenario(sc: dict, engine: str = "reference",
             toks = eng.generate(batch, sc["gen_len"], engine="reference")
         else:
             peng = build_pipeline_engine(sc, eng)
-            toks = peng.generate(batch, sc["gen_len"], kill=sc.get("kill"))
+            toks = peng.generate(batch, sc["gen_len"], kill=sc.get("kill"),
+                                 replan=_replan_arg(sc, peng))
         return {"tokens": toks.tolist()}
     if kind == "pipeline_stream":
         reqs = _requests(cfg, sc)
@@ -192,7 +275,8 @@ def run_scenario(sc: dict, engine: str = "reference",
         else:
             peng = build_pipeline_engine(sc, eng)
             streams, _ = SlotScheduler(peng, sc["slots"]).run(
-                reqs, engine="fast", kill=sc.get("kill"))
+                reqs, engine="fast", kill=sc.get("kill"),
+                replan=_replan_arg(sc, peng))
         return {"tokens": [s.tolist() for s in streams]}
     reqs = _requests(cfg, sc)
     streams, _ = SlotScheduler(eng, sc["slots"]).run(reqs, engine=engine)

@@ -26,7 +26,24 @@ neighbours when a cluster is given, like the emulator's reschedule) and
 **replays in-flight requests** — greedy decoding is deterministic, so the
 replay reproduces the lost state exactly and the stream continues
 unchanged, the runtime counterpart of the emulator's epoch-tracked work
-replay.
+replay.  Checkpoint reads and spare acquisition are wrapped in bounded
+retry/backoff (``repro.serve.retry``); exhaustion raises
+:class:`RestoreExhausted` (a :class:`StageDown`) carrying the attempt
+history.
+
+**Elastic serving** closes the loop: with a ``telemetry``
+(:class:`~repro.serve.telemetry.TelemetryStream`) attached, the engine
+emits per-stage decode latency and boundary-transfer samples;
+``replan_live`` folds them into a
+:class:`~repro.serve.telemetry.ClusterState` estimate, runs the bounded
+``repro.core.replan.incremental_replan`` against it, and executes the
+diff as planned live migrations (``migrate_stage``: checkpoint-backed,
+the vacated node rejoins the spare pool; a failed migration degrades —
+:class:`StageDegraded` — instead of killing the stage, so in-flight
+requests are never dropped).  Replay after a migration is the same
+deterministic mechanism as after a kill, so greedy streams stay
+bit-identical across a live migration — pinned by the ``-replan`` cells
+of ``tests/data/serve_equivalence.json``.
 
 Continuous batching: ``SlotScheduler`` drives this engine through the same
 slot bookkeeping as the monolithic engine — per-stage cache banks, per
@@ -36,6 +53,7 @@ slot bookkeeping as the monolithic engine — per-stage cache banks, per
 
 from __future__ import annotations
 
+import dataclasses
 import tempfile
 import time
 from pathlib import Path
@@ -50,10 +68,30 @@ from repro.models import staging
 from repro.models.layers import set_decode_kv_bucket
 
 from .engine import _quiet
+from .retry import RetryExhausted, RetryPolicy, retry_call
 
 
 class StageDown(RuntimeError):
     """A dead stage executor was asked to compute."""
+
+
+class StageDegraded(RuntimeError):
+    """A planned migration failed; the stage keeps serving on its old
+    node (degraded placement, no outage).  ``attempts`` is the bounded
+    -retry failure history of the migration that was abandoned."""
+
+    def __init__(self, msg: str, attempts=()):
+        super().__init__(msg)
+        self.attempts = tuple(attempts)
+
+
+class RestoreExhausted(StageDown):
+    """Stage restore gave up after bounded retries (spare acquisition or
+    checkpoint read); ``attempts`` carries the per-attempt history."""
+
+    def __init__(self, msg: str, attempts=()):
+        super().__init__(msg)
+        self.attempts = tuple(attempts)
 
 
 class PipelineServeEngine:
@@ -70,12 +108,19 @@ class PipelineServeEngine:
     cluster    : optional ClusterGraph — lets spare selection score
                  bandwidth to the pipeline neighbours exactly like the
                  emulator's reschedule.
+    telemetry  : optional TelemetryStream — per-stage decode latency and
+                 boundary-transfer samples are recorded through its
+                 injected clock (never a direct wall-clock read in the
+                 pinned path); feeds ClusterState -> replan_live.
+    retry      : RetryPolicy for checkpoint reads / spare acquisition on
+                 the restore and migration paths (default 3 attempts,
+                 exponential backoff).
     """
 
     is_pipeline = True
 
     def __init__(self, cfg, params, plan, *, max_len: int, kv_block: int = 32,
-                 ckpt_dir=None, cluster=None):
+                 ckpt_dir=None, cluster=None, telemetry=None, retry=None):
         self.cfg = cfg
         self.plan = plan
         self.max_len = int(max_len)
@@ -92,9 +137,12 @@ class PipelineServeEngine:
         self.node_of_stage = [s.node for s in plan.stages]
         self.spares = list(plan.spare_nodes)
         self.cluster = cluster
+        self.telemetry = telemetry
+        self.retry = retry or RetryPolicy()
         self.down: set[int] = set()
         self.events: list[tuple[float, str]] = []
-        self._t0 = time.perf_counter()
+        # event-log timestamps are diagnostics, never token-affecting
+        self._t0 = time.perf_counter()  # repro: ignore[determinism]
 
         # durable per-stage subtrees: the restore source for replacement
         if ckpt_dir is not None:
@@ -271,12 +319,31 @@ class PipelineServeEngine:
 
     def _chain_decode(self, toks, caches, bucket):
         x = toks
+        tel = self.telemetry
         for k in range(self.n_stages):
             self._require_up(k)
+            if tel is None:
+                x, caches[k] = _quiet(self._decode_fns[k],
+                                      self.stage_params[k], x, caches[k],
+                                      bucket)
+                continue
+            t0 = tel.now()
             x, caches[k] = _quiet(self._decode_fns[k], self.stage_params[k],
                                   x, caches[k], bucket)
+            t1 = tel.now()
+            jax.block_until_ready(x)
+            t2 = tel.now()
+            tel.record_decode(k, t2 - t0)
+            if k < self.n_stages - 1:
+                # boundary materialization time stands in for the wire hop
+                tel.record_transfer(k, self._payload_bytes(x), t2 - t1)
         toks, logits = x
         return toks, logits, caches
+
+    @staticmethod
+    def _payload_bytes(x) -> float:
+        return float(sum(a.size * a.dtype.itemsize
+                         for a in jax.tree.leaves(x)))
 
     # scheduler-facing alias: same signature as ServeEngine._decode_quiet
     def _decode_quiet(self, toks, caches, bucket):
@@ -289,7 +356,7 @@ class PipelineServeEngine:
 
     # -- synchronized-batch generation with deterministic fault injection ---
 
-    def generate(self, batch, gen_len: int, *, kill=None):
+    def generate(self, batch, gen_len: int, *, kill=None, replan=None):
         """Greedy-decode a synchronized batch for ``gen_len`` tokens
         through the stage pipeline; np tokens (B, gen_len) int32.
 
@@ -297,10 +364,20 @@ class PipelineServeEngine:
         killed after ``s`` completed decode steps (0 = right after
         prefill); the engine restores it onto a spare and replays the
         in-flight batch before continuing, so the stream is identical to
-        an undisturbed run."""
+        an undisturbed run.
+
+        replan: optional ``{"after_step": s, "cluster": state, ...}`` —
+        after ``s`` completed decode steps, run ``replan_live`` against
+        ``state`` (a ClusterState or ClusterGraph; optional keys
+        ``max_moves``, ``min_gain_s``); if the plan changed, the in-flight
+        batch is replayed across the migrated placement, so the stream is
+        identical to an undisturbed run."""
         tokens = batch["tokens"]
         b, prompt_len = tokens.shape
         self._check_fit(prompt_len, gen_len)
+        if self.down:                      # e.g. stage killed between calls
+            for k in sorted(self.down):
+                self.restore_stage(k)
         caches = self._fresh_caches(b, batch)
         toks, _, caches = self._chain_prefill(batch, caches)
         outs = [toks]
@@ -309,21 +386,27 @@ class PipelineServeEngine:
             if kill is not None and kill["after_step"] == step:
                 self.kill_stage(kill["stage"])
             if self.down:
-                toks, caches = self._recover_sync(batch, step, caches)
+                for k in sorted(self.down):
+                    self.restore_stage(k)
+                toks, caches = self._replay_sync(batch, step)
+            if replan is not None and replan["after_step"] == step:
+                res = self.replan_live(
+                    replan["cluster"],
+                    max_moves=replan.get("max_moves", 1),
+                    min_gain_s=replan.get("min_gain_s", 0.0))
+                if res.changed:
+                    toks, caches = self._replay_sync(batch, step)
             toks, _, caches = self._chain_decode(toks, caches,
                                                  self.bucket_for(cur + 1))
             cur += 1
             outs.append(toks)
         return np.asarray(jnp.concatenate(outs, axis=1)).astype(np.int32)
 
-    def _recover_sync(self, batch, steps_done, caches):
-        """Restore every dead stage, then replay the in-flight batch:
-        fresh caches, prefill, and the ``steps_done`` decode steps already
+    def _replay_sync(self, batch, steps_done):
+        """Replay the in-flight batch after a restore or migration: fresh
+        caches, prefill, and the ``steps_done`` decode steps already
         emitted (greedy decoding is deterministic, so the replay
         reconstructs the lost stage state bit-exactly)."""
-        del caches                                # lost with the dead stage
-        for k in sorted(self.down):
-            self.restore_stage(k)
         b, prompt_len = batch["tokens"].shape
         caches = self._fresh_caches(b, batch)
         toks, _, caches = self._chain_prefill(batch, caches)
@@ -339,7 +422,9 @@ class PipelineServeEngine:
     # -- fault injection / recovery ----------------------------------------
 
     def _note(self, msg: str):
-        self.events.append((time.perf_counter() - self._t0, msg))
+        # event-log timestamps are diagnostics, never token-affecting
+        t = time.perf_counter() - self._t0  # repro: ignore[determinism]
+        self.events.append((t, msg))
 
     def kill_stage(self, k: int) -> None:
         """Kill stage ``k``'s executor: params and caches are lost, exactly
@@ -349,32 +434,139 @@ class PipelineServeEngine:
         self.stage_params[k] = None
         self._note(f"node {self.node_of_stage[k]} FAILED (stage {k})")
 
-    def restore_stage(self, k: int, node: int | None = None) -> None:
-        """Restore stage ``k``'s param subtree from its checkpoint onto a
-        spare node (emulator reschedule semantics: best spare by bandwidth
-        to the pipeline neighbours when a cluster is known)."""
-        if k not in self.down:
-            return
+    def _acquire_spare(self, k: int, node: int | None = None) -> int:
+        """Pick the spare node stage ``k`` would restore/migrate onto,
+        without removing it from the pool (callers commit only after the
+        checkpoint read also succeeded).  Raises StageDown when the pool
+        is empty (retryable: a concurrent restore may return a node) and
+        ValueError for an explicit non-spare node (a bug, not a blip)."""
         if node is None:
             if not self.spares:
-                self._note(f"stage {k}: NO SPARE NODE — pipeline stalled")
                 raise StageDown(f"stage {k}: no spare node to restore onto")
-            node = (max(self.spares, key=lambda n: self._spare_score(k, n))
+            return (max(self.spares, key=lambda n: self._spare_score(k, n))
                     if self.cluster is not None else self.spares[0])
-        elif node not in self.spares:
+        if node not in self.spares:
             raise ValueError(
                 f"stage {k}: node {node} is not in the spare pool "
                 f"{self.spares} (stages restore onto spares, as in the "
                 "emulator's reschedule)")
-        self.spares.remove(node)
+        return node
+
+    def _restore_params(self, k: int):
+        """Checkpoint read under bounded retry; host tree (not yet on
+        device)."""
+        return retry_call(
+            lambda: restore_checkpoint(self.ckpt_dir / f"stage_{k}", 0,
+                                       self._templates[k]),
+            what=f"stage {k}: checkpoint restore", policy=self.retry,
+            retry_on=(OSError, ValueError, KeyError))
+
+    def restore_stage(self, k: int, node: int | None = None) -> None:
+        """Restore stage ``k``'s param subtree from its checkpoint onto a
+        spare node (emulator reschedule semantics: best spare by bandwidth
+        to the pipeline neighbours when a cluster is known).
+
+        Spare acquisition and the checkpoint read each run under the
+        engine's bounded retry/backoff policy; on exhaustion the stage
+        stays down and the spare pool untouched (the call is retryable
+        later), and :class:`RestoreExhausted` carries the per-attempt
+        failure history."""
+        if k not in self.down:
+            return
+        try:
+            target = retry_call(lambda: self._acquire_spare(k, node),
+                                what=f"stage {k}: spare acquisition",
+                                policy=self.retry, retry_on=(StageDown,))
+        except RetryExhausted as e:
+            self._note(f"stage {k}: NO SPARE NODE — pipeline stalled")
+            raise RestoreExhausted(str(e), e.attempts) from e
+        try:
+            restored = self._restore_params(k)
+        except RetryExhausted as e:
+            self._note(f"stage {k}: checkpoint restore FAILED "
+                       f"({len(e.attempts)} attempt(s)) — still down")
+            raise RestoreExhausted(str(e), e.attempts) from e
+        self.spares.remove(target)
         old = self.node_of_stage[k]
-        self.node_of_stage[k] = node
-        restored = restore_checkpoint(self.ckpt_dir / f"stage_{k}", 0,
-                                      self._templates[k])
+        self.node_of_stage[k] = target
         self.stage_params[k] = jax.tree.map(jnp.asarray, restored)
         self.down.discard(k)
-        self._note(f"stage {k}: pod rescheduled {old} -> {node} "
+        self._note(f"stage {k}: pod rescheduled {old} -> {target} "
                    "(params restored from checkpoint)")
+
+    def migrate_stage(self, k: int, node: int | None = None) -> int:
+        """Move a *live* stage onto a spare node (planned migration, the
+        executor half of ``replan_live``).
+
+        The new executor is stood up first — spare acquisition and
+        checkpoint read under bounded retry — and only then does the stage
+        switch nodes; the vacated (healthy) node rejoins the spare pool.
+        On retry exhaustion the stage keeps serving where it is and
+        :class:`StageDegraded` is raised (degraded placement, no outage).
+        Stage caches stay with the old executor, so callers must replay
+        in-flight work (same deterministic mechanism as after a kill).
+        Returns the new node id."""
+        self._require_up(k)
+        try:
+            target = self._acquire_spare(k, node)
+            restored = self._restore_params(k)
+        except (StageDown, RetryExhausted) as e:
+            attempts = getattr(e, "attempts", ())
+            self._note(f"stage {k}: migration ABANDONED ({e}) — "
+                       f"serving degraded on node {self.node_of_stage[k]}")
+            raise StageDegraded(
+                f"stage {k}: migration failed, still on node "
+                f"{self.node_of_stage[k]}: {e}", attempts) from e
+        self.spares.remove(target)
+        old = self.node_of_stage[k]
+        self.node_of_stage[k] = target
+        self.stage_params[k] = jax.tree.map(jnp.asarray, restored)
+        self.spares.append(old)            # vacated node is healthy
+        self._note(f"stage {k}: MIGRATED {old} -> {target} "
+                   "(params restored from checkpoint, "
+                   f"node {old} returned to spare pool)")
+        return target
+
+    # -- closed-loop replanning ---------------------------------------------
+
+    def current_plan(self):
+        """The plan as currently deployed: original IR with the live node
+        assignment and spare pool substituted in."""
+        stages = [dataclasses.replace(s, node=self.node_of_stage[i])
+                  for i, s in enumerate(self.plan.stages)]
+        return dataclasses.replace(self.plan, stages=tuple(stages),
+                                   spare_nodes=tuple(self.spares))
+
+    def replan_live(self, state, *, max_moves: int = 1,
+                    min_gain_s: float = 0.0):
+        """Close the telemetry -> replan -> migrate loop once.
+
+        ``state``: a :class:`~repro.serve.telemetry.ClusterState` (folds
+        this engine's pending telemetry samples first) or a plain
+        ClusterGraph.  Runs the bounded ``incremental_replan`` against the
+        estimate and executes the resulting stage moves via
+        ``migrate_stage``; a move that fails (:class:`StageDegraded`) is
+        skipped, the rest still execute.  Returns the ReplanResult with
+        ``moves`` trimmed to the moves actually executed.  Callers must
+        replay in-flight work when ``result.changed``."""
+        from repro.core.replan import incremental_replan
+        if self.telemetry is not None and hasattr(state, "fold"):
+            state.fold(self.telemetry, self.node_of_stage,
+                       self.plan.dispatcher_node)
+        est = state.as_cluster() if hasattr(state, "as_cluster") else state
+        res = incremental_replan(self.current_plan(), est,
+                                 max_moves=max_moves, min_gain_s=min_gain_s)
+        moved = []
+        for mv in res.moves:
+            try:
+                self.migrate_stage(mv.stage, mv.new_node)
+            except StageDegraded:
+                continue
+            moved.append(mv)
+        self._note(f"replan: {len(moved)}/{len(res.moves)} move(s) "
+                   f"executed (bottleneck {res.bottleneck_before_s:.3g}s "
+                   f"-> {res.bottleneck_after_s:.3g}s est.)")
+        return dataclasses.replace(res, moves=tuple(moved))
 
     def _spare_score(self, k: int, n: int) -> float:
         """The emulator's reschedule score: bandwidth to the neighbours."""
@@ -435,9 +627,10 @@ class PipelineServeEngine:
                                                    (slot, 0))
         return tok, caches, slot_tokens
 
-    def recover_and_replay(self, inflight, caches, slot_tokens, proto_batch):
-        """Scheduler-side recovery: restore dead stages, re-create their
-        cache banks, and replay every in-flight request into its slot.
+    def _replay_into_banks(self, stages, inflight, caches, slot_tokens,
+                           proto_batch):
+        """Re-create the cache banks of ``stages`` (whose executors just
+        changed nodes) and replay every in-flight request into its slot.
 
         inflight: list of (slot, Request, n_emitted).  Each request is
         replayed in isolation (prefill + its emitted decode steps on
@@ -445,10 +638,7 @@ class PipelineServeEngine:
         the batched history) and the resulting per-stage state is scattered
         back into the banks."""
         slots = slot_tokens.shape[0]
-        dead = sorted(self.down)
-        for k in dead:
-            self.restore_stage(k)
-        for k in dead:
+        for k in stages:
             caches[k] = staging.init_stage_cache(
                 self.cfg, *self.ranges[k], slots, self.max_len,
                 batch=proto_batch)
@@ -469,16 +659,41 @@ class PipelineServeEngine:
                                                      np.int32(slot))
             slot_tokens = jax.lax.dynamic_update_slice(slot_tokens, toks,
                                                        (slot, 0))
+        return caches, slot_tokens
+
+    def recover_and_replay(self, inflight, caches, slot_tokens, proto_batch):
+        """Scheduler-side recovery: restore dead stages, re-create their
+        cache banks, and replay every in-flight request into its slot
+        (see ``_replay_into_banks``)."""
+        dead = sorted(self.down)
+        for k in dead:
+            self.restore_stage(k)
+        caches, slot_tokens = self._replay_into_banks(
+            dead, inflight, caches, slot_tokens, proto_batch)
         self._note(f"replayed {len(inflight)} in-flight request(s) after "
                    f"restoring stage(s) {dead}")
+        return caches, slot_tokens
+
+    def migrate_and_replay(self, stages, inflight, caches, slot_tokens,
+                           proto_batch):
+        """Scheduler-side counterpart of a live migration: the moved
+        stages' banks live on the vacated executors, so they are re-created
+        on the new nodes and every in-flight request is replayed into its
+        slot (see ``_replay_into_banks``)."""
+        stages = sorted(stages)
+        caches, slot_tokens = self._replay_into_banks(
+            stages, inflight, caches, slot_tokens, proto_batch)
+        self._note(f"replayed {len(inflight)} in-flight request(s) after "
+                   f"migrating stage(s) {stages}")
         return caches, slot_tokens
 
     # -- timing helpers (serve_bench) ---------------------------------------
 
     def warmup(self, batch, gen_len: int) -> float:
-        t0 = time.perf_counter()
+        # benchmark wall time: measured, never token-affecting
+        t0 = time.perf_counter()  # repro: ignore[determinism]
         self.generate(batch, gen_len)
-        return time.perf_counter() - t0
+        return time.perf_counter() - t0  # repro: ignore[determinism]
 
     def timed_decode(self, batch, steps: int) -> float:
         """Steady-state pipelined decode seconds for ``steps`` tokens
@@ -489,10 +704,11 @@ class PipelineServeEngine:
         toks, _, caches = self._chain_prefill(batch, caches)
         jax.block_until_ready(toks)
         cur = prompt_len
-        t0 = time.perf_counter()
+        # benchmark wall time: measured, never token-affecting
+        t0 = time.perf_counter()  # repro: ignore[determinism]
         for _ in range(steps):
             toks, _, caches = self._chain_decode(toks, caches,
                                                  self.bucket_for(cur + 1))
             cur += 1
         jax.block_until_ready(toks)
-        return time.perf_counter() - t0
+        return time.perf_counter() - t0  # repro: ignore[determinism]

@@ -1,0 +1,75 @@
+"""Bounded retry with exponential backoff for fault-path side effects.
+
+Checkpoint reads and spare acquisition during stage replacement are I/O
+against shared infrastructure (the NFS-analogue checkpoint store, the
+cluster's spare pool) and can fail transiently; a single-shot attempt
+turns a blip into a dead pipeline.  :func:`retry_call` bounds the retries
+and the total backoff, and on exhaustion raises :class:`RetryExhausted`
+carrying the full attempt history — the caller converts that into its own
+typed error (``RestoreExhausted`` in ``repro.serve.pipeline``) so
+operators see *every* underlying failure, not just the last one.
+
+``sleep`` is injectable so tests (and deterministic replays) never block.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """attempts total tries; delay before retry i is
+    ``min(base_delay_s * backoff**i, max_delay_s)``."""
+    attempts: int = 3
+    base_delay_s: float = 0.05
+    max_delay_s: float = 2.0
+    backoff: float = 2.0
+
+    def delay_s(self, attempt: int) -> float:
+        return min(self.base_delay_s * self.backoff ** attempt,
+                   self.max_delay_s)
+
+
+@dataclass(frozen=True)
+class Attempt:
+    """One failed try: the error it died with and the backoff that
+    followed it (0.0 after the final try)."""
+    index: int
+    error: str
+    delay_s: float
+
+
+class RetryExhausted(RuntimeError):
+    """Every attempt failed; ``attempts`` is the full failure history."""
+
+    def __init__(self, what: str, attempts):
+        self.what = what
+        self.attempts = tuple(attempts)
+        last = self.attempts[-1].error if self.attempts else "?"
+        super().__init__(
+            f"{what}: {len(self.attempts)} attempt(s) failed; last: {last}")
+
+
+def retry_call(fn, *, what: str, policy: RetryPolicy | None = None,
+               retry_on=(Exception,), sleep=time.sleep):
+    """Call ``fn()`` under ``policy``; return its value on first success.
+
+    Exceptions not in ``retry_on`` propagate immediately (they are bugs,
+    not blips).  On exhaustion raises :class:`RetryExhausted` with the
+    per-attempt history chained to the final underlying error."""
+    policy = policy or RetryPolicy()
+    history: list[Attempt] = []
+    err: BaseException | None = None
+    for i in range(policy.attempts):
+        try:
+            return fn()
+        except retry_on as e:                    # noqa: PERF203
+            err = e
+            last = i + 1 >= policy.attempts
+            d = 0.0 if last else policy.delay_s(i)
+            history.append(Attempt(i, f"{type(e).__name__}: {e}", d))
+            if not last:
+                sleep(d)
+    raise RetryExhausted(what, history) from err

@@ -124,7 +124,7 @@ class SlotScheduler:
         return leaf_batch_axes(shapes)
 
     def run(self, requests: list[Request], engine: str = "fast",
-            kill: dict | None = None):
+            kill: dict | None = None, replan: dict | None = None):
         """Serve `requests` to completion; returns (streams, stats) with
         streams[i] the i-th request's np int32 greedy tokens (gen_len,).
 
@@ -133,7 +133,17 @@ class SlotScheduler:
         after the ``s``-th batched decode step, then restored from its
         checkpoint onto a spare node with every in-flight request replayed
         into its slot (see ``PipelineServeEngine.recover_and_replay``).
-        The streams stay identical to an undisturbed run."""
+        The streams stay identical to an undisturbed run.
+
+        replan: optional ``{"after_step": s, "cluster": state, ...}`` —
+        only meaningful for a ``PipelineServeEngine``: after the ``s``-th
+        batched decode step, ``replan_live`` runs against ``state`` (a
+        ClusterState or ClusterGraph; optional ``max_moves`` /
+        ``min_gain_s``), executes the bounded plan diff as live
+        migrations, and replays every in-flight request into its slot
+        (``migrate_and_replay``).  Streams stay identical to an
+        undisturbed run — the ``-replan`` cells of the serve equivalence
+        fixture pin this."""
         if not requests:
             return [], {"wall_s": 0.0, "decode_steps": 0,
                         "slot_utilization": 0.0}
@@ -143,7 +153,8 @@ class SlotScheduler:
         if engine == "reference":
             # per-request isolation: the oracle the slot path must match
             streams = []
-            t0 = time.perf_counter()
+            # wall_s is a reported stat, never schedule-affecting
+            t0 = time.perf_counter()  # repro: ignore[determinism]
             for r in requests:
                 batch = {"tokens": jnp.asarray(r.tokens),
                          **{k: jnp.asarray(v)
@@ -151,7 +162,8 @@ class SlotScheduler:
                 toks = self.engine.generate(batch, r.gen_len,
                                             engine="reference")
                 streams.append(toks[0])
-            stats = {"wall_s": time.perf_counter() - t0, "decode_steps": 0,
+            wall = time.perf_counter() - t0  # repro: ignore[determinism]
+            stats = {"wall_s": wall, "decode_steps": 0,
                      "slot_utilization": 1.0}
             return streams, stats
 
@@ -170,8 +182,10 @@ class SlotScheduler:
                 self._batch_axes = self._leaf_batch_axes(proto_extras)
             cache = init_serve_cache(cfg, B, eng.max_len, batch=proto_batch)
         slot_tokens = jnp.zeros((B, 1), jnp.int32)
+        tel = getattr(eng, "telemetry", None)
 
-        t0 = time.perf_counter()
+        # wall_s is a reported stat, never schedule-affecting
+        t0 = time.perf_counter()  # repro: ignore[determinism]
         next_idx = 0
         active: dict[int, list] = {}          # slot -> [request, n_emitted]
         free = list(range(B))
@@ -181,7 +195,7 @@ class SlotScheduler:
         step_maps: list[dict[int, int]] = []  # per-step slot -> rid
         n_steps = busy = 0
 
-        killed = False
+        killed = replanned = False
         while next_idx < len(requests) or active:
             while free and next_idx < len(requests):
                 r = requests[next_idx]
@@ -216,8 +230,26 @@ class SlotScheduler:
                             for s, st in sorted(active.items())]
                 cache, slot_tokens = eng.recover_and_replay(
                     inflight, cache, slot_tokens, proto_batch)
+            if (replan is not None and pipeline and not replanned
+                    and n_steps >= replan["after_step"]):
+                # telemetry-driven live replan: execute the bounded plan
+                # diff as migrations, then replay every in-flight request
+                # into its slot on the moved stages' fresh banks
+                replanned = True
+                res = eng.replan_live(
+                    replan["cluster"],
+                    max_moves=replan.get("max_moves", 1),
+                    min_gain_s=replan.get("min_gain_s", 0.0))
+                if res.changed:
+                    inflight = [(s, st[0], st[1])
+                                for s, st in sorted(active.items())]
+                    cache, slot_tokens = eng.migrate_and_replay(
+                        [mv.stage for mv in res.moves], inflight, cache,
+                        slot_tokens, proto_batch)
             if not active:
                 continue
+            if tel is not None:
+                tel.record_queue_depth(len(active))
             bucket = eng.bucket_for(
                 int(max(slot_len[s] for s in active)) + 1)
             slot_tokens, _, cache = eng._decode_quiet(slot_tokens, cache,
@@ -242,7 +274,8 @@ class SlotScheduler:
         for i, m in enumerate(step_maps):
             for slot, rid in m.items():
                 streams[rid].append(int(stacked[slot, i]))
-        stats = {"wall_s": time.perf_counter() - t0,
+        wall = time.perf_counter() - t0  # repro: ignore[determinism]
+        stats = {"wall_s": wall,
                  "decode_steps": n_steps,
                  "slot_utilization": busy / max(1, n_steps * B)}
         return [np.asarray(streams[r.rid], np.int32) for r in requests], stats

@@ -1,0 +1,178 @@
+"""Per-stage serving telemetry: ring-buffer streams + EWMA cluster state.
+
+Two pieces close the elastic-serving control loop
+(telemetry -> ``repro.core.replan`` -> live migration):
+
+* :class:`TelemetryStream` — fixed-capacity ring buffers of per-stage
+  decode latency, boundary-transfer (bytes, seconds) and scheduler queue
+  depth, emitted by ``PipelineServeEngine`` / ``SlotScheduler``.  The
+  clock is **injected** (default ``time.perf_counter``, passed as a
+  reference and only ever called through ``self._clock``): pinned token
+  paths never read the wall clock themselves, which is what lets the
+  widened ``determinism`` lint scope cover ``repro/serve/`` — and what
+  makes telemetry-triggered migration reproducible under a fake clock in
+  tests and fixture cells.
+
+* :class:`ClusterState` — an EWMA, outlier-clipped estimate of the
+  cluster's bandwidth / compute-scale, updated from telemetry samples
+  (``fold``) or direct observations.  ``as_cluster()`` materializes a
+  ``ClusterGraph`` for ``incremental_replan``.
+
+Samples are plain floats on the host; recording never touches device
+values beyond what the engine already synchronized, so enabling telemetry
+cannot change a token stream (the serving token-identity contract).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+class Ring:
+    """Fixed-capacity float ring buffer (O(1) append, no realloc)."""
+
+    def __init__(self, capacity: int):
+        self._buf = np.zeros(int(capacity))
+        self._n = 0                      # total appends ever
+
+    def append(self, x: float) -> None:
+        self._buf[self._n % self._buf.size] = x
+        self._n += 1
+
+    def __len__(self) -> int:
+        return min(self._n, self._buf.size)
+
+    @property
+    def total(self) -> int:
+        return self._n
+
+    def values(self) -> np.ndarray:
+        """Retained samples, oldest first."""
+        n = len(self)
+        if self._n <= self._buf.size:
+            return self._buf[:n].copy()
+        cut = self._n % self._buf.size
+        return np.concatenate([self._buf[cut:], self._buf[:cut]])
+
+    def mean(self) -> float:
+        return float(self.values().mean()) if len(self) else float("nan")
+
+
+class TelemetryStream:
+    """Ring-buffered per-stage serving telemetry with an injected clock.
+
+    decode_s[k]   : per-stage decode-step latency samples (seconds)
+    transfer_s[k] : stage k -> k+1 boundary transfer seconds
+    transfer_b[k] : matching payload bytes (same sample index)
+    queue_depth   : scheduler active-slot count per decode step
+
+    Transfer samples are additionally kept in a pending list consumed by
+    ``ClusterState.fold`` (each sample folds into exactly one EWMA
+    update); the rings are the rolling diagnostic view.
+    """
+
+    def __init__(self, n_stages: int, capacity: int = 256,
+                 clock=time.perf_counter):
+        self.n_stages = int(n_stages)
+        self._clock = clock
+        self.decode_s = [Ring(capacity) for _ in range(n_stages)]
+        self.transfer_s = [Ring(capacity) for _ in range(n_stages)]
+        self.transfer_b = [Ring(capacity) for _ in range(n_stages)]
+        self.queue_depth = Ring(capacity)
+        self._pending: list[tuple[int, float, float]] = []
+
+    def now(self) -> float:
+        return self._clock()
+
+    def record_decode(self, stage: int, seconds: float) -> None:
+        self.decode_s[stage].append(seconds)
+
+    def record_transfer(self, stage: int, nbytes: float,
+                        seconds: float) -> None:
+        """One boundary handoff leaving ``stage`` (k -> k+1)."""
+        self.transfer_s[stage].append(seconds)
+        self.transfer_b[stage].append(nbytes)
+        self._pending.append((stage, float(nbytes), float(seconds)))
+
+    def record_queue_depth(self, depth: int) -> None:
+        self.queue_depth.append(float(depth))
+
+    def drain_transfers(self) -> list[tuple[int, float, float]]:
+        """Transfer samples since the last drain: [(stage, bytes, s)]."""
+        out, self._pending = self._pending, []
+        return out
+
+    def snapshot(self) -> dict:
+        """Telemetry schema (see ROADMAP "Telemetry & replan contract")."""
+        return {
+            "n_stages": self.n_stages,
+            "decode_s": [r.values().tolist() for r in self.decode_s],
+            "transfer_s": [r.values().tolist() for r in self.transfer_s],
+            "transfer_bytes": [r.values().tolist() for r in self.transfer_b],
+            "queue_depth": self.queue_depth.values().tolist(),
+            "samples_total": int(sum(r.total for r in self.decode_s)),
+        }
+
+
+class ClusterState:
+    """EWMA, outlier-clipped bandwidth / compute-scale estimate.
+
+    Seeded from a ``ClusterGraph``; each observation moves the estimate by
+    ``alpha`` toward the sample, after clipping the sample into
+    ``[est / clip, est * clip]`` so a single pathological measurement (GC
+    pause, cold cache) cannot capsize the estimate.  Symmetric links: one
+    observation updates both directions.
+    """
+
+    def __init__(self, cluster, *, alpha: float = 0.3, clip: float = 4.0):
+        self.base = cluster
+        self.alpha = float(alpha)
+        self.clip = float(clip)
+        self.bw = cluster.bw.astype(np.float64).copy()
+        self.compute_scale = np.asarray(cluster.compute_scale,
+                                        np.float64).copy()
+
+    def _ewma(self, est: float, sample: float) -> float:
+        if est > 0.0:
+            sample = min(max(sample, est / self.clip), est * self.clip)
+        return (1.0 - self.alpha) * est + self.alpha * sample
+
+    def observe_bandwidth(self, a: int, b: int, nbytes: float,
+                          seconds: float) -> None:
+        if seconds <= 0.0 or nbytes <= 0.0:
+            return
+        self.bw[a, b] = self.bw[b, a] = self._ewma(float(self.bw[a, b]),
+                                                   nbytes / seconds)
+
+    def observe_compute(self, node: int, seconds: float,
+                        nominal_s: float) -> None:
+        """``nominal_s``: expected seconds at compute_scale 1.0."""
+        if seconds <= 0.0 or nominal_s <= 0.0:
+            return
+        self.compute_scale[node] = self._ewma(
+            float(self.compute_scale[node]), nominal_s / seconds)
+
+    def fold(self, telemetry: TelemetryStream, node_of_stage,
+             dispatcher_node: int = 0) -> int:
+        """Fold pending transfer samples into link estimates.
+
+        ``node_of_stage[k]`` hosts stage k; a transfer leaving stage k
+        lands on stage k+1's node (the pipeline hop the sample measured).
+        Returns the number of samples folded."""
+        samples = telemetry.drain_transfers()
+        for stage, nbytes, seconds in samples:
+            src = (dispatcher_node if stage < 0 else node_of_stage[stage])
+            if stage + 1 >= len(node_of_stage):
+                continue
+            self.observe_bandwidth(src, node_of_stage[stage + 1], nbytes,
+                                   seconds)
+        return len(samples)
+
+    def as_cluster(self):
+        """Materialize the current estimate as a ``ClusterGraph``."""
+        from repro.core.cluster import ClusterGraph
+        return ClusterGraph(bw=self.bw.copy(), pos=self.base.pos,
+                            labels=self.base.labels,
+                            compute_scale=self.compute_scale.copy())

@@ -1,0 +1,8 @@
+"""Corpus: seeded determinism violations (path carries repro/serve/)."""
+import time
+
+
+def drain_batch(active):
+    t0 = time.perf_counter()
+    for slot in {s for s, _ in active}:
+        yield slot, t0

@@ -1,0 +1,8 @@
+"""Corpus: clean — injected clock reference, sorted iteration."""
+import time
+
+
+def drain_batch(active, clock=time.perf_counter):
+    t0 = clock()
+    for slot in sorted({s for s, _ in active}):
+        yield slot, t0

@@ -53,6 +53,20 @@ def test_rule_catches_seeded_violation(rule):
     assert not clean.findings, f"{rule} false-positived on {good}"
 
 
+def test_determinism_scope_covers_serve_layer():
+    # telemetry feeds replanning (PR 7): repro/serve/ is a pinned path too.
+    # The clean file uses the injected-clock pattern (a default-arg
+    # *reference* to time.perf_counter, called via the local name).
+    bad = analyze_paths(
+        [str(CORPUS / "repro/serve/bad_determinism.py")],
+        rules=["determinism"])
+    assert {f.line for f in bad.findings} == {6, 7}
+    clean = analyze_paths(
+        [str(CORPUS / "repro/serve/good_determinism.py")],
+        rules=["determinism"])
+    assert not clean.findings
+
+
 def test_findings_carry_location_and_sort_stably():
     res = analyze_paths([str(CORPUS / "bad_compat.py")])
     assert res.findings == sorted(res.findings)

@@ -198,3 +198,156 @@ class TestMetricsEstimators:
         e2e = np.linspace(1.0, 2.0, 40)
         m = summarize(np.linspace(10, 20, 40), e2e, [])
         assert m["p95_e2e_s"] == float(np.quantile(e2e, 0.95))
+
+
+# ---------------------------------------------------------------------------
+# overlapping effects (EffectLedger) + chaos fault types (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+from repro.emulator import (CompositeFaultModel, DriftingCluster,  # noqa: E402
+                            EffectLedger, LinkDegrade, NodeSlowdown,
+                            compose_faults, effective_cluster)
+from repro.emulator.engine import simulate  # noqa: E402
+
+
+def _both_engines(faults, n_batches=50, compute_s=(0.2, 0.05), n_nodes=5):
+    cluster = uniform_cluster(n_nodes)
+    cfg = EmulatorConfig()
+    nodes = list(range(len(compute_s) + 1))
+    flops = [s * cfg.node_flops for s in compute_s]
+    args = (cluster, nodes, [OUT] * len(compute_s), flops, cfg)
+    ref = simulate(*args, n_batches=n_batches, duration_s=1e6,
+                   faults=faults, engine="reference")
+    fast = simulate(*args, n_batches=n_batches, duration_s=1e6,
+                    faults=faults, engine="events")
+    return ref, fast
+
+
+class TestOverlappingLinkFaults:
+    """Regression: the second of two overlapping LinkFaults used to save
+    the already-zeroed bandwidth and restore the link to 0.0 forever."""
+
+    def test_overlap_restores_pristine_bandwidth(self):
+        emu = make_emu(5, compute_s=(0.2, 0.05))
+        FaultInjector(emu).schedule([LinkFault(1.0, 1, 2, 5.0),
+                                     LinkFault(2.0, 1, 2, 1.0)])
+        m = emu.run(50, 1e6)
+        assert m["completed"] == 50, \
+            "pipeline never recovered from overlapping link faults"
+        assert emu.cluster.bw[1, 2] == BW
+        assert emu.cluster.bw[2, 1] == BW
+
+    def test_overlap_identical_in_both_engines(self):
+        ref, fast = _both_engines([LinkFault(1.0, 1, 2, 5.0),
+                                   LinkFault(2.0, 1, 2, 1.0)])
+        assert ref["completed"] == fast["completed"] == 50
+        assert ref["mean_e2e_s"] == fast["mean_e2e_s"]
+        assert ref["events"] == fast["events"]
+
+    def test_ledger_refcounts_per_key(self):
+        led = EffectLedger()
+        assert led.push("k", 10.0, 1, 0.5) == 5.0
+        assert led.push("k", 5.0, 2, 0.0) == 0.0   # stale pristine ignored
+        assert led.pop("k", 2) == 5.0
+        assert led.pop("k", 1) == 10.0             # pristine, key forgotten
+        assert led.push("k", 7.0, 3, 0.5) == 3.5   # fresh capture
+
+
+class TestChaosFaultTypes:
+    def test_degrade_slows_then_clears(self):
+        emu = make_emu(5, compute_s=(0.2, 0.05))
+        FaultInjector(emu).schedule([LinkDegrade(1.0, 0, 1, 0.25, 5.0)])
+        m = emu.run(50, 1e6)
+        assert m["completed"] == 50
+        msgs = [msg for _, msg in m["events"]]
+        assert "link (0,1) degraded x0.25" in msgs
+        assert "link (0,1) drift cleared" in msgs
+        assert emu.cluster.bw[0, 1] == BW
+
+    def test_slowdown_scales_compute_and_clears(self):
+        emu = make_emu(5, compute_s=(0.5, 0.05))
+        FaultInjector(emu).schedule([NodeSlowdown(1.0, 1, 0.5, 20.0)])
+        m = emu.run(10, 1e6)
+        assert m["completed"] == 10
+        msgs = [msg for _, msg in m["events"]]
+        assert "node 1 slowdown x0.5" in msgs
+        assert "node 1 slowdown cleared" in msgs
+        assert emu.cluster.compute_scale[1] == 1.0
+        # batches started under the slowdown pay 2x stage-1 compute
+        slow = make_emu(5, compute_s=(0.5, 0.05))
+        FaultInjector(slow).schedule([NodeSlowdown(0.0, 1, 0.5, 1e5)])
+        assert slow.run(10, 1e6)["mean_e2e_s"] > m["mean_e2e_s"]
+
+    def test_degrade_and_slowdown_identical_in_both_engines(self):
+        faults = compose_faults(
+            [LinkDegrade(1.0, 1, 2, 0.5, None),
+             LinkDegrade(3.0, 1, 2, 0.5, 4.0)],
+            [NodeSlowdown(2.0, 2, 0.5, 6.0)])
+        ref, fast = _both_engines(faults)
+        assert ref["completed"] == fast["completed"] == 50
+        assert ref["mean_e2e_s"] == fast["mean_e2e_s"]
+        assert ref["p95_e2e_s"] == fast["p95_e2e_s"]
+        assert ref["throughput_hz"] == fast["throughput_hz"]
+        assert ref["events"] == fast["events"]
+
+    def test_drifting_cluster_identical_in_both_engines(self):
+        drift = DriftingCluster(decay_hops=2, decay_factor=0.6,
+                                decay_steps=3, decay_every_s=4.0, jitter=0.2,
+                                slow_nodes=1, slowdown_factor=0.5,
+                                flap_hops=1, flap_count=2)
+        for seed in (0, 1, 2):
+            faults = drift.draw(seed, [0, 1, 2])
+            ref, fast = _both_engines(faults)
+            assert ref["mean_e2e_s"] == fast["mean_e2e_s"], seed
+            assert ref["events"] == fast["events"], seed
+
+
+class TestFaultModels:
+    def test_drifting_cluster_draw_is_deterministic(self):
+        drift = DriftingCluster(decay_hops=1, jitter=0.3, slow_nodes=1,
+                                flap_hops=1)
+        nodes = [0, 1, 2, 3]
+        assert drift.draw(7, nodes) == drift.draw(7, nodes)
+        assert drift.draw(7, nodes) != drift.draw(8, nodes)
+
+    def test_draw_is_time_sorted(self):
+        drift = DriftingCluster(decay_hops=2, decay_steps=3, slow_nodes=2,
+                                flap_hops=1)
+        sched = drift.draw(0, [0, 1, 2, 3])
+        times = [f.time_s for f in sched]
+        assert times == sorted(times)
+
+    def test_composite_model_merges_streams(self):
+        a = DriftingCluster(decay_hops=1, stream=2)
+        b = DriftingCluster(decay_hops=1, stream=3)
+        comp = CompositeFaultModel((a, b))
+        sched = comp.draw(0, [0, 1, 2])
+        assert len(sched) == len(a.draw(0, [0, 1, 2])) + \
+            len(b.draw(0, [0, 1, 2]))
+        assert a.draw(0, [0, 1, 2]) != b.draw(0, [0, 1, 2])
+
+
+class TestEffectiveCluster:
+    def test_oracle_replays_effects_up_to_t(self):
+        cluster = uniform_cluster(4)
+        sched = [LinkDegrade(5.0, 0, 1, 0.5, None),
+                 LinkDegrade(8.0, 0, 1, 0.5, 4.0),
+                 NodeSlowdown(6.0, 2, 0.25, None),
+                 LinkFault(9.0, 1, 2, 2.0)]
+        assert effective_cluster(cluster, sched, 0.0).bw[0, 1] == BW
+        at7 = effective_cluster(cluster, sched, 7.0)
+        assert at7.bw[0, 1] == BW * 0.5
+        assert at7.compute_scale[2] == 0.25
+        at9 = effective_cluster(cluster, sched, 9.0)
+        assert at9.bw[0, 1] == BW * 0.25
+        assert at9.bw[1, 2] == 0.0                 # flapped down
+        at20 = effective_cluster(cluster, sched, 20.0)
+        assert at20.bw[0, 1] == BW * 0.5           # timed degrade cleared
+        assert at20.bw[1, 2] == BW                 # flap restored
+        assert cluster.bw[0, 1] == BW              # input never mutated
+
+    def test_dead_node_zeroed(self):
+        cluster = uniform_cluster(4)
+        eff = effective_cluster(cluster, [NodeFault(1.0, 2)], 5.0)
+        assert eff.bw[2, :].sum() == 0.0 and eff.bw[:, 2].sum() == 0.0
+        assert eff.compute_scale[2] == 0.0

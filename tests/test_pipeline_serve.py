@@ -250,3 +250,174 @@ def test_describe_reports_per_stage_latencies():
     text = plan.describe()
     assert "transfer" in text and "compute" in text
     assert "bottleneck" in text
+
+
+# ---------------------------------------------------------------------------
+# bounded-retry restore, live migration, telemetry-triggered replan (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+from repro.serve import (ClusterState, RestoreExhausted,  # noqa: E402
+                         RetryPolicy, StageDegraded, TelemetryStream)
+
+FAST_RETRY = RetryPolicy(attempts=3, base_delay_s=0.0)
+
+
+def test_stage0_killed_after_prefill_is_replayed(tmp_path):
+    cfg, eng = _dense_engine(tmp_path)
+    batch = make_batch(cfg, 1, 8, 3)
+    clean = eng.generate(batch, 6)
+    toks = eng.generate(batch, 6, kill={"after_step": 0, "stage": 0})
+    np.testing.assert_array_equal(clean, toks)
+    assert any("rescheduled" in m for _, m in eng.events)
+
+
+def test_stage0_killed_before_prefill_is_auto_restored(tmp_path):
+    cfg, eng = _dense_engine(tmp_path)
+    batch = make_batch(cfg, 1, 8, 3)
+    clean = eng.generate(batch, 6)
+    eng.kill_stage(0)                      # dies between generate calls
+    toks = eng.generate(batch, 6)          # restored before prefill
+    np.testing.assert_array_equal(clean, toks)
+    assert not eng.down
+    assert any("rescheduled" in m for _, m in eng.events)
+
+
+def test_double_kill_before_restore_raises_stage_down(tmp_path):
+    cfg, eng = _dense_engine(tmp_path, spares=(90, 91))
+    eng.kill_stage(0)
+    with pytest.raises(StageDown):
+        eng.kill_stage(0)
+    eng.kill_stage(1)                      # a second *stage* can still die
+    assert eng.down == {0, 1}
+    batch = make_batch(cfg, 1, 8, 3)
+    toks = eng.generate(batch, 4)          # both restored before prefill
+    assert toks.shape == (1, 4) and not eng.down
+
+
+def test_empty_spare_pool_exhausts_with_history(tmp_path):
+    cfg = get_config("granite-3-2b", "smoke").replace(n_layers=4)
+    params = init_params(cfg, KEY)
+    plan = from_block_cuts(cfg, [2], spare_nodes=())
+    eng = PipelineServeEngine(cfg, params, plan, max_len=32, kv_block=16,
+                              ckpt_dir=tmp_path / "c", retry=FAST_RETRY)
+    eng.kill_stage(1)
+    with pytest.raises(RestoreExhausted) as ei:
+        eng.restore_stage(1)
+    assert isinstance(ei.value, StageDown)          # stays catchable as before
+    assert len(ei.value.attempts) == 3              # full per-attempt history
+    assert all("no spare node" in a.error for a in ei.value.attempts)
+    assert any("NO SPARE NODE" in m for _, m in eng.events)
+    assert 1 in eng.down                            # still down, retryable
+
+
+def test_checkpoint_read_retries_then_exhausts(tmp_path, monkeypatch):
+    cfg, eng = _dense_engine(tmp_path)
+    eng.retry = FAST_RETRY
+    eng.kill_stage(1)
+    calls = []
+
+    def flaky(*a, **kw):
+        calls.append(1)
+        raise OSError("nfs: stale file handle")
+
+    import repro.serve.pipeline as pl
+    monkeypatch.setattr(pl, "restore_checkpoint", flaky)
+    with pytest.raises(RestoreExhausted) as ei:
+        eng.restore_stage(1)
+    assert len(calls) == 3 and len(ei.value.attempts) == 3
+    assert "stale file handle" in ei.value.attempts[-1].error
+    assert 1 in eng.down and eng.spares == [90]     # nothing consumed
+    monkeypatch.undo()
+    eng.restore_stage(1)                            # retryable: now succeeds
+    assert not eng.down and eng.node_of_stage[1] == 90
+
+
+def test_checkpoint_blip_recovers_within_retry_budget(tmp_path, monkeypatch):
+    cfg, eng = _dense_engine(tmp_path)
+    eng.retry = FAST_RETRY
+    eng.kill_stage(1)
+    import repro.serve.pipeline as pl
+    real, fails = pl.restore_checkpoint, [2]
+
+    def blips(*a, **kw):
+        if fails[0] > 0:
+            fails[0] -= 1
+            raise OSError("nfs timeout")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(pl, "restore_checkpoint", blips)
+    eng.restore_stage(1)                            # 2 blips < 3 attempts
+    assert not eng.down
+    batch = make_batch(cfg, 1, 8, 3)
+    assert eng.generate(batch, 4).shape == (1, 4)
+
+
+def test_migrate_stage_keeps_tokens_and_recycles_node(tmp_path):
+    cfg, eng = _dense_engine(tmp_path)
+    batch = make_batch(cfg, 1, 8, 3)
+    clean = eng.generate(batch, 6)
+    new = eng.migrate_stage(1)
+    assert new == 90 and eng.node_of_stage[1] == 90
+    assert eng.spares == [2]                        # vacated node recycled
+    np.testing.assert_array_equal(clean, eng.generate(batch, 6))
+    assert any("MIGRATED" in m for _, m in eng.events)
+
+
+def test_failed_migration_degrades_not_kills(tmp_path, monkeypatch):
+    cfg, eng = _dense_engine(tmp_path)
+    eng.retry = FAST_RETRY
+    batch = make_batch(cfg, 1, 8, 3)
+    clean = eng.generate(batch, 6)
+    import repro.serve.pipeline as pl
+    monkeypatch.setattr(pl, "restore_checkpoint",
+                        lambda *a, **kw: (_ for _ in ()).throw(OSError("x")))
+    with pytest.raises(StageDegraded) as ei:
+        eng.migrate_stage(1)
+    assert len(ei.value.attempts) == 3
+    assert eng.node_of_stage[1] == 2 and eng.spares == [90]
+    assert not eng.down                             # still serving, degraded
+    monkeypatch.undo()
+    np.testing.assert_array_equal(clean, eng.generate(batch, 6))
+
+
+def test_migration_with_no_spare_degrades(tmp_path):
+    cfg, eng = _dense_engine(tmp_path, spares=())
+    with pytest.raises(StageDegraded):
+        eng.migrate_stage(0)
+    assert not eng.down
+
+
+def test_replan_cells_actually_migrate():
+    """The -replan fixture cells must exercise a real telemetry-triggered
+    migration, not a silent no-op (the token pin alone cannot tell)."""
+    from repro.serve.equivalence import (_replan_arg, build_engine,
+                                         build_pipeline_engine, scenarios)
+    scs = {sc["id"]: sc for sc in scenarios()}
+    sc = scs["pipeline/granite-3-2b/cut2-replan"]
+    eng = build_engine(sc)
+    peng = build_pipeline_engine(sc, eng)
+    before = list(peng.node_of_stage)
+    batch = make_batch(eng.cfg, sc["batch"], sc["prompt_len"], sc["seed"])
+    toks = peng.generate(batch, sc["gen_len"], replan=_replan_arg(sc, peng))
+    assert toks.shape == (sc["batch"], sc["gen_len"])
+    assert peng.node_of_stage != before            # a stage really moved
+    assert any("MIGRATED" in m for _, m in peng.events)
+    assert any("replayed" in m for _, m in peng.events)
+    assert peng.telemetry.snapshot()["samples_total"] > 0
+
+
+def test_replan_live_noop_without_pressure(tmp_path):
+    """A healthy uniform cluster estimate yields no moves and no replay."""
+    from repro.core.cluster import ClusterGraph
+    cfg = get_config("granite-3-2b", "smoke").replace(n_layers=4)
+    params = init_params(cfg, KEY)
+    n = 4
+    bw = np.full((n, n), 1e9)
+    np.fill_diagonal(bw, 0.0)
+    cluster = ClusterGraph(bw=bw, compute_scale=np.ones(n))
+    plan = from_block_cuts(cfg, [2], nodes=(0, 1, 2), spare_nodes=(3,),
+                           shape=SHAPES["decode_32k"])
+    eng = PipelineServeEngine(cfg, params, plan, max_len=32, kv_block=16,
+                              ckpt_dir=tmp_path / "c", cluster=cluster)
+    res = eng.replan_live(ClusterState(cluster))
+    assert not res.changed and eng.node_of_stage == [1, 2]

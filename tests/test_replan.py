@@ -1,0 +1,122 @@
+"""Bounded incremental replanning (repro.core.replan) + the static-vs-
+replan emulator sweep (repro.emulator.sweep.compare_replan)."""
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cluster import ClusterGraph
+from repro.core.replan import incremental_replan, stage_costs
+from repro.core.stageplan import from_block_cuts
+from repro.emulator import DriftingCluster, compare_replan
+
+CFG = get_config("granite-3-2b", "smoke").replace(n_layers=4)
+
+
+def _cluster(n, bw_overrides=(), scale_overrides=()):
+    bw = np.full((n, n), 1e6)
+    np.fill_diagonal(bw, 0.0)
+    for a, b, v in bw_overrides:
+        bw[a, b] = bw[b, a] = v
+    scale = np.ones(n)
+    for nd, v in scale_overrides:
+        scale[nd] = v
+    return ClusterGraph(bw=bw, compute_scale=scale)
+
+
+def _plan(cuts=(2,), nodes=(0, 1, 2), spares=(3, 4)):
+    from repro.models.config import SHAPES
+    return from_block_cuts(CFG, list(cuts), nodes=nodes, spare_nodes=spares,
+                           shape=SHAPES["decode_32k"])
+
+
+class TestIncrementalReplan:
+    def test_noop_on_healthy_cluster(self):
+        res = incremental_replan(_plan(), _cluster(5))
+        assert not res.changed and res.moves == ()
+        assert res.plan is incremental_replan(_plan(), _cluster(5)).plan \
+            or res.bottleneck_after_s == res.bottleneck_before_s
+
+    def test_moves_stage_off_degraded_link(self):
+        # hop 1->2 collapsed; spare 3 keeps pristine links
+        cl = _cluster(5, bw_overrides=[(1, 2, 1e3)])
+        res = incremental_replan(_plan(), cl, max_moves=2)
+        assert res.changed
+        assert res.bottleneck_after_s < res.bottleneck_before_s
+        new_nodes = [s.node for s in res.plan.stages]
+        assert new_nodes != [1, 2]
+        # vacated node returned to the spare pool, used spare consumed
+        assert set(new_nodes) | set(res.plan.spare_nodes) == {1, 2, 3, 4}
+
+    def test_diff_bounded_by_max_moves(self):
+        cl = _cluster(5, bw_overrides=[(1, 2, 1e3), (0, 1, 1e3)])
+        for m in (0, 1, 2):
+            res = incremental_replan(_plan(), cl, max_moves=m)
+            assert len(res.moves) <= m
+
+    def test_partition_is_never_touched(self):
+        cl = _cluster(5, bw_overrides=[(1, 2, 1e3)])
+        res = incremental_replan(_plan(), cl, max_moves=2)
+        for old, new in zip(_plan().stages, res.plan.stages):
+            assert new.layers == old.layers
+            assert new.in_bytes == old.in_bytes
+            assert new.compute_flops == old.compute_flops
+
+    def test_deterministic(self):
+        cl = _cluster(6, bw_overrides=[(1, 2, 1e3)],
+                      scale_overrides=[(2, 0.3)])
+        plan = _plan(spares=(3, 4, 5))
+        a = incremental_replan(plan, cl, max_moves=2)
+        b = incremental_replan(plan, cl, max_moves=2)
+        assert a.moves == b.moves
+        assert [s.node for s in a.plan.stages] == \
+            [s.node for s in b.plan.stages]
+
+    def test_min_gain_suppresses_marginal_moves(self):
+        # tiny imbalance: a move would help by far less than min_gain_s
+        cl = _cluster(5, bw_overrides=[(1, 2, 0.999e6)])
+        assert not incremental_replan(_plan(), cl, max_moves=2,
+                                      min_gain_s=1.0).changed
+
+    def test_moves_avoid_occupied_and_dispatcher_nodes(self):
+        cl = _cluster(5, bw_overrides=[(1, 2, 1e3)])
+        res = incremental_replan(
+            dataclasses.replace(_plan(), spare_nodes=(0, 1, 2, 3)), cl,
+            max_moves=2)
+        for mv in res.moves:
+            assert mv.new_node == 3       # only the genuinely free spare
+
+    def test_stage_costs_match_bottleneck(self):
+        cl = _cluster(5, bw_overrides=[(1, 2, 1e3)])
+        plan = _plan()
+        res = incremental_replan(plan, cl)
+        assert max(stage_costs(plan, cl)) == res.bottleneck_before_s
+        assert max(stage_costs(res.plan, cl)) == res.bottleneck_after_s
+
+
+class TestCompareReplan:
+    def test_replan_beats_static_p99_under_drift(self):
+        # 2-stage plan, spares with pristine links, both pipeline hops
+        # decaying hard: replanning every window must beat static p99
+        plan = _plan(spares=(3, 4))
+        cl = _cluster(5)
+        drift = DriftingCluster(decay_hops=2, decay_factor=0.4,
+                                decay_steps=3, decay_every_s=10.0,
+                                start_s=2.0)
+        out = compare_replan(plan, cl, drift=drift, period_s=10.0,
+                             horizon_s=60.0, arrival_rate_hz=3.0,
+                             seeds=(0, 1))
+        assert out["replan"]["completed"] > 0
+        assert out["replan"]["p99_e2e_s"] < out["static"]["p99_e2e_s"]
+        assert out["replan"]["moves"] >= 1
+
+    def test_no_spares_degenerates_to_static(self):
+        plan = _plan(spares=())
+        drift = DriftingCluster(decay_hops=1, decay_factor=0.4,
+                                decay_steps=3, decay_every_s=10.0,
+                                start_s=2.0)
+        out = compare_replan(plan, _cluster(3), drift=drift, period_s=10.0,
+                             horizon_s=40.0, arrival_rate_hz=2.0, seeds=(0,))
+        assert out["replan"]["moves"] == 0
+        assert out["replan"]["p99_e2e_s"] == out["static"]["p99_e2e_s"]

@@ -1,0 +1,107 @@
+"""Serving telemetry: ring buffers, the injected-clock stream, and the
+EWMA/outlier-clipped ClusterState fold (repro.serve.telemetry)."""
+
+import numpy as np
+
+from repro.core.cluster import ClusterGraph
+from repro.serve.telemetry import ClusterState, Ring, TelemetryStream
+
+
+class TestRing:
+    def test_append_and_order(self):
+        r = Ring(4)
+        for x in (1.0, 2.0, 3.0):
+            r.append(x)
+        assert len(r) == 3 and r.total == 3
+        np.testing.assert_array_equal(r.values(), [1.0, 2.0, 3.0])
+
+    def test_wraparound_keeps_newest_oldest_first(self):
+        r = Ring(3)
+        for x in range(6):
+            r.append(float(x))
+        assert len(r) == 3 and r.total == 6
+        np.testing.assert_array_equal(r.values(), [3.0, 4.0, 5.0])
+        assert r.mean() == 4.0
+
+    def test_empty_mean_is_nan(self):
+        assert np.isnan(Ring(2).mean())
+
+
+class TestTelemetryStream:
+    def test_injected_clock_is_the_only_time_source(self):
+        ticks = iter(range(100))
+        tel = TelemetryStream(2, clock=lambda: float(next(ticks)))
+        assert tel.now() == 0.0 and tel.now() == 1.0
+
+    def test_records_and_snapshot_schema(self):
+        tel = TelemetryStream(2, capacity=8, clock=lambda: 0.0)
+        tel.record_decode(0, 0.5)
+        tel.record_decode(1, 0.7)
+        tel.record_transfer(0, 1024.0, 0.1)
+        tel.record_queue_depth(3)
+        snap = tel.snapshot()
+        assert snap["n_stages"] == 2
+        assert snap["decode_s"][0] == [0.5]
+        assert snap["transfer_bytes"][0] == [1024.0]
+        assert snap["queue_depth"] == [3.0]
+        assert snap["samples_total"] == 2
+
+    def test_drain_consumes_pending_once(self):
+        tel = TelemetryStream(2, clock=lambda: 0.0)
+        tel.record_transfer(0, 10.0, 1.0)
+        assert tel.drain_transfers() == [(0, 10.0, 1.0)]
+        assert tel.drain_transfers() == []
+        # the ring keeps the rolling view after the drain
+        assert len(tel.transfer_s[0]) == 1
+
+
+def _cluster(n=4, bw0=100.0):
+    bw = np.full((n, n), bw0)
+    np.fill_diagonal(bw, 0.0)
+    return ClusterGraph(bw=bw, compute_scale=np.ones(n))
+
+
+class TestClusterState:
+    def test_ewma_moves_toward_sample(self):
+        st = ClusterState(_cluster(), alpha=0.5, clip=1e9)
+        st.observe_bandwidth(0, 1, nbytes=50.0, seconds=1.0)   # sample 50
+        assert st.bw[0, 1] == 75.0
+        assert st.bw[1, 0] == 75.0                             # symmetric
+
+    def test_outlier_clip_bounds_one_sample(self):
+        st = ClusterState(_cluster(), alpha=1.0, clip=4.0)
+        st.observe_bandwidth(0, 1, nbytes=1e-6, seconds=1.0)   # pathological
+        assert st.bw[0, 1] == 25.0                             # est / clip
+        st2 = ClusterState(_cluster(), alpha=1.0, clip=4.0)
+        st2.observe_bandwidth(0, 1, nbytes=1e9, seconds=1.0)
+        assert st2.bw[0, 1] == 400.0                           # est * clip
+
+    def test_degenerate_samples_ignored(self):
+        st = ClusterState(_cluster())
+        st.observe_bandwidth(0, 1, nbytes=0.0, seconds=1.0)
+        st.observe_bandwidth(0, 1, nbytes=10.0, seconds=0.0)
+        st.observe_compute(1, seconds=0.0, nominal_s=1.0)
+        assert st.bw[0, 1] == 100.0 and st.compute_scale[1] == 1.0
+
+    def test_observe_compute_tracks_slowdown(self):
+        st = ClusterState(_cluster(), alpha=1.0, clip=1e9)
+        st.observe_compute(2, seconds=2.0, nominal_s=1.0)      # half speed
+        assert st.compute_scale[2] == 0.5
+
+    def test_fold_maps_stage_samples_onto_pipeline_hops(self):
+        st = ClusterState(_cluster(), alpha=1.0, clip=1e9)
+        tel = TelemetryStream(2, clock=lambda: 0.0)
+        tel.record_transfer(0, nbytes=40.0, seconds=1.0)  # stage 0 -> 1 hop
+        n = st.fold(tel, node_of_stage=[1, 2], dispatcher_node=0)
+        assert n == 1
+        assert st.bw[1, 2] == 40.0
+        assert st.bw[0, 1] == 100.0                # dispatcher hop untouched
+        assert st.fold(tel, [1, 2]) == 0           # pending was drained
+
+    def test_as_cluster_materializes_estimate(self):
+        st = ClusterState(_cluster(), alpha=1.0, clip=1e9)
+        st.observe_bandwidth(0, 1, nbytes=40.0, seconds=1.0)
+        est = st.as_cluster()
+        assert est.bw[0, 1] == 40.0
+        assert est.bw is not st.bw                 # a copy, not a view
+        np.testing.assert_array_equal(est.compute_scale, st.compute_scale)
