@@ -7,6 +7,10 @@ closure-based event loop (``engine="reference"``):
   (the paper's 20-node scale with 5k-batch traces, plus a 100-node fleet);
 * ``eventpath/*`` — the flat (closure-free) event engine on a single-fault
   trace;
+* ``replicated/*`` — warm-replica plans vs single-copy-plus-restore under
+  the same primary-node kill; every run asserts the replicated p99 beats
+  the restore path AND flat-event/reference metrics identity on the
+  replicated plan (the replication-contract gate);
 * ``sweep/*``     — Monte-Carlo (fault-seed x arrival-rate) grids on
   240-500 node clusters with 2k-50k-batch traces
   (``repro.emulator.sweep``).  ``--update`` times one scaled-down
@@ -42,11 +46,13 @@ import numpy as np
 
 from repro.configs.paper_cnns import PAPER_MODELS
 from repro.core import (blob_cluster, grid_cluster, partition_and_place,
-                        random_geometric_cluster, ring_cluster)
+                        random_geometric_cluster, replicate_bottlenecks,
+                        ring_cluster)
 from repro.core.stageplan import from_seifer
 from repro.emulator import (DriftingCluster, NodeFault, RandomNodeFaults,
                             compare_replan, evaluate_cells,
-                            metrics_identical, simulate)
+                            metrics_identical, plan_replicas,
+                            plan_stage_args, simulate)
 from repro.emulator.pipeline import emulate_plan
 
 from .common import check_bench, load_bench, time_us
@@ -82,6 +88,20 @@ SWEEP_CASES = [
      (None,), 5000,
      RandomNodeFaults(n_faults=2, window_s=(10.0, 120.0),
                       recover_after_s=60.0)),
+]
+
+# replicated plan vs single-copy-plus-restore under the same primary-node
+# kill: ``replicate_bottlenecks`` spends one spare on the costliest stage
+# (best-connected spare), that stage's primary is killed, and the warm
+# replica absorbs the outage with zero restore while the single-copy plan
+# pays detection + checkpoint reschedule — so the replicated p99 must come
+# out lower.  Asserted on every run (--update AND --check) together with
+# flat-event-vs-reference metrics identity on the replicated plan — the
+# replication-contract gate.
+# (key, model, cap, n_nodes, n_seeds, n_batches, rate, kill_t)
+REPLICATED_CASES = [
+    ("ResNet50/n20/seeds8/b300/kill-primary", "ResNet50", 30e6, 20, 8,
+     300, 2.0, 20.0),
 ]
 
 # static plan vs replan-every-period on a drifting cluster
@@ -188,6 +208,46 @@ def measure(reps: int, with_naive: bool) -> dict:
                                  else "within-budget")
         entries[f"sweep/{key}"] = e
 
+    for (key, model, cap, n, n_seeds, nb, rate, kt) in REPLICATED_CASES:
+        g = PAPER_MODELS[model]()
+        cluster = random_geometric_cluster(n, rng=n)
+        sp = partition_and_place(g, cluster, cap, n_classes=3, rng=0)
+        rp = replicate_bottlenecks(from_seifer(sp, cluster), cluster,
+                                   budget=1, max_replicas=2)
+        ks = next(k for k, s in enumerate(rp.stages) if s.replicas)
+        nodes, bounds, flops = plan_stage_args(rp)
+        replicas = plan_replicas(rp)
+        faults = [NodeFault(kt, nodes[ks + 1])]     # primary, permanent
+        kw = dict(n_batches=nb, duration_s=1e9, arrival_rate_hz=rate,
+                  engine="events")
+
+        def run_grid(reps_arg):
+            return [simulate(cluster, nodes, bounds, flops, faults=faults,
+                             rng=s, replicas=reps_arg, **kw)
+                    for s in range(n_seeds)]
+
+        def fast():
+            return run_grid(replicas)
+        med, lo = time_us(fast, reps)
+        rep_p99 = max(m["p99_e2e_s"] for m in run_grid(replicas))
+        single_p99 = max(m["p99_e2e_s"] for m in run_grid(None))
+        assert rep_p99 < single_p99, (
+            f"replicated/{key}: warm-replica p99 ({rep_p99:.4g}s) must beat "
+            f"single-copy-plus-restore p99 ({single_p99:.4g}s) under the "
+            f"same primary kill")
+        _assert_identical(
+            simulate(cluster, nodes, bounds, flops, faults=faults, rng=0,
+                     replicas=replicas, **kw),
+            simulate(cluster, nodes, bounds, flops, faults=faults, rng=0,
+                     replicas=replicas, **{**kw, "engine": "reference"}))
+        entries[f"replicated/{key}"] = {
+            "median_us": med, "min_us": lo,
+            "replicated_stage": ks,
+            "replicated_p99_s": round(rep_p99, 5),
+            "single_restore_p99_s": round(single_p99, 5),
+            "p99_speedup": round(single_p99 / rep_p99, 2),
+        }
+
     for (key, model, cap, n, period, horizon, rate, seeds,
          drift) in REPLAN_CASES:
         g = PAPER_MODELS[model]()
@@ -243,6 +303,10 @@ def update(reps: int) -> None:
     for name, e in sorted(entries.items()):
         if "naive_median_us" in e:
             extra = f"naive {e['naive_median_us']:.0f}us, x{e['speedup']}"
+        elif "replicated_p99_s" in e:
+            extra = (f"replicated p99 {e['replicated_p99_s']:.3g}s vs "
+                     f"single+restore {e['single_restore_p99_s']:.3g}s, "
+                     f"x{e['p99_speedup']}")
         elif "p99_speedup" in e:
             extra = (f"static p99 {e['static_p99_s']:.3g}s vs replan "
                      f"{e['replan_p99_s']:.3g}s, x{e['p99_speedup']}")

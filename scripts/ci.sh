@@ -6,27 +6,61 @@
 # pyproject.toml's pytest pythonpath puts src/ on sys.path, so pytest
 # needs no PYTHONPATH; the example is run the way the docs show it
 # (PYTHONPATH=src) to keep that invocation covered too.
+#
+# Each phase is timed; a per-phase summary prints at the end (and on
+# failure, for the phases that ran) so slow phases are visible in CI logs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "--- lint: repro.analysis --check src tests"
+PHASE_NAMES=()
+PHASE_SECS=()
+_phase_start=0
+_phase_name=""
+
+phase() {
+    phase_end
+    _phase_name="$1"
+    _phase_start=$SECONDS
+    echo "--- $1"
+}
+
+phase_end() {
+    if [[ -n "$_phase_name" ]]; then
+        PHASE_NAMES+=("$_phase_name")
+        PHASE_SECS+=($((SECONDS - _phase_start)))
+        _phase_name=""
+    fi
+}
+
+summary() {
+    phase_end
+    echo "--- timing summary"
+    for i in "${!PHASE_NAMES[@]}"; do
+        printf '%6ss  %s\n' "${PHASE_SECS[$i]}" "${PHASE_NAMES[$i]}"
+    done
+    printf '%6ss  total\n' "$SECONDS"
+}
+trap summary EXIT
+
+phase "lint: repro.analysis --check src tests"
 # AST contract linter (compat boundary, jit purity, donation, PRNG
 # discipline, determinism, pallas structure).  Runs before pytest: a
 # contract violation fails fast, without waiting on the suite.
 PYTHONPATH=src python -m repro.analysis --check src tests benchmarks examples
 
+phase "pytest"
 python -m pytest -x -q
 
-echo "--- smoke: fixture drift (one cell per pinned family)"
+phase "smoke: fixture drift (one cell per pinned family)"
 # regenerates one small cell per pinned fixture (planner, emulator, serve)
 # through the reference path and byte-compares it against the committed
 # cell — catches silent generator drift without a full regeneration
 PYTHONPATH=src python scripts/fixture_drift_smoke.py
 
-echo "--- smoke: examples/quickstart.py"
+phase "smoke: examples/quickstart.py"
 PYTHONPATH=src python examples/quickstart.py > /dev/null
 
-echo "--- smoke: planner latency vs BENCH_planner.json"
+phase "smoke: planner latency vs BENCH_planner.json"
 # compares this host's best-of-reps against the committed medians with a 2x
 # ratio tolerance.  The baseline is machine-specific: on a host that is
 # uniformly >2x slower than the one that ran --update, regenerate it
@@ -34,11 +68,13 @@ echo "--- smoke: planner latency vs BENCH_planner.json"
 # regressions.
 PYTHONPATH=src python -m benchmarks.planner_scale --check --reps 3
 
-echo "--- smoke: emulator latency vs BENCH_emulator.json"
-# same methodology and 2x best-of-reps tolerance as the planner gate above
+phase "smoke: emulator latency vs BENCH_emulator.json"
+# same methodology and 2x best-of-reps tolerance as the planner gate above;
+# also re-asserts the replan/ and replicated/ semantic gates (replan beats
+# static p99 under drift; warm replicas beat single-copy-plus-restore p99)
 PYTHONPATH=src python -m benchmarks.emulator_bench --check --reps 3
 
-echo "--- smoke: serving throughput vs BENCH_serve.json"
+phase "smoke: serving throughput vs BENCH_serve.json"
 # same methodology and 2x best-of-reps tolerance; the committed speedups
 # (fast vs eager loop) are re-measured only by --update
 PYTHONPATH=src python -m benchmarks.serve_bench --check --reps 3

@@ -20,10 +20,11 @@ from .partitioner import (NotPartitionable, PartitionInfeasible,
                           min_cost_path_reference, optimal_partitions,
                           transfer_sizes)
 from .placement import (PlacementInfeasible, PlacementResult, classify,
-                        kpath_matching, place_with_retry, subgraph_k_path,
+                        kpath_matching, place_with_retry,
+                        replicate_bottlenecks, subgraph_k_path,
                         subgraph_k_path_reference)
-from .replan import (ReplanResult, StageMove, incremental_replan,
-                     stage_costs)
+from .replan import (ReplanResult, ReplicaAdd, StageMove,
+                     effective_stage_costs, incremental_replan, stage_costs)
 from .stageplan import (BoundarySpec, StageExecutionPlan, StageSpec,
                         from_block_cuts, from_seifer)
 
@@ -42,8 +43,10 @@ __all__ = [
     "build_partition_graph", "min_cost_path_reference", "optimal_partitions",
     "transfer_sizes",
     "PlacementInfeasible", "PlacementResult", "classify", "kpath_matching",
-    "place_with_retry", "subgraph_k_path", "subgraph_k_path_reference",
-    "ReplanResult", "StageMove", "incremental_replan", "stage_costs",
+    "place_with_retry", "replicate_bottlenecks", "subgraph_k_path",
+    "subgraph_k_path_reference",
+    "ReplanResult", "ReplicaAdd", "StageMove", "effective_stage_costs",
+    "incremental_replan", "stage_costs",
     "BoundarySpec", "StageExecutionPlan", "StageSpec", "from_block_cuts",
     "from_seifer",
 ]

@@ -61,6 +61,13 @@ class StageSpec:
     in_bytes: float = 0.0        # compressed bytes arriving at this stage
     memory_bytes: float = 0.0    # omega of the stage (params + work)
     compute_flops: float = 0.0   # forward FLOPs (emulator compute model)
+    replicas: tuple[int, ...] = ()  # warm-spare replica node ids (primary
+    #                                 excluded; () = unreplicated stage)
+
+    @property
+    def all_nodes(self) -> tuple[int, ...]:
+        """Primary node followed by replica nodes."""
+        return (self.node,) + self.replicas
 
     def block_range(self) -> tuple[int, int]:
         """(lo, hi) model-block index range owned by this stage (hi
@@ -105,6 +112,17 @@ class StageExecutionPlan:
     def compute_flops(self) -> list[float]:
         return [s.compute_flops for s in self.stages]
 
+    @property
+    def replica_nodes(self) -> list[tuple[int, ...]]:
+        """Replica node ids per stage (primaries excluded; () when the
+        stage is unreplicated)."""
+        return [s.replicas for s in self.stages]
+
+    @property
+    def replication_factors(self) -> list[int]:
+        """Copies per stage (1 = single-copy)."""
+        return [1 + len(s.replicas) for s in self.stages]
+
     def emulator_args(self) -> tuple[list[int], list[float], list[float]]:
         """The emulator's (nodes, boundary_bytes, compute_flops) triple —
         byte-exact what ``SeiferPlan`` used to feed it (pinned by the
@@ -139,10 +157,11 @@ class StageExecutionPlan:
                  f"lam={self.compression.lam:g}, "
                  f"wire={'int' + str(self.compression.wire_bits) if self.compression.wire_bits else 'raw'})"]
         for s in self.stages:
+            rep = f" +replicas {list(s.replicas)}" if s.replicas else ""
             lines.append(
                 f"  stage {s.index}: {len(s.layers)} layers -> node {s.node} "
                 f"(in {s.in_bytes / 1e6:.2f}MB, mem {s.memory_bytes / 1e6:.1f}MB, "
-                f"{s.compute_flops / 1e9:.2f} GFLOP)")
+                f"{s.compute_flops / 1e9:.2f} GFLOP){rep}")
         if self.spare_nodes:
             lines.append(f"  spares: {list(self.spare_nodes)}")
         return "\n".join(lines)
@@ -173,7 +192,7 @@ def from_seifer(plan, cluster=None, *, wire_bits: int = 0,
 
 def from_block_cuts(cfg, cuts, *, nodes=None, spare_nodes=(),
                     lam: float = DEFAULT_COMPRESSION, wire_bits: int = 0,
-                    shape=None) -> StageExecutionPlan:
+                    shape=None, replicas=None) -> StageExecutionPlan:
     """Build an LM IR directly from block cut indices (no cluster needed).
 
     ``cuts`` are the block indices where stage boundaries fall: stage k owns
@@ -181,7 +200,8 @@ def from_block_cuts(cfg, cuts, *, nodes=None, spare_nodes=(),
     and the head appended to the last), matching ``lm_block_graph`` naming.
     ``nodes`` defaults to ``[0, 1, .., n_stages]``; ``shape`` (a
     ShapeConfig) optionally prices boundaries/FLOPs through the planner's
-    own block graph so the IR is emulator-ready too."""
+    own block graph so the IR is emulator-ready too.  ``replicas`` maps a
+    stage index to a tuple of warm-replica node ids for that stage."""
     cuts = list(cuts)
     if sorted(set(cuts)) != cuts or any(not 0 < c < cfg.n_layers
                                         for c in cuts):
@@ -216,7 +236,8 @@ def from_block_cuts(cfg, cuts, *, nodes=None, spare_nodes=(),
             in_bytes = graph.layers[src].out_bytes / lam
         stages.append(StageSpec(index=k, layers=tuple(layers),
                                 node=nodes[k + 1], in_bytes=in_bytes,
-                                memory_bytes=mem, compute_flops=flops))
+                                memory_bytes=mem, compute_flops=flops,
+                                replicas=tuple((replicas or {}).get(k, ()))))
     return StageExecutionPlan(
         stages=stages, dispatcher_node=nodes[0],
         compression=BoundarySpec(lam=lam, wire_bits=wire_bits),

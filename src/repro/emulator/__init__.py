@@ -1,6 +1,7 @@
 from .core import Event, Simulator
 from .pipeline import (EmulatorConfig, PipelineEmulator, emulate_plan,
-                       metrics_identical, plan_stage_args, summarize)
+                       metrics_identical, plan_replicas, plan_stage_args,
+                       summarize)
 from .faults import (CompositeFaultModel, DriftingCluster, EffectLedger,
                      FaultInjector, LinkDegrade, LinkFault, NodeFault,
                      NodeSlowdown, RandomLinkFaults, RandomNodeFaults,
@@ -9,7 +10,8 @@ from .engine import FlatEventEngine, lindley_scan, poisson_arrivals, simulate
 from .sweep import aggregate, compare_replan, evaluate_cells, sweep_plan
 
 __all__ = ["Event", "Simulator", "PipelineEmulator", "EmulatorConfig",
-           "emulate_plan", "plan_stage_args", "summarize", "metrics_identical",
+           "emulate_plan", "plan_stage_args", "plan_replicas", "summarize",
+           "metrics_identical",
            "FaultInjector", "LinkFault", "NodeFault", "LinkDegrade",
            "NodeSlowdown", "DriftingCluster", "CompositeFaultModel",
            "EffectLedger", "compose_faults", "effective_cluster",

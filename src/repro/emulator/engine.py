@@ -182,10 +182,32 @@ def _calendar_run(arrivals, comp, send, duration_s):
 # ---------------------------------------------------------------------------
 
 # opcodes (heap tuples: (time, seq, OP, *args); seq is globally unique so
-# payloads are never compared)
+# payloads are never compared — which also makes replica *records* safe to
+# carry in event tuples)
 _ARRIVE, _DONE, _RETRY, _DELIVER = 0, 1, 2, 3
 _KILL, _REVIVE, _RESCHED, _DROP, _RESTORE, _SWEEP = 4, 5, 6, 7, 8, 9
 _DEGRADE, _UNDEGRADE, _SLOW, _UNSLOW = 10, 11, 12, 13
+
+
+class _Rep:
+    """Flat mirror of the reference engine's ``_Replica`` pod record (no
+    per-event allocation: all records are created at init / reschedule
+    keeps them)."""
+
+    __slots__ = ("node", "comp_s", "busy", "sending", "tok", "inbox",
+                 "outbox", "unacked", "svc", "inflight")
+
+    def __init__(self, node, comp_s):
+        self.node = node
+        self.comp_s = comp_s
+        self.busy = False
+        self.sending = False
+        self.tok = 0
+        self.inbox = deque()
+        self.outbox = deque()
+        self.unacked = None
+        self.svc = []
+        self.inflight = 0
 
 
 class FlatEventEngine:
@@ -196,13 +218,16 @@ class FlatEventEngine:
     copied, so link faults never mutate the caller's cluster."""
 
     def __init__(self, cluster: ClusterGraph, nodes, boundary_bytes,
-                 compute_flops, cfg: EmulatorConfig | None = None):
+                 compute_flops, cfg: EmulatorConfig | None = None,
+                 replicas=None):
         self.cfg = cfg or EmulatorConfig()
         self.cluster = cluster
         self.n_parts = len(boundary_bytes)
         self.nodes = list(nodes)
         self.flops = [0.0] + list(compute_flops)
         self.out_bytes = list(boundary_bytes) + [0.0]
+        self.replicas = ([list(r) for r in replicas] if replicas
+                         else [[] for _ in range(self.n_parts)])
 
     def run(self, arrivals: np.ndarray, duration_s: float,
             faults=()) -> dict:
@@ -222,20 +247,21 @@ class FlatEventEngine:
         retry_s = cfg.retry_s
         resched_delay = cfg.detection_s + cfg.reschedule_s
 
-        node = list(self.nodes)
         flops = self.flops
         out_bytes = self.out_bytes
-        comp_s = [0.0 if flops[k] == 0.0
-                  else flops[k] / node_flops / scale[node[k]]
-                  for k in range(n_stages)]
-        busy = [False] * n_stages
-        sending = [False] * n_stages
-        token = [0] * n_stages
-        inbox = [deque() for _ in range(n_stages)]
-        outbox = [deque() for _ in range(n_stages)]
-        svc = [[] for _ in range(n_stages)]
+        reps: list[list[_Rep]] = []
+        for k in range(n_stages):
+            cs = (0.0 if flops[k] == 0.0
+                  else flops[k] / node_flops / scale[self.nodes[k]])
+            rl = [_Rep(self.nodes[k], cs)]
+            if k > 0:
+                for rn in self.replicas[k - 1]:
+                    rl.append(_Rep(rn, 0.0 if flops[k] == 0.0
+                                   else flops[k] / node_flops / scale[rn]))
+            reps.append(rl)
+        rep_nodes = {r.node for rl in reps for r in rl}
         down: set[int] = set()
-        spares = [n for n in range(cluster.n) if n not in node]
+        spares = [n for n in range(cluster.n) if n not in rep_nodes]
         epoch = [0] * cluster.n
         completed_t: list[float] = []
         completed_e: list[float] = []
@@ -246,30 +272,54 @@ class FlatEventEngine:
         now = 0.0
 
         # -- handler helpers (defined once; no per-event allocation) --------
-        def try_start(k):
-            if busy[k] or not inbox[k] or node[k] in down:
-                return
-            busy[k] = True
-            token[k] += 1
-            nd = node[k]
-            heappush(q, (now + comp_s[k], cnt(), _DONE, k,
-                         inbox[k].popleft(), now, nd, epoch[nd], token[k]))
+        def pick(k):
+            # join-shortest-queue over up replicas, first minimum in slot
+            # order (mirrors the reference's _pick_replica)
+            rl = reps[k]
+            cand = [r for r in rl if r.node not in down] or rl
+            best = cand[0]
+            bd = len(best.inbox) + (1 if best.busy else 0) + best.inflight
+            for r in cand[1:]:
+                d = len(r.inbox) + (1 if r.busy else 0) + r.inflight
+                if d < bd:
+                    best, bd = r, d
+            return best
 
-        def attempt(k, bid):
-            src = node[k]
-            dst = node[k + 1]
+        def enqueue(k, bid):
+            r = pick(k)
+            r.inbox.append(bid)
+            try_start(k, r)
+
+        def try_start(k, rep):
+            if rep.busy or not rep.inbox or rep.node in down:
+                return
+            rep.busy = True
+            rep.tok += 1
+            nd = rep.node
+            heappush(q, (now + rep.comp_s, cnt(), _DONE, k, rep,
+                         rep.inbox.popleft(), now, nd, epoch[nd], rep.tok))
+
+        def attempt(k, rep, bid):
+            if rep not in reps[k]:
+                # sender slot dissolved while a retry was pending: its
+                # unacked batch was already re-routed at kill time
+                return
+            rep2 = pick(k + 1)                 # route at send time (JSQ)
+            src, dst = rep.node, rep2.node
             bwv = 0.0 if (src in down or dst in down) else bwmat[src, dst]
             if bwv <= 0:
-                heappush(q, (now + retry_s, cnt(), _RETRY, k, bid))
+                heappush(q, (now + retry_s, cnt(), _RETRY, k, rep, bid))
                 return
-            heappush(q, (now + out_bytes[k] / bwv, cnt(), _DELIVER, k, bid,
-                         src, dst, epoch[src], epoch[dst]))
+            rep2.inflight += 1
+            heappush(q, (now + out_bytes[k] / bwv, cnt(), _DELIVER, k, rep,
+                         rep2, bid, src, dst, epoch[src], epoch[dst]))
 
-        def pump(k):
-            if sending[k] or not outbox[k]:
+        def pump(k, rep):
+            if rep.sending or not rep.outbox:
                 return
-            sending[k] = True
-            attempt(k, outbox[k].popleft())
+            rep.sending = True
+            rep.unacked = rep.outbox.popleft()
+            attempt(k, rep, rep.unacked)
 
         def set_scale(nd, eff):
             # mirrors FaultInjector._set_scale: in-flight computes keep the
@@ -277,20 +327,21 @@ class FlatEventEngine:
             # new rate (the _DONE events already in the heap are unchanged)
             scale[nd] = eff
             for k in range(n_stages):
-                if node[k] == nd:
-                    comp_s[k] = (0.0 if flops[k] == 0.0
-                                 else flops[k] / node_flops / scale[nd])
+                for r in reps[k]:
+                    if r.node == nd:
+                        r.comp_s = (0.0 if flops[k] == 0.0
+                                    else flops[k] / node_flops / scale[nd])
 
         def release(nd):
             if (nd not in down and nd not in spares
-                    and all(x != nd for x in node)):
+                    and all(r.node != nd for rl in reps for r in rl)):
                 spares.append(nd)
 
-        def do_reschedule(k, straggler):
-            if not straggler and node[k] not in down:
-                log.append((now, f"stage {k}: node {node[k]} recovered "
+        def do_reschedule(k, rep, straggler):
+            if not straggler and rep.node not in down:
+                log.append((now, f"stage {k}: node {rep.node} recovered "
                                  f"before reschedule; pod kept in place"))
-                try_start(k)
+                try_start(k, rep)
                 return
             if not spares:
                 log.append((now,
@@ -300,21 +351,21 @@ class FlatEventEngine:
             for s in spares:
                 sc = 0.0
                 if k > 0:
-                    sc += bwmat[node[k - 1], s]
+                    sc += bwmat[reps[k - 1][0].node, s]
                 if k < last:
-                    sc += bwmat[s, node[k + 1]]
+                    sc += bwmat[s, reps[k + 1][0].node]
                 if sc > best_score:
                     best, best_score = s, sc
             spares.remove(best)
-            old = node[k]
-            node[k] = best
-            comp_s[k] = (0.0 if flops[k] == 0.0
-                         else flops[k] / node_flops / scale[best])
-            svc[k].clear()
-            busy[k] = False
+            old = rep.node
+            rep.node = best
+            rep.comp_s = (0.0 if flops[k] == 0.0
+                          else flops[k] / node_flops / scale[best])
+            rep.svc.clear()
+            rep.busy = False
             log.append((now, f"stage {k}: pod rescheduled {old} -> {best}"))
             release(old)
-            try_start(k)
+            try_start(k, rep)
 
         # -- initial schedule: faults, straggler arm, arrivals (the order
         #    the reference sees: injector first, then run()) ----------------
@@ -343,40 +394,48 @@ class FlatEventEngine:
             now = ev[0]
             op = ev[2]
             if op == _DONE:
-                k, bid, t0c, nd, ep, tok = ev[3:9]
-                current = tok == token[k]
+                k, rep, bid, t0c, nd, ep, tok = ev[3:10]
+                current = tok == rep.tok
                 if current:
-                    busy[k] = False
+                    rep.busy = False
                 if epoch[nd] != ep:            # host died mid-compute
-                    inbox[k].appendleft(bid)
-                    if current:
-                        try_start(k)
+                    if rep in reps[k]:
+                        rep.inbox.appendleft(bid)
+                        if current:
+                            try_start(k, rep)
+                    else:
+                        # slot dissolved: warm survivors absorb the batch
+                        enqueue(k, bid)
                     continue
                 if current and k > 0:
-                    svc[k].append(now - t0c)
+                    rep.svc.append(now - t0c)
                 if k == last:
                     completed_t.append(now)
                     completed_e.append(now - arrivals[bid])
                 else:                          # _send
-                    outbox[k].append(bid)
-                    pump(k)
+                    rep.outbox.append(bid)
+                    pump(k, rep)
                 if current:
-                    try_start(k)
+                    try_start(k, rep)
             elif op == _DELIVER:
-                k, bid, src, dst, es, ed = ev[3:9]
+                k, rep, rep2, bid, src, dst, es, ed = ev[3:11]
+                rep2.inflight -= 1
+                if rep not in reps[k]:
+                    continue                   # sender slot dissolved
                 if (epoch[src] != es or epoch[dst] != ed
-                        or node[k] != src or node[k + 1] != dst):
-                    heappush(q, (now + retry_s, cnt(), _RETRY, k, bid))
+                        or rep.node != src or rep2 not in reps[k + 1]
+                        or rep2.node != dst):
+                    heappush(q, (now + retry_s, cnt(), _RETRY, k, rep, bid))
                     continue
-                sending[k] = False
-                inbox[k + 1].append(bid)       # _enqueue + ack
-                try_start(k + 1)
-                pump(k)
+                rep.unacked = None
+                rep.sending = False
+                rep2.inbox.append(bid)         # _enqueue + ack
+                try_start(k + 1, rep2)
+                pump(k, rep)
             elif op == _ARRIVE:
-                inbox[0].append(ev[3])
-                try_start(0)
+                enqueue(0, ev[3])
             elif op == _RETRY:
-                attempt(ev[3], ev[4])
+                attempt(ev[3], ev[4], ev[5])
             elif op == _KILL:
                 nd = ev[3]
                 down.add(nd)
@@ -385,20 +444,38 @@ class FlatEventEngine:
                     spares.remove(nd)
                 log.append((now, f"node {nd} FAILED"))
                 for k in range(n_stages):
-                    if node[k] == nd:
-                        heappush(q, (now + resched_delay, cnt(), _RESCHED, k))
+                    for rep in [r for r in reps[k] if r.node == nd]:
+                        survivors = [r for r in reps[k] if r is not rep
+                                     and r.node not in down]
+                        if survivors:
+                            # warm-spare failover: dissolve the slot, hand
+                            # its queued work to the survivors, no restore
+                            reps[k].remove(rep)
+                            log.append((
+                                now, f"stage {k}: replica on node {nd} LOST "
+                                f"({len(survivors)} survivor(s), "
+                                f"no restore)"))
+                            moved = ([rep.unacked]
+                                     if rep.unacked is not None else [])
+                            moved += list(rep.outbox) + list(rep.inbox)
+                            for bid in moved:
+                                enqueue(k, bid)
+                        else:
+                            heappush(q, (now + resched_delay, cnt(),
+                                         _RESCHED, k, rep))
             elif op == _REVIVE:
                 nd = ev[3]
                 down.discard(nd)
                 log.append((now, f"node {nd} recovered"))
-                hosted = [k for k in range(n_stages) if node[k] == nd]
+                hosted = [(k, r) for k in range(n_stages)
+                          for r in reps[k] if r.node == nd]
                 if hosted:
-                    for k in hosted:
-                        try_start(k)
+                    for k, r in hosted:
+                        try_start(k, r)
                 else:
                     release(nd)
             elif op == _RESCHED:
-                do_reschedule(ev[3], False)
+                do_reschedule(ev[3], ev[4], False)
             elif op == _DROP:
                 fi = ev[3]
                 f = faults[fi]
@@ -440,17 +517,17 @@ class FlatEventEngine:
                 set_scale(f.node, slows.pop(f.node, ev[3]))
                 log.append((now, f"node {f.node} slowdown cleared"))
             elif op == _SWEEP:
-                vals = [np.mean(svc[k][-5:]) for k in range(1, n_stages)
-                        if svc[k]]
+                pods = [(k, r) for k in range(1, n_stages) for r in reps[k]]
+                vals = [np.mean(r.svc[-5:]) for _, r in pods if r.svc]
                 med = np.median(vals) if vals else None
                 if med:
-                    for k in range(1, n_stages):
-                        if (svc[k] and spares
-                                and np.mean(svc[k][-5:])
+                    for k, r in pods:
+                        if (r.svc and spares
+                                and np.mean(r.svc[-5:])
                                 > cfg.straggler_factor * med):
                             log.append((now, f"stage {k}: straggler on node "
-                                             f"{node[k]}, migrating"))
-                            do_reschedule(k, True)
+                                             f"{r.node}, migrating"))
+                            do_reschedule(k, r, True)
                 if len(completed_t) < n_batches:
                     heappush(q, (now + cfg.straggler_check_s, cnt(), _SWEEP))
 
@@ -466,21 +543,25 @@ def simulate(cluster: ClusterGraph, nodes, boundary_bytes, compute_flops,
              n_batches: int, duration_s: float,
              arrival_rate_hz: float | None = None,
              faults=(), rng: np.random.Generator | int = 0,
-             engine: str = "auto") -> dict:
+             engine: str = "auto", replicas=None) -> dict:
     """Emulate one plan; metrics-identical to ``PipelineEmulator``.
 
     ``faults`` is a declarative list of :class:`NodeFault` /
     :class:`LinkFault` / :class:`LinkDegrade` / :class:`NodeSlowdown`
     (the reference wires the same list through ``FaultInjector`` *before*
-    ``run`` — event ordering replicates that).  Engines:
+    ``run`` — event ordering replicates that).  ``replicas`` lists warm
+    replica node ids per partition (JSQ-routed pods; see the replication
+    contract in ROADMAP.md).  Engines:
 
     * ``"auto"`` — calendar when fault-free (no faults, no straggler
-      migration, every pipeline link up), else events;
+      migration, every pipeline link up) *and* single-copy, else events
+      (a replicated stage's parallel service has no Lindley form);
     * ``"calendar"`` / ``"events"`` — force a fast path;
     * ``"reference"`` — the closure-based reference loop (on a
       bandwidth-copied cluster, so callers never see fault mutations).
     """
     cfg = cfg or EmulatorConfig()
+    replicated = any(replicas) if replicas else False
     if engine == "reference":
         # bw AND compute_scale are copied: link faults and node slowdowns
         # mutate them, and the caller's cluster must never see that
@@ -488,7 +569,7 @@ def simulate(cluster: ClusterGraph, nodes, boundary_bytes, compute_flops,
                                    labels=cluster.labels,
                                    compute_scale=cluster.compute_scale.copy())
         emu = PipelineEmulator(ref_cluster, nodes, boundary_bytes,
-                               compute_flops, cfg, rng)
+                               compute_flops, cfg, rng, replicas=replicas)
         if faults:
             FaultInjector(emu).schedule(faults)
         return emu.run(n_batches, duration_s, arrival_rate_hz)
@@ -499,14 +580,17 @@ def simulate(cluster: ClusterGraph, nodes, boundary_bytes, compute_flops,
                                   compute_flops, cfg)
     if engine == "auto":
         fault_free = (not faults and not cfg.enable_straggler_migration
+                      and not replicated
                       and all(np.isfinite(s) for s in send))
         engine = "calendar" if fault_free else "events"
     if engine == "calendar":
-        if faults or cfg.enable_straggler_migration:
-            raise ValueError("calendar engine is fault-free only")
+        if faults or cfg.enable_straggler_migration or replicated:
+            raise ValueError("calendar engine is fault-free, "
+                             "single-copy only")
         times, e2e = _calendar_run(arrivals, comp, send, duration_s)
         return summarize(times, e2e, [])
     if engine == "events":
         return FlatEventEngine(cluster, nodes, boundary_bytes, compute_flops,
-                               cfg).run(arrivals, duration_s, faults)
+                               cfg, replicas=replicas
+                               ).run(arrivals, duration_s, faults)
     raise ValueError(f"unknown engine {engine!r}")

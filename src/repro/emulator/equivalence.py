@@ -4,8 +4,11 @@ reference engine bit-exactly.
 Mirrors the planner-perf contract (``repro.core.equivalence``): this module
 defines a canonical scenario grid — fault-free cells for the calendar
 engine, single- and multi-fault cells (kill, kill+revive, link drop,
-no-spare stall, straggler migration) for the flat event engine —
-and a capture function that pins the reference ``PipelineEmulator``
+no-spare stall, straggler migration) for the flat event engine, and
+``replicated/`` cells exercising warm-spare replicated stages (JSQ
+routing, zero-restore replica kills, last-copy fallback to checkpoint
+reschedule) — and a capture function that pins the reference
+``PipelineEmulator``
 observables (completed count, throughput, mean/p95 E2E, the full event
 log) as ``float.hex()`` strings.
 
@@ -84,6 +87,24 @@ def scenarios() -> list[dict]:
     flt("straggler-migration", [], n_batches=60, slow_stage=1,
         slow_scale=0.05,
         cfg={"enable_straggler_migration": True, "straggler_check_s": 5.0})
+
+    # -- replicated stages: warm-spare failover, JSQ routing --------------
+    # ``replicas`` maps a stage index to the number of warm replica copies
+    # (resolved onto the first spare nodes after planning, so the node ids
+    # are deterministic).  Kills of one copy are absorbed with zero
+    # restore ("replica ... LOST, no restore" in the pinned event log);
+    # only the last copy's death engages checkpoint reschedule.
+    def rep(sid, faults, replicas, **kw):
+        flt(sid, faults, replicas=replicas, **kw)
+        out[-1]["id"] = f"replicated/{sid}"
+
+    rep("jsq", [], {1: 1})
+    rep("kill-replica", [{"replica_stage": 1, "t": 20.0}], {1: 1})
+    rep("kill-primary", [{"node_stage": 2, "t": 20.0}], {1: 1})
+    rep("kill-both", [{"replica_stage": 1, "t": 15.0},
+                      {"node_stage": 2, "t": 35.0}], {1: 1})
+    rep("poisson-two-replicas", [{"node_stage": 2, "t": 25.0}], {1: 2},
+        n_batches=80, rate=1.0)
     return out
 
 
@@ -113,9 +134,20 @@ def build_scenario(sc: dict):
         nodes = list(range(len(nodes)))
     if sc.get("slow_stage") is not None:
         cluster.compute_scale[nodes[sc["slow_stage"]]] = sc["slow_scale"]
+    replicas = [[] for _ in range(plan.partition.n_partitions)]
+    if sc.get("replicas"):
+        # warm replica copies live on the first spare nodes, in order —
+        # deterministic given the pinned plan
+        pool = [n for n in range(cluster.n) if n not in nodes]
+        for k in sorted(sc["replicas"]):
+            for _ in range(sc["replicas"][k]):
+                replicas[k].append(pool.pop(0))
     faults = []
     for f in sc["faults"]:
-        if "node_stage" in f:
+        if "replica_stage" in f:
+            faults.append(NodeFault(f["t"], replicas[f["replica_stage"]][0],
+                                    f.get("recover")))
+        elif "node_stage" in f:
             faults.append(NodeFault(f["t"], nodes[f["node_stage"]],
                                     f.get("recover")))
         else:
@@ -124,7 +156,7 @@ def build_scenario(sc: dict):
                                     f["duration"]))
     return (cluster, nodes, plan.partition.boundary_sizes,
             plan.partition.compute_flops, faults,
-            EmulatorConfig(**sc["cfg"]))
+            EmulatorConfig(**sc["cfg"]), replicas)
 
 
 def pin(metrics: dict) -> dict:
@@ -139,11 +171,11 @@ def pin(metrics: dict) -> dict:
 
 
 def run_scenario(sc: dict, engine: str = "reference") -> dict:
-    cluster, nodes, boundary, flops, faults, cfg = build_scenario(sc)
+    cluster, nodes, boundary, flops, faults, cfg, reps = build_scenario(sc)
     m = simulate(cluster, nodes, boundary, flops, cfg,
                  n_batches=sc["n_batches"], duration_s=sc["duration_s"],
                  arrival_rate_hz=sc["rate"], faults=faults, rng=0,
-                 engine=engine)
+                 engine=engine, replicas=reps)
     return pin(m)
 
 

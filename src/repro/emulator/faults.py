@@ -329,8 +329,9 @@ class FaultInjector:
         emu = self.emu
         emu.cluster.compute_scale[node] = eff
         for st in emu.stages:
-            if st.node == node:
-                st.compute_s = emu._compute_s(st.flops, st.node)
+            for rep in st.replicas:
+                if rep.node == node:
+                    rep.compute_s = emu._compute_s(st.flops, rep.node)
 
     def schedule(self, faults) -> None:
         for f in faults:

@@ -21,19 +21,23 @@ import numpy as np
 
 from .engine import _calendar_run, _stage_constants, simulate
 from .faults import effective_cluster
-from .pipeline import EmulatorConfig, plan_stage_args
+from .pipeline import EmulatorConfig, plan_replicas, plan_stage_args
 
 
 def evaluate_cells(cluster, nodes, boundary_bytes, compute_flops, *,
                    cfg: EmulatorConfig | None = None,
                    seeds=(0,), arrival_rates=(None,),
                    n_batches: int = 1000, duration_s: float = 1e9,
-                   fault_model=None, engine: str = "auto") -> list[dict]:
+                   fault_model=None, engine: str = "auto",
+                   replicas=None) -> list[dict]:
     """One plan, a grid of (seed x arrival-rate) cells.
 
     ``seeds`` drive both the Poisson arrival stream (bare seed) and the
     fault schedule (``fault_model.draw(seed, nodes)``, an independent
-    stream).  Returns one dict per cell, in (rate-major, seed-minor) order.
+    stream).  ``replicas`` (per-stage warm replica node lists) is passed
+    through to the engine; replicated cells always run on the flat event
+    engine (the calendar engine is single-copy only).  Returns one dict
+    per cell, in (rate-major, seed-minor) order.
     """
     cfg = cfg or EmulatorConfig()
     cells = []
@@ -48,7 +52,8 @@ def evaluate_cells(cluster, nodes, boundary_bytes, compute_flops, *,
                 m = simulate(cluster, nodes, boundary_bytes, compute_flops,
                              cfg, n_batches=n_batches, duration_s=duration_s,
                              arrival_rate_hz=rate, faults=faults,
-                             rng=int(seed), engine=engine)
+                             rng=int(seed), engine=engine,
+                             replicas=replicas)
                 if deterministic:
                     det_cache[rate] = m
             cells.append({
@@ -83,10 +88,34 @@ def aggregate(cells: list[dict], n_batches: int) -> dict:
     }
 
 
-def sweep_plan(plan, cluster, **kw) -> list[dict]:
-    """``evaluate_cells`` for a StageExecutionPlan (or SeiferPlan)."""
-    nodes, boundary, flops = plan_stage_args(plan)
-    return evaluate_cells(cluster, nodes, boundary, flops, **kw)
+def sweep_plan(plan, cluster, *, replication_factors=None, **kw
+               ) -> list[dict]:
+    """``evaluate_cells`` for a StageExecutionPlan (or SeiferPlan); the
+    plan's own warm-replica assignment is passed through.
+
+    ``replication_factors`` (an iterable of ints) additionally grids over
+    replication: for each factor R the plan is re-replicated with
+    ``repro.core.placement.replicate_bottlenecks(max_replicas=R)`` —
+    spending unused spares on copies of the costliest stages, R = 1
+    meaning the unreplicated plan — and every cell gains a
+    ``replication_factor`` key, concatenated in factor-major order."""
+    if replication_factors is None:
+        nodes, boundary, flops = plan_stage_args(plan)
+        return evaluate_cells(cluster, nodes, boundary, flops,
+                              replicas=plan_replicas(plan), **kw)
+    from repro.core.placement import replicate_bottlenecks
+    if hasattr(plan, "placement"):                       # SeiferPlan
+        plan = plan.execution_plan(cluster)
+    cells = []
+    for r in replication_factors:
+        var = (plan if r <= 1
+               else replicate_bottlenecks(plan, cluster, max_replicas=r))
+        nodes, boundary, flops = plan_stage_args(var)
+        for c in evaluate_cells(cluster, nodes, boundary, flops,
+                                replicas=plan_replicas(var), **kw):
+            c["replication_factor"] = int(r)
+            cells.append(c)
+    return cells
 
 
 def _tail(e2e: list[float], submitted: int) -> dict:

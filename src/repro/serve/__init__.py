@@ -29,19 +29,25 @@ runs under bounded retry/backoff (``RetryPolicy``); exhaustion surfaces as
 ``StageDegraded`` (stage keeps serving, placement degraded) on the
 migration path.
 
+**Replicated stages**: a plan may carry warm-spare replicas per stage
+(``StageSpec.replicas``); copies share the immutable params, micro-batches
+are JSQ-routed across them, one copy's death is a zero-restore
+``ReplicaLost`` absorbed by the survivors, and only a last-copy loss
+engages checkpoint restore + replay (ROADMAP "Replication contract").
+
 See ROADMAP.md "Serving-perf contract", "Deployment contract" and
 "Telemetry & replan contract" for the lockstep/equivalence obligations and
 the BENCH_serve.json workflow.
 """
 
 from .engine import ServeEngine
-from .pipeline import (PipelineServeEngine, RestoreExhausted, StageDegraded,
-                       StageDown)
+from .pipeline import (PipelineServeEngine, ReplicaLost, RestoreExhausted,
+                       StageDegraded, StageDown)
 from .retry import RetryExhausted, RetryPolicy, retry_call
 from .scheduler import Request, SlotScheduler
 from .telemetry import ClusterState, TelemetryStream
 
-__all__ = ["ClusterState", "PipelineServeEngine", "Request",
+__all__ = ["ClusterState", "PipelineServeEngine", "ReplicaLost", "Request",
            "RestoreExhausted", "RetryExhausted", "RetryPolicy",
            "ServeEngine", "SlotScheduler", "StageDegraded", "StageDown",
            "TelemetryStream", "retry_call"]

@@ -8,8 +8,11 @@ staggered request streams through the slot scheduler for the non-MoE
 families, and *pipelined* cells (``pipeline/`` / ``pipeline-stream/``)
 that serve the same requests through ``PipelineServeEngine`` over a
 block-cut ``StageExecutionPlan`` (first/middle/last cuts x families, with
-mid-stream stage kill + restore variants and ``-replan`` cells that run a
-telemetry-triggered live migration mid-stream) — and a capture function
+mid-stream stage kill + restore variants, ``-replan`` cells that run a
+telemetry-triggered live migration mid-stream, and ``-replica`` cells that
+serve through a warm-replicated stage with JSQ routing, a zero-restore
+replica kill, and a last-copy kill falling back to restore + replay) — and
+a capture function
 that pins the *reference* greedy token streams.  Tokens are ints, so the pin is
 exact by nature (the token-level analogue of the float.hex() pins
 elsewhere).
@@ -97,6 +100,31 @@ PIPELINE_STREAM_REPLAN_CELLS = [
     ("granite-3-2b", 4, [2], {"after_step": 4}),
 ]
 
+# warm-spare replicated stages (ROADMAP "Replication contract"): stage 1
+# carries a replica on node 10 and micro-batches are JSQ-routed across the
+# copies.  Suffixes pin, in order: routing alone (``-replica``), a
+# mid-stream replica-copy kill absorbed with ZERO restore
+# (``-replica-kill``: the survivor takes over, no checkpoint read, no
+# replay), and a last-copy loss (``-replica-lastkill``: both copies die in
+# sequence, the second falling back to checkpoint restore + replay).
+# Entries: (arch, n_layers, cuts, {stage: [replica nodes]}, kills, suffix);
+# pins are monolithic REFERENCE tokens, so greedy streams are bit-identical
+# under any replication factor and across replica kills.
+PIPELINE_REPLICA_CELLS = [
+    ("granite-3-2b", 4, [2], {1: [10]}, None, "-replica"),
+    ("granite-3-2b", 4, [2], {1: [10]},
+     [{"after_step": 3, "stage": 1}], "-replica-kill"),
+    ("granite-3-2b", 4, [2], {1: [10]},
+     [{"after_step": 2, "stage": 1, "replica": 10},
+      {"after_step": 4, "stage": 1}], "-replica-lastkill"),
+    ("mamba2-1.3b", 4, [2], {1: [10]},
+     [{"after_step": 3, "stage": 1}], "-replica-kill"),
+]
+PIPELINE_STREAM_REPLICA_CELLS = [
+    ("granite-3-2b", 4, [2], {1: [10]},
+     [{"after_step": 4, "stage": 1}], "-replica-kill"),
+]
+
 
 def _pipe_id(prefix, arch, cuts, kill, replan=None):
     cid = f"{prefix}/{arch}/cut{'-'.join(map(str, cuts))}"
@@ -144,6 +172,18 @@ def scenarios() -> list[dict]:
                     "cuts": cuts, "kill": None, "replan": rp, "slots": 2,
                     "requests": STREAM_REQUESTS, "seed": 1, "max_len": 32,
                     "kv_block": 16})
+    for arch, nl, cuts, reps, kills, sfx in PIPELINE_REPLICA_CELLS:
+        cid = f"pipeline/{arch}/cut{'-'.join(map(str, cuts))}{sfx}"
+        out.append({"id": cid, "kind": "pipeline", "arch": arch,
+                    "n_layers": nl, "cuts": cuts, "replicas": reps,
+                    "kill": kills, "batch": 2, "prompt_len": 12,
+                    "gen_len": 8, "seed": 0, "max_len": 32, "kv_block": 16})
+    for arch, nl, cuts, reps, kills, sfx in PIPELINE_STREAM_REPLICA_CELLS:
+        cid = f"pipeline-stream/{arch}/cut{'-'.join(map(str, cuts))}{sfx}"
+        out.append({"id": cid, "kind": "pipeline_stream", "arch": arch,
+                    "n_layers": nl, "cuts": cuts, "replicas": reps,
+                    "kill": kills, "slots": 2, "requests": STREAM_REQUESTS,
+                    "seed": 1, "max_len": 32, "kv_block": 16})
     return out
 
 
@@ -217,7 +257,8 @@ def build_pipeline_engine(sc: dict, eng: ServeEngine):
                                    max_len=sc["max_len"],
                                    kv_block=sc["kv_block"],
                                    cluster=cluster, telemetry=tel)
-    plan = from_block_cuts(eng.cfg, sc["cuts"], spare_nodes=(900, 901))
+    plan = from_block_cuts(eng.cfg, sc["cuts"], spare_nodes=(900, 901),
+                           replicas=sc.get("replicas"))
     return PipelineServeEngine(eng.cfg, eng.params, plan,
                                max_len=sc["max_len"],
                                kv_block=sc["kv_block"])

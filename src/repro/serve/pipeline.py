@@ -45,6 +45,22 @@ deterministic mechanism as after a kill, so greedy streams stay
 bit-identical across a live migration — pinned by the ``-replan`` cells
 of ``tests/data/serve_equivalence.json``.
 
+**Replicated stages** (see ROADMAP.md "Replication contract"): a plan may
+name warm-spare replica nodes per stage (``StageSpec.replicas``).  Copies
+hold the *same immutable param tree*, so greedy tokens are bit-identical
+under any routing; micro-batches are spread across copies by a
+deterministic join-shortest-queue rule (:meth:`PipelineServeEngine._route`
+— least-served, first-minimum tie-break, the host-loop counterpart of the
+emulator's ``_pick_replica``).  Killing one copy of a replicated stage is
+a **zero-restore** event (:class:`ReplicaLost`): a survivor absorbs its
+share immediately, no checkpoint read, no replay, the stage never goes
+down — graceful capacity degradation.  Only when the *last* copy dies
+does the checkpoint-restore-replay machinery above engage.  Replicas
+double as preferred migration targets: ``migrate_stage`` onto a stage's
+own replica is a role swap (promotion — no checkpoint read), and
+``replan_live(allow_replicas=True)`` can spend a spare on an extra
+replica (``ReplicaAdd``) instead of migrating.
+
 Continuous batching: ``SlotScheduler`` drives this engine through the same
 slot bookkeeping as the monolithic engine — per-stage cache banks, per
 -request prefill admission, batched decode across stages (see
@@ -94,6 +110,19 @@ class RestoreExhausted(StageDown):
         self.attempts = tuple(attempts)
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplicaLost:
+    """Typed zero-restore incident: one copy of a replicated stage died
+    and the survivors absorbed its share immediately — no checkpoint
+    read, no replay, the stage never entered ``down``.  ``promoted`` is
+    True when the dead copy was the primary and a replica took over."""
+
+    stage: int
+    node: int
+    survivors: tuple[int, ...]
+    promoted: bool = False
+
+
 class PipelineServeEngine:
     """Greedy pipelined serving over one StageExecutionPlan.
 
@@ -135,6 +164,18 @@ class PipelineServeEngine:
                                          k == last)
             for k, (lo, hi) in enumerate(self.ranges)]
         self.node_of_stage = [s.node for s in plan.stages]
+        self.replica_nodes = [list(s.replicas) for s in plan.stages]
+        taken = set(plan.nodes) | set(plan.spare_nodes)
+        for k, reps in enumerate(self.replica_nodes):
+            for r in reps:
+                if r in taken:
+                    raise ValueError(
+                        f"stage {k}: replica node {r} already hosts a "
+                        "stage, the dispatcher, a spare, or another "
+                        "replica")
+                taken.add(r)
+        self._served = [{} for _ in plan.stages]
+        self.incidents: list[ReplicaLost] = []
         self.spares = list(plan.spare_nodes)
         self.cluster = cluster
         self.telemetry = telemetry
@@ -305,10 +346,32 @@ class PipelineServeEngine:
             raise StageDown(f"stage {k} (node {self.node_of_stage[k]}) "
                             "is down — restore it first")
 
+    def stage_copies(self, k: int) -> list[int]:
+        """Live copy nodes of stage ``k``, primary first."""
+        return [self.node_of_stage[k]] + self.replica_nodes[k]
+
+    def _route(self, k: int) -> int:
+        """Deterministic join-shortest-queue routing across stage ``k``'s
+        copies.  The synchronous host loop has no standing queues, so
+        queue depth degenerates to micro-batches served so far: the first
+        copy (primary-then-replica order) with the fewest served batches
+        wins — least-served round-robin with the same first-minimum
+        tie-break as the emulator's ``_pick_replica``.  Copies hold
+        identical immutable params, so routing never affects tokens
+        (pinned by the ``-replica`` equivalence cells)."""
+        copies = self.stage_copies(k)
+        if len(copies) == 1:
+            return copies[0]
+        served = self._served[k]
+        tgt = min(copies, key=lambda n: (served.get(n, 0), copies.index(n)))
+        served[tgt] = served.get(tgt, 0) + 1
+        return tgt
+
     def _chain_prefill(self, batch, caches):
         x = side = None
         for k in range(self.n_stages):
             self._require_up(k)
+            self._route(k)
             bk = self._stage_batch(k, batch, side)
             x, caches[k], s = _quiet(self._prefill_fns[k],
                                      self.stage_params[k], x, caches[k], bk)
@@ -322,6 +385,7 @@ class PipelineServeEngine:
         tel = self.telemetry
         for k in range(self.n_stages):
             self._require_up(k)
+            self._route(k)
             if tel is None:
                 x, caches[k] = _quiet(self._decode_fns[k],
                                       self.stage_params[k], x, caches[k],
@@ -360,11 +424,14 @@ class PipelineServeEngine:
         """Greedy-decode a synchronized batch for ``gen_len`` tokens
         through the stage pipeline; np tokens (B, gen_len) int32.
 
-        kill: optional ``{"after_step": s, "stage": k}`` — stage ``k`` is
-        killed after ``s`` completed decode steps (0 = right after
-        prefill); the engine restores it onto a spare and replays the
-        in-flight batch before continuing, so the stream is identical to
-        an undisturbed run.
+        kill: optional ``{"after_step": s, "stage": k}`` — or a *list* of
+        such specs — stage ``k`` loses a copy after ``s`` completed decode
+        steps (0 = right after prefill); an optional ``"replica"`` key
+        names the specific copy node to kill (default: the primary).
+        Killing a copy with survivors is absorbed with zero restore; once
+        a stage has no copies left the engine restores it onto a spare
+        and replays the in-flight batch before continuing, so the stream
+        is identical to an undisturbed run either way.
 
         replan: optional ``{"after_step": s, "cluster": state, ...}`` —
         after ``s`` completed decode steps, run ``replan_live`` against
@@ -375,6 +442,8 @@ class PipelineServeEngine:
         tokens = batch["tokens"]
         b, prompt_len = tokens.shape
         self._check_fit(prompt_len, gen_len)
+        kills = ([] if kill is None
+                 else [kill] if isinstance(kill, dict) else list(kill))
         if self.down:                      # e.g. stage killed between calls
             for k in sorted(self.down):
                 self.restore_stage(k)
@@ -383,8 +452,10 @@ class PipelineServeEngine:
         outs = [toks]
         cur = prompt_len
         for step in range(gen_len - 1):
-            if kill is not None and kill["after_step"] == step:
-                self.kill_stage(kill["stage"])
+            for spec in kills:
+                if spec["after_step"] == step:
+                    self.kill_stage(spec["stage"],
+                                    replica=spec.get("replica"))
             if self.down:
                 for k in sorted(self.down):
                     self.restore_stage(k)
@@ -426,13 +497,51 @@ class PipelineServeEngine:
         t = time.perf_counter() - self._t0  # repro: ignore[determinism]
         self.events.append((t, msg))
 
-    def kill_stage(self, k: int) -> None:
-        """Kill stage ``k``'s executor: params and caches are lost, exactly
-        what the emulator models when the hosting node dies."""
+    def kill_stage(self, k: int, replica: int | None = None) -> None:
+        """Kill one copy of stage ``k`` (default: the primary).
+
+        With surviving copies this is a **zero-restore** event
+        (:class:`ReplicaLost`, appended to ``incidents``): the survivors
+        absorb the dead copy's share immediately — no checkpoint read, no
+        replay, the stage never enters ``down`` (caches are request-owned
+        in this runtime, so nothing is lost with the node).  Killing the
+        primary promotes the first replica.  Only when the *last* copy
+        dies does the stage go down, exactly the emulator's semantics —
+        params and caches lost, checkpoint-restore-replay required."""
         self._require_up(k)
+        copies = self.stage_copies(k)
+        node = copies[0] if replica is None else replica
+        if node not in copies:
+            raise ValueError(f"stage {k}: node {node} hosts no copy of it "
+                             f"(copies: {copies})")
+        if len(copies) > 1:
+            promoted = node == self.node_of_stage[k]
+            if promoted:
+                self.node_of_stage[k] = self.replica_nodes[k].pop(0)
+            else:
+                self.replica_nodes[k].remove(node)
+            self._served[k].pop(node, None)
+            survivors = tuple(self.stage_copies(k))
+            self.incidents.append(ReplicaLost(k, node, survivors, promoted))
+            self._note(f"stage {k}: replica on node {node} LOST "
+                       f"({len(survivors)} survivor(s), no restore"
+                       + (", replica promoted to primary)" if promoted
+                          else ")"))
+            return
         self.down.add(k)
         self.stage_params[k] = None
         self._note(f"node {self.node_of_stage[k]} FAILED (stage {k})")
+
+    def kill_replica(self, k: int, node: int | None = None) -> None:
+        """Kill a warm replica of stage ``k`` (never the primary; default:
+        the first replica).  Always a zero-restore event."""
+        if not self.replica_nodes[k]:
+            raise ValueError(f"stage {k} has no replicas to kill")
+        tgt = self.replica_nodes[k][0] if node is None else node
+        if tgt not in self.replica_nodes[k]:
+            raise ValueError(f"stage {k}: node {tgt} is not one of its "
+                             f"replicas {self.replica_nodes[k]}")
+        self.kill_stage(k, replica=tgt)
 
     def _acquire_spare(self, k: int, node: int | None = None) -> int:
         """Pick the spare node stage ``k`` would restore/migrate onto,
@@ -505,8 +614,21 @@ class PipelineServeEngine:
         :class:`StageDegraded` is raised (degraded placement, no outage).
         Stage caches stay with the old executor, so callers must replay
         in-flight work (same deterministic mechanism as after a kill).
+
+        Migrating onto one of the stage's **own warm replicas** is a
+        *promotion*: a pure role swap (the replica already holds the
+        params and has been serving its share) — no checkpoint read, no
+        spare spent, and the vacated primary becomes the replica.
         Returns the new node id."""
         self._require_up(k)
+        if node is not None and node in self.replica_nodes[k]:
+            old = self.node_of_stage[k]
+            self.replica_nodes[k] = [old if x == node else x
+                                     for x in self.replica_nodes[k]]
+            self.node_of_stage[k] = node
+            self._note(f"stage {k}: PROMOTED replica {old} -> {node} "
+                       "(role swap with warm replica, no checkpoint read)")
+            return node
         try:
             target = self._acquire_spare(k, node)
             restored = self._restore_params(k)
@@ -527,39 +649,75 @@ class PipelineServeEngine:
                    f"node {old} returned to spare pool)")
         return target
 
+    def add_replica(self, k: int, node: int | None = None) -> int:
+        """Stand up an extra warm replica of stage ``k`` on a spare node
+        (capacity add — the executor half of a
+        :class:`~repro.core.replan.ReplicaAdd` replan move).
+
+        The new executor is stood up first: spare acquisition and the
+        checkpoint read both run under the engine's bounded retry policy;
+        on exhaustion nothing changes and :class:`StageDegraded` is
+        raised (the stage keeps serving single-copy — degraded capacity,
+        no outage).  Returns the replica's node id."""
+        self._require_up(k)
+        try:
+            target = self._acquire_spare(k, node)
+            self._restore_params(k)    # the new executor's param read
+        except (StageDown, RetryExhausted) as e:
+            attempts = getattr(e, "attempts", ())
+            self._note(f"stage {k}: replica add ABANDONED ({e}) — "
+                       "serving without the extra copy")
+            raise StageDegraded(
+                f"stage {k}: replica add failed: {e}", attempts) from e
+        self.spares.remove(target)
+        self.replica_nodes[k].append(target)
+        self._note(f"stage {k}: replica ADDED on node {target} "
+                   f"(copies: {self.stage_copies(k)})")
+        return target
+
     # -- closed-loop replanning ---------------------------------------------
 
     def current_plan(self):
         """The plan as currently deployed: original IR with the live node
         assignment and spare pool substituted in."""
-        stages = [dataclasses.replace(s, node=self.node_of_stage[i])
+        stages = [dataclasses.replace(s, node=self.node_of_stage[i],
+                                      replicas=tuple(self.replica_nodes[i]))
                   for i, s in enumerate(self.plan.stages)]
         return dataclasses.replace(self.plan, stages=tuple(stages),
                                    spare_nodes=tuple(self.spares))
 
     def replan_live(self, state, *, max_moves: int = 1,
-                    min_gain_s: float = 0.0):
+                    min_gain_s: float = 0.0, allow_replicas: bool = False):
         """Close the telemetry -> replan -> migrate loop once.
 
         ``state``: a :class:`~repro.serve.telemetry.ClusterState` (folds
         this engine's pending telemetry samples first) or a plain
         ClusterGraph.  Runs the bounded ``incremental_replan`` against the
-        estimate and executes the resulting stage moves via
-        ``migrate_stage``; a move that fails (:class:`StageDegraded`) is
-        skipped, the rest still execute.  Returns the ReplanResult with
-        ``moves`` trimmed to the moves actually executed.  Callers must
-        replay in-flight work when ``result.changed``."""
-        from repro.core.replan import incremental_replan
+        estimate and executes the resulting diffs: ``StageMove`` via
+        ``migrate_stage`` (a move onto the stage's own replica is a
+        promotion — no checkpoint read) and, with ``allow_replicas``,
+        ``ReplicaAdd`` via ``add_replica`` (spend a spare on capacity
+        instead of migrating); a diff that fails
+        (:class:`StageDegraded`) is skipped, the rest still execute.
+        Returns the ReplanResult with ``moves`` trimmed to the moves
+        actually executed.  Callers must replay in-flight work for
+        ``result.migrated_stages`` (replica adds are capacity-only and
+        need no replay)."""
+        from repro.core.replan import ReplicaAdd, incremental_replan
         if self.telemetry is not None and hasattr(state, "fold"):
             state.fold(self.telemetry, self.node_of_stage,
                        self.plan.dispatcher_node)
         est = state.as_cluster() if hasattr(state, "as_cluster") else state
         res = incremental_replan(self.current_plan(), est,
-                                 max_moves=max_moves, min_gain_s=min_gain_s)
+                                 max_moves=max_moves, min_gain_s=min_gain_s,
+                                 allow_replicas=allow_replicas)
         moved = []
         for mv in res.moves:
             try:
-                self.migrate_stage(mv.stage, mv.new_node)
+                if isinstance(mv, ReplicaAdd):
+                    self.add_replica(mv.stage, mv.node)
+                else:
+                    self.migrate_stage(mv.stage, mv.new_node)
             except StageDegraded:
                 continue
             moved.append(mv)

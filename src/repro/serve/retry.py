@@ -21,11 +21,31 @@ from dataclasses import dataclass
 @dataclass(frozen=True)
 class RetryPolicy:
     """attempts total tries; delay before retry i is
-    ``min(base_delay_s * backoff**i, max_delay_s)``."""
+    ``min(base_delay_s * backoff**i, max_delay_s)``.
+
+    Fields are validated at construction: a policy with 0 attempts never
+    calls its target, a backoff < 1 shrinks delays instead of backing
+    off, and negative delays are nonsense — all silent misconfigurations
+    on the fault path, where they would only surface mid-outage."""
     attempts: int = 3
     base_delay_s: float = 0.05
     max_delay_s: float = 2.0
     backoff: float = 2.0
+
+    def __post_init__(self):
+        if self.attempts < 1:
+            raise ValueError(
+                f"RetryPolicy.attempts must be >= 1 (a policy that never "
+                f"tries cannot succeed), got {self.attempts}")
+        if self.base_delay_s < 0.0 or self.max_delay_s < 0.0:
+            raise ValueError(
+                f"RetryPolicy delays must be non-negative, got "
+                f"base_delay_s={self.base_delay_s}, "
+                f"max_delay_s={self.max_delay_s}")
+        if self.backoff < 1.0:
+            raise ValueError(
+                f"RetryPolicy.backoff must be >= 1.0 (delays must not "
+                f"shrink between attempts), got {self.backoff}")
 
     def delay_s(self, attempt: int) -> float:
         return min(self.base_delay_s * self.backoff ** attempt,

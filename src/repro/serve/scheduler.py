@@ -124,26 +124,32 @@ class SlotScheduler:
         return leaf_batch_axes(shapes)
 
     def run(self, requests: list[Request], engine: str = "fast",
-            kill: dict | None = None, replan: dict | None = None):
+            kill: dict | list | None = None, replan: dict | None = None):
         """Serve `requests` to completion; returns (streams, stats) with
         streams[i] the i-th request's np int32 greedy tokens (gen_len,).
 
-        kill: optional ``{"after_step": s, "stage": k}`` — only meaningful
-        when the engine is a ``PipelineServeEngine``: stage ``k`` is killed
-        after the ``s``-th batched decode step, then restored from its
-        checkpoint onto a spare node with every in-flight request replayed
-        into its slot (see ``PipelineServeEngine.recover_and_replay``).
-        The streams stay identical to an undisturbed run.
+        kill: optional ``{"after_step": s, "stage": k}`` — or a list of
+        such specs — only meaningful when the engine is a
+        ``PipelineServeEngine``: stage ``k`` loses a copy after the
+        ``s``-th batched decode step (an optional ``"replica"`` key names
+        the copy node; default the primary).  A kill with surviving warm
+        replicas is absorbed with **zero restore** — no checkpoint read,
+        no replay.  Only when a stage's last copy dies is it restored
+        from its checkpoint onto a spare node with every in-flight
+        request replayed into its slot (see
+        ``PipelineServeEngine.recover_and_replay``).  The streams stay
+        identical to an undisturbed run either way.
 
         replan: optional ``{"after_step": s, "cluster": state, ...}`` —
         only meaningful for a ``PipelineServeEngine``: after the ``s``-th
         batched decode step, ``replan_live`` runs against ``state`` (a
         ClusterState or ClusterGraph; optional ``max_moves`` /
-        ``min_gain_s``), executes the bounded plan diff as live
-        migrations, and replays every in-flight request into its slot
-        (``migrate_and_replay``).  Streams stay identical to an
-        undisturbed run — the ``-replan`` cells of the serve equivalence
-        fixture pin this."""
+        ``min_gain_s`` / ``allow_replicas``), executes the bounded plan
+        diff as live migrations and replica adds, and replays every
+        in-flight request into its slot for the stages whose primary
+        moved (``migrate_and_replay``; replica adds are capacity-only).
+        Streams stay identical to an undisturbed run — the ``-replan``
+        cells of the serve equivalence fixture pin this."""
         if not requests:
             return [], {"wall_s": 0.0, "decode_steps": 0,
                         "slot_utilization": 0.0}
@@ -195,7 +201,10 @@ class SlotScheduler:
         step_maps: list[dict[int, int]] = []  # per-step slot -> rid
         n_steps = busy = 0
 
-        killed = replanned = False
+        kills = ([] if kill is None
+                 else [kill] if isinstance(kill, dict) else list(kill))
+        fired = [False] * len(kills)
+        replanned = False
         while next_idx < len(requests) or active:
             while free and next_idx < len(requests):
                 r = requests[next_idx]
@@ -218,33 +227,41 @@ class SlotScheduler:
                 else:
                     free.append(slot)
                     free.sort()
-            if (kill is not None and pipeline and not killed
-                    and n_steps >= kill["after_step"]):
-                # the stage dies after `after_step` completed batched decode
-                # steps (0 = right after the first admissions): params and
-                # cache banks are lost, the engine restores from checkpoint
-                # and replays every in-flight request into its slot
-                killed = True
-                eng.kill_stage(kill["stage"])
-                inflight = [(s, st[0], st[1])
-                            for s, st in sorted(active.items())]
-                cache, slot_tokens = eng.recover_and_replay(
-                    inflight, cache, slot_tokens, proto_batch)
+            if pipeline and not all(fired):
+                # a copy dies after `after_step` completed batched decode
+                # steps (0 = right after the first admissions); with warm
+                # replicas the survivors absorb it (zero restore), and
+                # only a last-copy loss costs a checkpoint restore with
+                # every in-flight request replayed into its slot
+                hit = False
+                for i, spec in enumerate(kills):
+                    if not fired[i] and n_steps >= spec["after_step"]:
+                        fired[i] = True
+                        hit = True
+                        eng.kill_stage(spec["stage"],
+                                       replica=spec.get("replica"))
+                if hit and eng.down:
+                    inflight = [(s, st[0], st[1])
+                                for s, st in sorted(active.items())]
+                    cache, slot_tokens = eng.recover_and_replay(
+                        inflight, cache, slot_tokens, proto_batch)
             if (replan is not None and pipeline and not replanned
                     and n_steps >= replan["after_step"]):
                 # telemetry-driven live replan: execute the bounded plan
-                # diff as migrations, then replay every in-flight request
-                # into its slot on the moved stages' fresh banks
+                # diff as migrations / replica adds, then replay every
+                # in-flight request into its slot on the moved stages'
+                # fresh banks (replica adds need no replay)
                 replanned = True
                 res = eng.replan_live(
                     replan["cluster"],
                     max_moves=replan.get("max_moves", 1),
-                    min_gain_s=replan.get("min_gain_s", 0.0))
-                if res.changed:
+                    min_gain_s=replan.get("min_gain_s", 0.0),
+                    allow_replicas=replan.get("allow_replicas", False))
+                if res.migrated_stages:
                     inflight = [(s, st[0], st[1])
                                 for s, st in sorted(active.items())]
                     cache, slot_tokens = eng.migrate_and_replay(
-                        [mv.stage for mv in res.moves], inflight, cache,
+                        list(res.migrated_stages), inflight, cache,
                         slot_tokens, proto_batch)
             if not active:
                 continue

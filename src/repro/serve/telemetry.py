@@ -82,6 +82,7 @@ class TelemetryStream:
         self.transfer_b = [Ring(capacity) for _ in range(n_stages)]
         self.queue_depth = Ring(capacity)
         self._pending: list[tuple[int, float, float]] = []
+        self.dropped = 0                 # out-of-range samples discarded
 
     def now(self) -> float:
         return self._clock()
@@ -91,7 +92,14 @@ class TelemetryStream:
 
     def record_transfer(self, stage: int, nbytes: float,
                         seconds: float) -> None:
-        """One boundary handoff leaving ``stage`` (k -> k+1)."""
+        """One boundary handoff leaving ``stage`` (k -> k+1).
+
+        A stage index outside ``[0, n_stages)`` (a recorder racing a plan
+        change) is dropped and counted in ``dropped`` rather than
+        corrupting the rings or raising on the serving hot path."""
+        if not 0 <= stage < self.n_stages:
+            self.dropped += 1
+            return
         self.transfer_s[stage].append(seconds)
         self.transfer_b[stage].append(nbytes)
         self._pending.append((stage, float(nbytes), float(seconds)))
@@ -133,6 +141,7 @@ class ClusterState:
         self.bw = cluster.bw.astype(np.float64).copy()
         self.compute_scale = np.asarray(cluster.compute_scale,
                                         np.float64).copy()
+        self.dropped = 0                 # out-of-range samples discarded
 
     def _ewma(self, est: float, sample: float) -> float:
         if est > 0.0:
@@ -160,12 +169,19 @@ class ClusterState:
 
         ``node_of_stage[k]`` hosts stage k; a transfer leaving stage k
         lands on stage k+1's node (the pipeline hop the sample measured).
-        Returns the number of samples folded."""
+        A sample whose stage index falls outside the current mapping (a
+        recording that outlived a plan change) is dropped and counted in
+        ``dropped`` instead of raising.  Returns the number of samples
+        drained."""
         samples = telemetry.drain_transfers()
+        n = len(node_of_stage)
         for stage, nbytes, seconds in samples:
-            src = (dispatcher_node if stage < 0 else node_of_stage[stage])
-            if stage + 1 >= len(node_of_stage):
+            if stage < -1 or stage >= n:
+                self.dropped += 1
                 continue
+            if stage + 1 >= n:
+                continue               # last stage: no downstream hop
+            src = (dispatcher_node if stage < 0 else node_of_stage[stage])
             self.observe_bandwidth(src, node_of_stage[stage + 1], nbytes,
                                    seconds)
         return len(samples)

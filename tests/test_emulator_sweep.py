@@ -148,3 +148,37 @@ class TestEvaluatePlans:
                               n_batches=20, duration_s=200.0,
                               fault_model=model)
         assert rows[0]["completion_rate"] < 1.0
+
+
+class TestSweepPlanReplication:
+    def test_replication_factor_grid(self, setup):
+        from repro.core.stageplan import from_seifer
+        from repro.emulator import sweep_plan
+        cluster, plan = setup
+        xp = from_seifer(plan, cluster)
+        cells = sweep_plan(xp, cluster, replication_factors=(1, 2),
+                           seeds=(0, 1), arrival_rates=(1.0,), n_batches=30)
+        assert len(cells) == 4                       # factor-major order
+        assert [c["replication_factor"] for c in cells] == [1, 1, 2, 2]
+        # R=1 must be the plan's own unreplicated cells, bit-identical
+        plain = sweep_plan(xp, cluster, seeds=(0, 1), arrival_rates=(1.0,),
+                           n_batches=30)
+        for a, b in zip(cells[:2], plain):
+            assert {k: v for k, v in a.items()
+                    if k != "replication_factor"} == b
+
+    def test_plan_own_replicas_passed_through(self, setup):
+        from repro.core import replicate_bottlenecks
+        from repro.core.stageplan import from_seifer
+        from repro.emulator import sweep_plan
+        cluster, plan = setup
+        xp = from_seifer(plan, cluster)
+        rp = replicate_bottlenecks(xp, cluster, budget=1, max_replicas=2)
+        # replicated cells run on the event engine: JSQ splits service
+        # across the copies, so the metrics must differ from single-copy
+        a = sweep_plan(xp, cluster, seeds=(0,), arrival_rates=(1.0,),
+                       n_batches=30)
+        b = sweep_plan(rp, cluster, seeds=(0,), arrival_rates=(1.0,),
+                       n_batches=30)
+        assert a[0]["completed"] == b[0]["completed"] == 30
+        assert a[0]["mean_e2e_s"] != b[0]["mean_e2e_s"]

@@ -104,7 +104,8 @@ def test_ir_roundtrip_preserves_emulator_fixture(sid):
     with open(EMU_FIXTURE) as f:
         fix = json.load(f)
     sc = {s["id"]: s for s in emu_eq.scenarios()}[sid]
-    cluster, nodes, boundary, flops, faults, cfg = emu_eq.build_scenario(sc)
+    (cluster, nodes, boundary, flops, faults, cfg,
+     _reps) = emu_eq.build_scenario(sc)
     graph = emu_eq.PAPER_MODELS[sc["model"]]()
     plan = partition_and_place(graph, emu_eq._make_cluster(sc["cluster"]),
                                sc["cap_mb"] * 1e6, n_classes=3, rng=0)
@@ -123,7 +124,7 @@ def test_ir_roundtrip_preserves_emulator_fixture(sid):
 
 def test_raw_tuple_emulator_path_deprecated_but_working():
     sc = {s["id"]: s for s in emu_eq.scenarios()}["ff/ring5/ResNet50/cap64"]
-    cluster, nodes, boundary, flops, _, cfg = emu_eq.build_scenario(sc)
+    cluster, nodes, boundary, flops, _, cfg, _reps = emu_eq.build_scenario(sc)
     ir = StageExecutionPlan(
         stages=[StageSpec(k, (), nodes[k + 1], in_bytes=boundary[k],
                           compute_flops=flops[k])
@@ -421,3 +422,152 @@ def test_replan_live_noop_without_pressure(tmp_path):
                               ckpt_dir=tmp_path / "c", cluster=cluster)
     res = eng.replan_live(ClusterState(cluster))
     assert not res.changed and eng.node_of_stage == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# replicated stages: warm-spare failover, JSQ routing, graceful degradation
+# ---------------------------------------------------------------------------
+
+from repro.serve import ReplicaLost  # noqa: E402
+
+
+def _replicated_engine(tmp_path, replicas={1: (10,)}, spares=(90, 91)):
+    cfg = get_config("granite-3-2b", "smoke").replace(n_layers=4)
+    params = init_params(cfg, KEY)
+    plan = from_block_cuts(cfg, [2], spare_nodes=spares, replicas=replicas)
+    eng = PipelineServeEngine(cfg, params, plan, max_len=32, kv_block=16,
+                              ckpt_dir=tmp_path / "ckpt")
+    return cfg, eng
+
+
+def test_replica_kill_is_zero_restore(tmp_path):
+    cfg, eng = _replicated_engine(tmp_path)
+    batch = make_batch(cfg, 1, 8, 3)
+    clean = eng.generate(batch, 6)
+    cfg2, eng2 = _replicated_engine(tmp_path)
+    toks = eng2.generate(batch, 6, kill={"after_step": 2, "stage": 1,
+                                         "replica": 10})
+    np.testing.assert_array_equal(clean, toks)
+    msgs = [m for _, m in eng2.events]
+    assert any("LOST" in m and "no restore" in m for m in msgs)
+    # the whole point: no restore, no replay, stage never down
+    assert not any("rescheduled" in m or "replayed" in m or "FAILED" in m
+                   for m in msgs)
+    assert not eng2.down
+    assert eng2.incidents == [ReplicaLost(1, 10, (2,), promoted=False)]
+    assert eng2.spares == [90, 91]              # no spare spent
+    assert eng2.node_of_stage == [1, 2]
+
+
+def test_primary_kill_promotes_replica(tmp_path):
+    cfg, eng = _replicated_engine(tmp_path)
+    batch = make_batch(cfg, 1, 8, 3)
+    clean = eng.generate(batch, 6)
+    cfg2, eng2 = _replicated_engine(tmp_path)
+    toks = eng2.generate(batch, 6, kill={"after_step": 2, "stage": 1})
+    np.testing.assert_array_equal(clean, toks)
+    assert eng2.incidents == [ReplicaLost(1, 2, (10,), promoted=True)]
+    assert eng2.node_of_stage == [1, 10]        # replica took over
+    assert eng2.replica_nodes[1] == []
+    assert not eng2.down and eng2.spares == [90, 91]
+
+
+def test_last_copy_kill_falls_back_to_restore(tmp_path):
+    cfg, eng = _replicated_engine(tmp_path)
+    batch = make_batch(cfg, 1, 8, 3)
+    clean = eng.generate(batch, 6)
+    cfg2, eng2 = _replicated_engine(tmp_path)
+    toks = eng2.generate(batch, 6, kill=[
+        {"after_step": 1, "stage": 1, "replica": 10},   # zero restore
+        {"after_step": 3, "stage": 1},                  # last copy dies
+    ])
+    np.testing.assert_array_equal(clean, toks)
+    msgs = [m for _, m in eng2.events]
+    assert any("LOST" in m for m in msgs)               # first kill absorbed
+    assert any("FAILED" in m for m in msgs)             # last copy
+    assert any("rescheduled" in m for m in msgs)        # checkpoint restore
+    assert any("replayed" in m for m in msgs)
+    assert eng2.node_of_stage[1] == 90                  # onto the spare
+    assert not eng2.down
+
+
+def test_jsq_routing_spreads_evenly_and_deterministically(tmp_path):
+    cfg, eng = _replicated_engine(tmp_path)
+    batch = make_batch(cfg, 1, 8, 3)
+    eng.generate(batch, 8)
+    served = eng._served[1]
+    assert set(served) == {2, 10}
+    assert abs(served[2] - served[10]) <= 1     # least-served round-robin
+    cfg2, eng2 = _replicated_engine(tmp_path)
+    eng2.generate(batch, 8)
+    assert eng2._served[1] == served            # deterministic routing
+    assert eng._served[0] == {}                 # single-copy: no counters
+
+
+def test_migrate_onto_own_replica_is_promotion(tmp_path):
+    cfg, eng = _replicated_engine(tmp_path)
+    batch = make_batch(cfg, 1, 8, 3)
+    clean = eng.generate(batch, 6)
+    tgt = eng.migrate_stage(1, 10)
+    assert tgt == 10
+    assert eng.node_of_stage == [1, 10]
+    assert eng.replica_nodes[1] == [2]          # vacated primary demoted
+    assert eng.spares == [90, 91]               # no spare consumed
+    assert any("PROMOTED" in m and "no checkpoint read" in m
+               for _, m in eng.events)
+    np.testing.assert_array_equal(clean, eng.generate(batch, 6))
+
+
+def test_add_replica_spends_spare(tmp_path):
+    cfg, eng = _replicated_engine(tmp_path, replicas=None)
+    batch = make_batch(cfg, 1, 8, 3)
+    clean = eng.generate(batch, 6)
+    node = eng.add_replica(1)
+    assert node == 90 and eng.spares == [91]
+    assert eng.replica_nodes[1] == [90]
+    assert any("replica ADDED" in m for _, m in eng.events)
+    # the new copy makes the next kill a zero-restore event
+    toks = eng.generate(batch, 6, kill={"after_step": 2, "stage": 1})
+    np.testing.assert_array_equal(clean, toks)
+    assert eng.incidents and eng.incidents[0].promoted
+    # explicit non-spare target is a bug, not a blip
+    with pytest.raises(ValueError):
+        eng.add_replica(0, node=12345)
+
+
+def test_current_plan_and_replan_carry_replicas(tmp_path):
+    cfg, eng = _replicated_engine(tmp_path)
+    assert eng.current_plan().stages[1].replicas == (10,)
+    eng.kill_replica(1)
+    assert eng.current_plan().stages[1].replicas == ()
+    assert eng.incidents == [ReplicaLost(1, 10, (2,), promoted=False)]
+
+
+def test_replica_node_collisions_rejected(tmp_path):
+    cfg = get_config("granite-3-2b", "smoke").replace(n_layers=4)
+    params = init_params(cfg, KEY)
+    for bad in ({1: (2,)},      # replica on another stage's primary
+                {1: (90,)},     # replica on a spare
+                {0: (10,), 1: (10,)}):   # same node twice
+        plan = from_block_cuts(cfg, [2], spare_nodes=(90,), replicas=bad)
+        with pytest.raises(ValueError, match="replica node"):
+            PipelineServeEngine(cfg, params, plan, max_len=32, kv_block=16,
+                                ckpt_dir=tmp_path / "ckpt")
+
+
+def test_scheduler_replica_kill_needs_no_restore(tmp_path):
+    from repro.serve import Request, SlotScheduler
+    cfg, eng = _replicated_engine(tmp_path)
+    reqs = [Request(rid=i,
+                    tokens=np.asarray(make_batch(cfg, 1, 8, i)["tokens"]),
+                    gen_len=g, extras={}) for i, g in enumerate([6, 5, 4])]
+    cfg2, eng2 = _replicated_engine(tmp_path)
+    clean, _ = SlotScheduler(eng2, 2).run(reqs)
+    streams, _ = SlotScheduler(eng, 2).run(
+        reqs, kill=[{"after_step": 2, "stage": 1, "replica": 10}])
+    for a, b in zip(clean, streams):
+        np.testing.assert_array_equal(a, b)
+    msgs = [m for _, m in eng.events]
+    assert any("LOST" in m for m in msgs)
+    assert not any("rescheduled" in m or "replayed" in m for m in msgs)
+    assert not eng.down

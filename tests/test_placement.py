@@ -170,3 +170,88 @@ class TestKPathMatching:
         rand_nodes = list(rng.choice(14, size=m + 1, replace=False))
         rand_beta = evaluate(sizes, [int(v) for v in rand_nodes], cluster).bottleneck_s
         assert res.bottleneck_s <= rand_beta * 1.75  # matching is near-always better
+
+
+class TestReplicateBottlenecks:
+    """Planner pass spending unused spares on warm replicas of the
+    costliest stages (repro.core.placement.replicate_bottlenecks)."""
+
+    @staticmethod
+    def _plan(spares=(3, 4, 5), replicas=None):
+        from repro.configs import get_config
+        from repro.core.stageplan import from_block_cuts
+        from repro.models.config import SHAPES
+        cfg = get_config("granite-3-2b", "smoke").replace(n_layers=4)
+        return from_block_cuts(cfg, [2], nodes=(0, 1, 2),
+                               spare_nodes=spares,
+                               shape=SHAPES["decode_32k"],
+                               replicas=replicas)
+
+    @staticmethod
+    def _uniform_cluster(n=6, scale_overrides=()):
+        bw = np.full((n, n), 1e6)
+        np.fill_diagonal(bw, 0.0)
+        scale = np.ones(n)
+        for nd, v in scale_overrides:
+            scale[nd] = v
+        return ClusterGraph(bw=bw, compute_scale=scale)
+
+    def test_spends_spares_on_costliest_stage(self):
+        from repro.core.placement import replicate_bottlenecks
+        from repro.core.replan import effective_stage_costs
+        cl = self._uniform_cluster(scale_overrides=[(2, 0.2)])
+        plan = self._plan()
+        out = replicate_bottlenecks(plan, cl, max_replicas=2, budget=1)
+        # stage 1 (slow node 2) is the bottleneck and gets the one copy
+        assert len(out.stages[1].replicas) == 1
+        assert out.stages[0].replicas == ()
+        assert out.stages[1].replicas[0] in plan.spare_nodes
+        assert set(out.spare_nodes) == \
+            set(plan.spare_nodes) - set(out.stages[1].replicas)
+        before = effective_stage_costs(plan, cl)
+        after = effective_stage_costs(out, cl)
+        assert after[1] < before[1]
+        # with no budget the pass keeps spending the whole spare pool
+        full = replicate_bottlenecks(plan, cl, max_replicas=2)
+        assert sum(len(s.replicas) for s in full.stages) == 2
+        assert len(full.spare_nodes) == 1
+
+    def test_max_replicas_one_is_noop(self):
+        from repro.core.placement import replicate_bottlenecks
+        plan = self._plan()
+        out = replicate_bottlenecks(plan, self._uniform_cluster(),
+                                    max_replicas=1)
+        assert [s.replicas for s in out.stages] == [(), ()]
+        assert out.spare_nodes == plan.spare_nodes
+
+    def test_budget_and_keep_spares_bound_the_spend(self):
+        from repro.core.placement import replicate_bottlenecks
+        cl = self._uniform_cluster()
+        plan = self._plan(spares=(3, 4, 5))
+        one = replicate_bottlenecks(plan, cl, budget=1, max_replicas=3)
+        assert sum(len(s.replicas) for s in one.stages) == 1
+        kept = replicate_bottlenecks(plan, cl, keep_spares=2,
+                                     max_replicas=3)
+        assert len(kept.spare_nodes) >= 2
+
+    def test_deterministic_and_input_untouched(self):
+        from repro.core.placement import replicate_bottlenecks
+        cl = self._uniform_cluster(scale_overrides=[(1, 0.5)])
+        plan = self._plan()
+        a = replicate_bottlenecks(plan, cl)
+        b = replicate_bottlenecks(plan, cl)
+        assert [s.replicas for s in a.stages] == \
+            [s.replicas for s in b.stages]
+        assert a.spare_nodes == b.spare_nodes
+        assert [s.replicas for s in plan.stages] == [(), ()]  # untouched
+        assert plan.spare_nodes == (3, 4, 5)
+
+    def test_replica_picks_best_connected_spare(self):
+        from repro.core.placement import replicate_bottlenecks
+        # spare 4 has a fat pipe to stage 1's upstream (node 1); spare 3
+        # does not — the pass must prefer 4 for the stage-1 replica
+        cl = self._uniform_cluster(scale_overrides=[(2, 0.2)])
+        cl.bw[1, 4] = cl.bw[4, 1] = 5e6
+        out = replicate_bottlenecks(self._plan(spares=(3, 4)), cl,
+                                    max_replicas=2, budget=1)
+        assert out.stages[1].replicas == (4,)

@@ -7,7 +7,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.cluster import ClusterGraph
-from repro.core.replan import incremental_replan, stage_costs
+from repro.core.replan import (ReplicaAdd, StageMove, effective_stage_costs,
+                               incremental_replan, stage_costs)
 from repro.core.stageplan import from_block_cuts
 from repro.emulator import DriftingCluster, compare_replan
 
@@ -25,10 +26,10 @@ def _cluster(n, bw_overrides=(), scale_overrides=()):
     return ClusterGraph(bw=bw, compute_scale=scale)
 
 
-def _plan(cuts=(2,), nodes=(0, 1, 2), spares=(3, 4)):
+def _plan(cuts=(2,), nodes=(0, 1, 2), spares=(3, 4), replicas=None):
     from repro.models.config import SHAPES
     return from_block_cuts(CFG, list(cuts), nodes=nodes, spare_nodes=spares,
-                           shape=SHAPES["decode_32k"])
+                           shape=SHAPES["decode_32k"], replicas=replicas)
 
 
 class TestIncrementalReplan:
@@ -93,6 +94,94 @@ class TestIncrementalReplan:
         res = incremental_replan(plan, cl)
         assert max(stage_costs(plan, cl)) == res.bottleneck_before_s
         assert max(stage_costs(res.plan, cl)) == res.bottleneck_after_s
+
+
+class TestEffectiveStageCosts:
+    def test_unreplicated_identical_to_stage_costs(self):
+        # bit-identical, not just close: the R=1 path must execute the
+        # exact same float ops (1/(1/x) is not an IEEE identity)
+        plan, cl = _plan(), _cluster(5, scale_overrides=[(2, 0.3)])
+        assert effective_stage_costs(plan, cl) == stage_costs(plan, cl)
+
+    def test_replica_lowers_effective_cost(self):
+        cl = _cluster(6)
+        single = _plan(spares=(3, 4, 5))
+        repl = _plan(spares=(4, 5), replicas={1: (3,)})
+        cs, cr = stage_costs(single, cl), effective_stage_costs(repl, cl)
+        assert cr[1] < cs[1]                     # copies drain in parallel
+        assert cr[0] == cs[0]                    # unreplicated stage same
+
+    def test_dead_copy_contributes_nothing(self):
+        # replica on a zero-compute node: effective cost falls back to
+        # (nearly) the healthy copy alone, never to inf
+        cl = _cluster(6, scale_overrides=[(3, 0.0)])
+        repl = _plan(spares=(4, 5), replicas={1: (3,)})
+        cs = effective_stage_costs(repl, cl)
+        assert np.isfinite(cs[1])
+
+
+class TestReplicaAwareReplan:
+    def test_allow_replicas_spends_spare_on_bottleneck(self):
+        # stage 1's node at 30% compute: an extra copy on a healthy spare
+        # beats migrating (the slow copy keeps contributing)
+        cl = _cluster(5, scale_overrides=[(2, 0.3)])
+        off = incremental_replan(_plan(), cl, max_moves=1)
+        on = incremental_replan(_plan(), cl, max_moves=1,
+                                allow_replicas=True)
+        assert all(isinstance(mv, StageMove) for mv in off.moves)
+        assert on.moves and isinstance(on.moves[0], ReplicaAdd)
+        assert on.moves[0].stage == 1
+        assert on.bottleneck_after_s < off.bottleneck_after_s
+        # the spare was spent on the replica, not a migration
+        assert on.plan.stages[1].replicas == (on.moves[0].node,)
+        assert on.moves[0].node not in on.plan.spare_nodes
+
+    def test_replica_add_gated_by_flag(self):
+        cl = _cluster(5, scale_overrides=[(2, 0.3)])
+        res = incremental_replan(_plan(), cl, max_moves=2)
+        assert all(isinstance(mv, StageMove) for mv in res.moves)
+
+    def test_promotion_preferred_over_spare_move(self):
+        # 3 stages on nodes 1,2,3 with stage 1 replicated on node 5; the
+        # primary's outgoing link 2->3 collapses.  Promoting the replica
+        # re-prices the downstream hop from node 5 — same gain as moving
+        # stage 2 to the spare, and promotions are enumerated first.
+        cl = _cluster(6, bw_overrides=[(2, 3, 1e3)])
+        plan = _plan(cuts=(1, 3), nodes=(0, 1, 2, 3), spares=(4,),
+                     replicas={1: (5,)})
+        res = incremental_replan(plan, cl, max_moves=1)
+        assert res.moves == (StageMove(1, 2, 5),)
+        assert res.plan.stages[1].node == 5
+        assert res.plan.stages[1].replicas == (2,)   # vacated primary
+        assert res.plan.spare_nodes == (4,)          # no spare spent
+        assert res.bottleneck_after_s < res.bottleneck_before_s
+
+    def test_migrated_stages_excludes_replica_adds(self):
+        cl = _cluster(5, scale_overrides=[(2, 0.3)])
+        res = incremental_replan(_plan(), cl, max_moves=1,
+                                 allow_replicas=True)
+        assert res.changed
+        assert res.migrated_stages == ()
+        off = incremental_replan(_plan(), cl, max_moves=1)
+        assert off.migrated_stages == tuple(mv.stage for mv in off.moves)
+
+    def test_replica_candidates_respect_occupied_nodes(self):
+        cl = _cluster(5, scale_overrides=[(2, 0.3)])
+        plan = dataclasses.replace(_plan(), spare_nodes=(0, 1, 2, 3))
+        res = incremental_replan(plan, cl, max_moves=2,
+                                 allow_replicas=True)
+        for mv in res.moves:
+            tgt = mv.node if isinstance(mv, ReplicaAdd) else mv.new_node
+            assert tgt == 3               # only the genuinely free spare
+
+    def test_deterministic_with_replicas(self):
+        cl = _cluster(6, scale_overrides=[(2, 0.3), (3, 0.6)])
+        plan = _plan(spares=(3, 4, 5))
+        a = incremental_replan(plan, cl, max_moves=2, allow_replicas=True)
+        b = incremental_replan(plan, cl, max_moves=2, allow_replicas=True)
+        assert a.moves == b.moves
+        assert [s.replicas for s in a.plan.stages] == \
+            [s.replicas for s in b.plan.stages]
 
 
 class TestCompareReplan:

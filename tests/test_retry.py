@@ -1,0 +1,70 @@
+"""RetryPolicy construction-time validation (repro.serve.retry).
+
+A misconfigured policy on the fault path only surfaces mid-outage —
+attempts=0 silently never calls its target, backoff<1 shrinks delays —
+so the dataclass rejects nonsense fields at construction with a clear
+ValueError instead.
+"""
+
+import pytest
+
+from repro.serve.retry import RetryExhausted, RetryPolicy, retry_call
+
+
+def test_defaults_are_valid():
+    p = RetryPolicy()
+    assert p.attempts == 3
+    assert p.delay_s(0) == p.base_delay_s
+
+
+def test_attempts_must_be_at_least_one():
+    with pytest.raises(ValueError, match="attempts must be >= 1"):
+        RetryPolicy(attempts=0)
+    with pytest.raises(ValueError, match="got -2"):
+        RetryPolicy(attempts=-2)
+    RetryPolicy(attempts=1)                        # boundary: valid
+
+
+def test_delays_must_be_non_negative():
+    with pytest.raises(ValueError, match="non-negative"):
+        RetryPolicy(base_delay_s=-0.1)
+    with pytest.raises(ValueError, match="non-negative"):
+        RetryPolicy(max_delay_s=-1.0)
+    RetryPolicy(base_delay_s=0.0, max_delay_s=0.0)  # boundary: valid
+
+
+def test_backoff_must_not_shrink():
+    with pytest.raises(ValueError, match="backoff must be >= 1.0"):
+        RetryPolicy(backoff=0.5)
+    RetryPolicy(backoff=1.0)                       # constant delay: valid
+
+
+def test_error_message_names_the_bad_value():
+    with pytest.raises(ValueError, match="got 0"):
+        RetryPolicy(attempts=0)
+    with pytest.raises(ValueError, match="base_delay_s=-0.5"):
+        RetryPolicy(base_delay_s=-0.5)
+
+
+def test_valid_policy_still_drives_retry_call():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 2:
+            raise OSError("blip")
+        return "ok"
+
+    p = RetryPolicy(attempts=3, base_delay_s=0.0)
+    assert retry_call(flaky, what="t", policy=p, retry_on=(OSError,),
+                      sleep=lambda s: None) == "ok"
+    assert len(calls) == 2
+
+
+def test_exhaustion_history_matches_attempts():
+    p = RetryPolicy(attempts=2, base_delay_s=0.0)
+    with pytest.raises(RetryExhausted) as ei:
+        retry_call(lambda: (_ for _ in ()).throw(OSError("down")),
+                   what="t", policy=p, retry_on=(OSError,),
+                   sleep=lambda s: None)
+    assert len(ei.value.attempts) == 2

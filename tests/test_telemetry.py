@@ -26,6 +26,31 @@ class TestRing:
     def test_empty_mean_is_nan(self):
         assert np.isnan(Ring(2).mean())
 
+    def test_wraparound_total_keeps_counting_past_capacity(self):
+        r = Ring(4)
+        for x in range(11):
+            r.append(float(x))
+        assert r.total == 11                       # appends ever, not retained
+        assert len(r) == 4
+        np.testing.assert_array_equal(r.values(), [7.0, 8.0, 9.0, 10.0])
+
+    def test_wraparound_exactly_at_capacity_boundary(self):
+        r = Ring(3)
+        for x in range(3):
+            r.append(float(x))
+        np.testing.assert_array_equal(r.values(), [0.0, 1.0, 2.0])
+        r.append(3.0)                              # first overwrite
+        np.testing.assert_array_equal(r.values(), [1.0, 2.0, 3.0])
+        assert r.total == 4 and len(r) == 3
+        assert r.mean() == 2.0
+
+    def test_values_returns_copy_before_wrap(self):
+        r = Ring(4)
+        r.append(1.0)
+        v = r.values()
+        v[0] = 99.0
+        np.testing.assert_array_equal(r.values(), [1.0])
+
 
 class TestTelemetryStream:
     def test_injected_clock_is_the_only_time_source(self):
@@ -53,6 +78,25 @@ class TestTelemetryStream:
         assert tel.drain_transfers() == []
         # the ring keeps the rolling view after the drain
         assert len(tel.transfer_s[0]) == 1
+
+    def test_drain_preserves_record_order_past_ring_wrap(self):
+        # the pending list is unbounded; the ring wrapping must not
+        # reorder or truncate what fold() will consume
+        tel = TelemetryStream(1, capacity=2, clock=lambda: 0.0)
+        for i in range(5):
+            tel.record_transfer(0, float(i), 1.0)
+        assert tel.drain_transfers() == [(0, float(i), 1.0)
+                                         for i in range(5)]
+        np.testing.assert_array_equal(tel.transfer_b[0].values(),
+                                      [3.0, 4.0])   # ring kept the newest
+
+    def test_out_of_range_stage_dropped_and_counted(self):
+        tel = TelemetryStream(2, clock=lambda: 0.0)
+        tel.record_transfer(5, 10.0, 1.0)          # stale stage index
+        tel.record_transfer(-1, 10.0, 1.0)
+        assert tel.dropped == 2
+        assert tel.drain_transfers() == []         # nothing poisoned
+        assert len(tel.transfer_s[0]) == len(tel.transfer_s[1]) == 0
 
 
 def _cluster(n=4, bw0=100.0):
@@ -97,6 +141,19 @@ class TestClusterState:
         assert st.bw[1, 2] == 40.0
         assert st.bw[0, 1] == 100.0                # dispatcher hop untouched
         assert st.fold(tel, [1, 2]) == 0           # pending was drained
+
+    def test_fold_drops_and_counts_stale_stage_indices(self):
+        st = ClusterState(_cluster(), alpha=1.0, clip=1e9)
+        tel = TelemetryStream(2, clock=lambda: 0.0)
+        tel.record_transfer(0, nbytes=40.0, seconds=1.0)
+        # a sample recorded against a 2-stage plan folded with a shrunken
+        # 1-stage mapping: out of range, dropped, never raises
+        tel._pending.append((7, 40.0, 1.0))
+        tel._pending.append((-3, 40.0, 1.0))
+        n = st.fold(tel, node_of_stage=[1, 2], dispatcher_node=0)
+        assert n == 3                              # drained, not all folded
+        assert st.dropped == 2
+        assert st.bw[1, 2] == 40.0                 # in-range sample applied
 
     def test_as_cluster_materializes_estimate(self):
         st = ClusterState(_cluster(), alpha=1.0, clip=1e9)
