@@ -15,7 +15,13 @@ smoke presets (real JAX compute on CPU):
   ``PipelineServeEngine`` over a mid-model stage cut (the stage IR), with
   a raw and a rowwise-int8-quantized boundary wire; ``vs_monolithic`` is
   the pipelining overhead vs the monolithic fast path (raw wire asserts
-  token identity live; int8 is lossy by design).
+  token identity live; int8 is lossy by design);
+* ``wire_faults/<arch>`` — the same pipelined decode with every boundary
+  handoff framed through ``BoundaryTransport`` under a seeded wire-fault
+  schedule (rate ``WIRE_LOSS``): ``wire_overhead`` is the framing +
+  retransmit cost vs the transportless pipe, and the committed median is
+  the bound ``--check`` enforces; ``--update`` asserts token identity and
+  exactly-once delivery live.
 
 Every ``--update`` run asserts the fast path token-identical to the
 reference on the exact cases it times (the equivalence contract, live).
@@ -62,6 +68,8 @@ MAX_LEN, KV_BLOCK = 96, 32
 
 STREAM_ARCH = "granite-3-2b"
 PIPE_ARCH = "granite-3-2b"          # pipelined decode: mid-model stage cut
+WIRE_LOSS = 0.15                    # wire_faults/ seeded fault rate
+WIRE_SEED = 4                       # draws all five fault kinds at this rate
 STREAM_SLOTS = 4
 # (prompt_len, gen_len) per request — staggered completions force
 # admit/evict churn rather than one synchronized batch
@@ -148,6 +156,59 @@ def measure(reps: int, with_naive: bool) -> dict:
                 f"{PIPE_ARCH}: pipelined tokens diverged from monolithic"
         entries[f"{name}/{PIPE_ARCH}"] = e
 
+    # -- pipelined decode over an unreliable wire ---------------------------
+    # the framed BoundaryTransport under a seeded fault schedule at a fixed
+    # loss rate: the committed median (gated by --check's ratio tolerance)
+    # bounds the retransmit + framing overhead vs the transportless pipe
+    from repro.serve.retry import RetryPolicy
+    from repro.serve.transport import (BoundaryTransport, FakeWireClock,
+                                       HeartbeatMonitor, seeded_wire_faults)
+
+    plan = from_block_cuts(eng.cfg, [eng.cfg.n_layers // 2])
+    peng = PipelineServeEngine(eng.cfg, eng.params, plan,
+                               max_len=MAX_LEN, kv_block=KV_BLOCK)
+    peng.warmup(batch, DECODE_STEPS + 1)
+    clean_med, _ = time_s(lambda: peng.timed_decode(batch, DECODE_STEPS),
+                          reps)
+
+    def _wire():
+        clk = FakeWireClock()
+        mon = HeartbeatMonitor(peng.n_stages, clock=clk, sleep=clk.sleep)
+        peng.attach_wire(BoundaryTransport(
+            peng.n_stages - 1,
+            faults=seeded_wire_faults(WIRE_SEED, peng.n_stages - 1,
+                                      DECODE_STEPS + 2, rate=WIRE_LOSS),
+            policy=RetryPolicy(attempts=6, base_delay_s=0.0),
+            monitor=mon, clock=clk, sleep=clk.sleep), mon)
+
+    def wired_decode():
+        _wire()              # fresh schedule per rep: faults fire every run
+        return peng.timed_decode(batch, DECODE_STEPS)
+
+    med, lo = time_s(wired_decode, reps)
+    tr = peng.transport
+    assert tr.total("retransmits") > 0, \
+        f"{PIPE_ARCH}: wire_faults schedule exercised no retransmission"
+    e = {"median_us": med * 1e6, "min_us": lo * 1e6,
+         "decode_toks_per_s": round(toks / med, 1),
+         "clean_median_us": clean_med * 1e6,
+         "wire_overhead": round(med / clean_med, 2),
+         "loss_rate": WIRE_LOSS,
+         "retransmits": tr.total("retransmits")}
+    if with_naive:
+        # live contract: faulted wire delivers exactly once and the
+        # greedy tokens match the transportless pipeline bit-exactly
+        peng.attach_wire()
+        clean_toks = peng.generate(batch, DECODE_STEPS)
+        _wire()
+        wired_toks = peng.generate(batch, DECODE_STEPS)
+        assert (clean_toks == wired_toks).all(), \
+            f"{PIPE_ARCH}: wire faults flipped greedy tokens"
+        assert peng.transport.exactly_once(), \
+            f"{PIPE_ARCH}: transport lost or double-delivered a frame"
+    peng.attach_wire()
+    entries[f"wire_faults/{PIPE_ARCH}"] = e
+
     # -- mixed request stream (continuous batching) -------------------------
     eng = _engine(STREAM_ARCH)
     sched = SlotScheduler(eng, slots=STREAM_SLOTS)
@@ -198,7 +259,10 @@ def update(reps: int) -> None:
                      "pipeline_decode[_int8] = the same decode through "
                      "PipelineServeEngine over a mid-model stage cut "
                      "(vs_monolithic = pipelining overhead, raw vs "
-                     "rowwise-int8 boundary wire); --check "
+                     "rowwise-int8 boundary wire); wire_faults = the same "
+                     "pipelined decode through the framed BoundaryTransport "
+                     f"under a seeded fault schedule at rate {WIRE_LOSS} "
+                     "(wire_overhead = vs the transportless pipe); --check "
                      f"compares best-of-reps with a {CHECK_RATIO}x ratio "
                      "tolerance"),
         },

@@ -57,6 +57,13 @@ phase "smoke: fixture drift (one cell per pinned family)"
 # cell — catches silent generator drift without a full regeneration
 PYTHONPATH=src python scripts/fixture_drift_smoke.py
 
+phase "smoke: chaos campaign (python -m repro.chaos --smoke)"
+# seeded wire-fault / silent-kill / emulator-fault schedules replayed
+# against both engines-under-contract (token identity, exactly-once
+# delivery, bounded detection latency, emulator lockstep); deterministic
+# from the seed, and a failing case is shrunk to a minimal repro schedule
+PYTHONPATH=src python -m repro.chaos --smoke
+
 phase "smoke: examples/quickstart.py"
 PYTHONPATH=src python examples/quickstart.py > /dev/null
 

@@ -139,7 +139,8 @@ class DeterminismRule(Rule):
     id = "determinism"
     summary = ("wall-clock, global RNG state, or unordered-set iteration "
                "inside a fixture-pinned deterministic path")
-    scopes = ("repro/core/", "repro/emulator/", "repro/serve/")
+    scopes = ("repro/core/", "repro/emulator/", "repro/serve/",
+              "repro/chaos/")
 
     def check(self, project: Project):
         for mod in self.in_scope(project):

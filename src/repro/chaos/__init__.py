@@ -1,0 +1,14 @@
+"""Deterministic chaos campaigns for the fault-tolerant serving stack.
+
+``python -m repro.chaos --smoke`` is the CI entry point; see
+:mod:`repro.chaos.campaign` for the invariants a campaign asserts and
+:mod:`repro.chaos.shrink` for minimal-repro reduction of a failing
+schedule.
+"""
+
+from .campaign import (CampaignReport, CaseResult, ChaosCase, ChaosHarness,
+                       generate_campaign, run_campaign)
+from .shrink import ddmin, shrink_case
+
+__all__ = ["CampaignReport", "CaseResult", "ChaosCase", "ChaosHarness",
+           "generate_campaign", "run_campaign", "ddmin", "shrink_case"]

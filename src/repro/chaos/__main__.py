@@ -1,0 +1,58 @@
+"""CLI: ``python -m repro.chaos [--smoke] [--seed S] [--cases N]``.
+
+Runs one seeded chaos campaign against the serving engine and the
+emulator pair, prints the per-case verdicts, and on failure shrinks each
+failing case to a minimal repro schedule before exiting nonzero.
+``--smoke`` is the CI entry point (small case count, both halves).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from functools import partial
+
+from .campaign import (ChaosHarness, case_fails, generate_campaign,
+                       run_campaign)
+from .shrink import shrink_case
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.chaos",
+        description="deterministic chaos campaign over the fault-tolerant "
+                    "serving stack")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--cases", type=int, default=8)
+    p.add_argument("--smoke", action="store_true",
+                   help="small CI campaign (4 cases)")
+    p.add_argument("--no-serve", action="store_true",
+                   help="skip the serving-engine half")
+    p.add_argument("--no-emulator", action="store_true",
+                   help="skip the emulator-lockstep half")
+    p.add_argument("--no-shrink", action="store_true",
+                   help="report failures without reducing them")
+    args = p.parse_args(argv)
+
+    n_cases = 4 if args.smoke else args.cases
+    report = run_campaign(args.seed, n_cases, serve=not args.no_serve,
+                          emulator=not args.no_emulator, log=print)
+    print(report.summary())
+    if report.ok:
+        return 0
+
+    if not args.no_shrink:
+        cases = {c.cid: c for c in generate_campaign(args.seed, n_cases)}
+        harness = None if args.no_serve else ChaosHarness(seed=args.seed)
+        fails = partial(case_fails, harness,
+                        emulator=not args.no_emulator)
+        for res in report.failing:
+            small = shrink_case(cases[res.cid], fails)
+            print(f"minimal repro for {res.cid} "
+                  f"(seed={args.seed}): wire={list(small.wire)} "
+                  f"kill={small.kill} emu={list(small.emu)}")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,5 +1,5 @@
-from .store import (AsyncCheckpointer, latest_step, restore_checkpoint,
-                    save_checkpoint)
+from .store import (AsyncCheckpointer, CheckpointCorrupt, latest_step,
+                    restore_checkpoint, save_checkpoint)
 
-__all__ = ["AsyncCheckpointer", "latest_step", "restore_checkpoint",
-           "save_checkpoint"]
+__all__ = ["AsyncCheckpointer", "CheckpointCorrupt", "latest_step",
+           "restore_checkpoint", "save_checkpoint"]

@@ -8,6 +8,14 @@ Atomicity: writes go to step_<N>.tmp and are renamed into place — a crash
 mid-save leaves the previous checkpoint intact (pod-restart safe).  Restore
 accepts a target sharding tree, so a checkpoint written on one mesh can be
 restored onto another (elastic rescale: 512 -> 256 chips or 8 -> 4 hosts).
+
+Integrity: every leaf's payload bytes are CRC32-checksummed into the
+manifest at save time and verified at restore; a truncated or bit-flipped
+leaf raises :class:`CheckpointCorrupt` (a ``ValueError``) instead of
+silently loading bad weights — the serving restore path runs under
+``retry_call`` with ``ValueError`` retryable, so a transient corrupt read
+is a blip, not an outage.  Pre-checksum checkpoints (no ``crc32`` field)
+restore unverified for backward compatibility.
 """
 
 from __future__ import annotations
@@ -15,6 +23,7 @@ from __future__ import annotations
 import json
 import shutil
 import threading
+import zlib
 from pathlib import Path
 
 import jax
@@ -27,9 +36,19 @@ except Exception:                       # pragma: no cover
     _BF16 = None
 
 
+class CheckpointCorrupt(ValueError):
+    """A leaf's bytes do not match the manifest checksum (truncated or
+    bit-flipped read).  A ``ValueError`` so existing retry policies on
+    the restore path treat it as retryable."""
+
+
 def _flatten_with_paths(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
+
+
+def _leaf_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def save_checkpoint(ckpt_dir, step: int, tree, keep: int = 3) -> Path:
@@ -50,7 +69,8 @@ def save_checkpoint(ckpt_dir, step: int, tree, keep: int = 3) -> Path:
             arr = arr.view(np.uint16)          # npy-safe carrier
         np.save(tmp / f"leaf_{i}.npy", arr)
         manifest["leaves"].append({"i": i, "shape": list(arr.shape),
-                                   "dtype": logical})
+                                   "dtype": logical,
+                                   "crc32": _leaf_crc(arr)})
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     if final.exists():
         shutil.rmtree(final)
@@ -87,7 +107,14 @@ def restore_checkpoint(ckpt_dir, step: int, like_tree, shardings=None):
     out = []
     for i, like in enumerate(leaves):
         arr = np.load(src / f"leaf_{i}.npy")
-        logical = manifest["leaves"][i]["dtype"]
+        entry = manifest["leaves"][i]
+        want = entry.get("crc32")          # pre-checksum ckpts: unverified
+        if want is not None and _leaf_crc(arr) != want:
+            raise CheckpointCorrupt(
+                f"{src}/leaf_{i}.npy: payload checksum mismatch "
+                f"(expected {want:#010x}, got {_leaf_crc(arr):#010x}) — "
+                "truncated or bit-flipped read, refusing to load")
+        logical = entry["dtype"]
         if _BF16 is not None and logical == "bfloat16" \
                 and arr.dtype == np.uint16:
             arr = arr.view(_BF16)

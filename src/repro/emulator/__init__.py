@@ -5,7 +5,7 @@ from .pipeline import (EmulatorConfig, PipelineEmulator, emulate_plan,
 from .faults import (CompositeFaultModel, DriftingCluster, EffectLedger,
                      FaultInjector, LinkDegrade, LinkFault, NodeFault,
                      NodeSlowdown, RandomLinkFaults, RandomNodeFaults,
-                     compose_faults, effective_cluster)
+                     WireLoss, compose_faults, effective_cluster)
 from .engine import FlatEventEngine, lindley_scan, poisson_arrivals, simulate
 from .sweep import aggregate, compare_replan, evaluate_cells, sweep_plan
 
@@ -14,7 +14,7 @@ __all__ = ["Event", "Simulator", "PipelineEmulator", "EmulatorConfig",
            "metrics_identical",
            "FaultInjector", "LinkFault", "NodeFault", "LinkDegrade",
            "NodeSlowdown", "DriftingCluster", "CompositeFaultModel",
-           "EffectLedger", "compose_faults", "effective_cluster",
+           "EffectLedger", "WireLoss", "compose_faults", "effective_cluster",
            "RandomNodeFaults", "RandomLinkFaults",
            "FlatEventEngine", "lindley_scan", "poisson_arrivals", "simulate",
            "aggregate", "compare_replan", "evaluate_cells", "sweep_plan"]

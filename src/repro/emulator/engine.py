@@ -44,7 +44,7 @@ import numpy as np
 
 from repro.core.cluster import ClusterGraph
 from .faults import (EffectLedger, FaultInjector, LinkDegrade, LinkFault,
-                     NodeFault, NodeSlowdown, link_key)
+                     NodeFault, NodeSlowdown, WireLoss, _WireRec, link_key)
 from .pipeline import EmulatorConfig, PipelineEmulator, summarize
 
 __all__ = ["lindley_scan", "poisson_arrivals", "simulate", "FlatEventEngine"]
@@ -187,6 +187,7 @@ def _calendar_run(arrivals, comp, send, duration_s):
 _ARRIVE, _DONE, _RETRY, _DELIVER = 0, 1, 2, 3
 _KILL, _REVIVE, _RESCHED, _DROP, _RESTORE, _SWEEP = 4, 5, 6, 7, 8, 9
 _DEGRADE, _UNDEGRADE, _SLOW, _UNSLOW = 10, 11, 12, 13
+_WIRELOSS, _UNWIRELOSS = 14, 15
 
 
 class _Rep:
@@ -240,6 +241,7 @@ class FlatEventEngine:
         bwmat = cluster.bw.copy()
         links = EffectLedger()
         slows = EffectLedger()
+        wire: dict = {}            # link_key -> active _WireRec
         n_stages = self.n_parts + 1
         last = n_stages - 1
         n_batches = arrivals.size
@@ -309,6 +311,18 @@ class FlatEventEngine:
             bwv = 0.0 if (src in down or dst in down) else bwmat[src, dst]
             if bwv <= 0:
                 heappush(q, (now + retry_s, cnt(), _RETRY, k, rep, bid))
+                return
+            wrec = wire.get(link_key(src, dst))
+            if wrec is not None and wrec.lost():
+                # frame lost on the unreliable wire: it still occupied the
+                # link for the transfer duration, then the sender's
+                # reconnect loop retransmits (the ack never arrived)
+                log.append((now, f"wire ({src},{dst}) frame LOST — "
+                                 "retransmit"))
+                # parenthesized like the reference's after(dur + retry_s):
+                # fl(now + fl(dur + retry_s)), not fl(fl(now + dur) + retry_s)
+                heappush(q, (now + (out_bytes[k] / bwv + retry_s), cnt(),
+                             _RETRY, k, rep, bid))
                 return
             rep2.inflight += 1
             heappush(q, (now + out_bytes[k] / bwv, cnt(), _DELIVER, k, rep,
@@ -381,6 +395,8 @@ class FlatEventEngine:
                 heappush(q, (max(f.time_s, 0.0), cnt(), _DEGRADE, fi))
             elif isinstance(f, NodeSlowdown):
                 heappush(q, (max(f.time_s, 0.0), cnt(), _SLOW, fi))
+            elif isinstance(f, WireLoss):
+                heappush(q, (max(f.time_s, 0.0), cnt(), _WIRELOSS, fi))
             else:
                 raise TypeError(f)
         if cfg.enable_straggler_migration:
@@ -516,6 +532,18 @@ class FlatEventEngine:
                 f = faults[ev[3]]
                 set_scale(f.node, slows.pop(f.node, ev[3]))
                 log.append((now, f"node {f.node} slowdown cleared"))
+            elif op == _WIRELOSS:
+                fi = ev[3]
+                f = faults[fi]
+                wire[link_key(f.a, f.b)] = _WireRec(f)
+                log.append((now, f"wire ({f.a},{f.b}) loss "
+                                 f"x{f.loss_rate:g} ON"))
+                if f.duration_s is not None:
+                    heappush(q, (now + f.duration_s, cnt(), _UNWIRELOSS, fi))
+            elif op == _UNWIRELOSS:
+                f = faults[ev[3]]
+                wire.pop(link_key(f.a, f.b), None)
+                log.append((now, f"wire ({f.a},{f.b}) loss cleared"))
             elif op == _SWEEP:
                 pods = [(k, r) for k in range(1, n_stages) for r in reps[k]]
                 vals = [np.mean(r.svc[-5:]) for _, r in pods if r.svc]
@@ -547,7 +575,8 @@ def simulate(cluster: ClusterGraph, nodes, boundary_bytes, compute_flops,
     """Emulate one plan; metrics-identical to ``PipelineEmulator``.
 
     ``faults`` is a declarative list of :class:`NodeFault` /
-    :class:`LinkFault` / :class:`LinkDegrade` / :class:`NodeSlowdown`
+    :class:`LinkFault` / :class:`LinkDegrade` / :class:`NodeSlowdown` /
+    :class:`WireLoss`
     (the reference wires the same list through ``FaultInjector`` *before*
     ``run`` — event ordering replicates that).  ``replicas`` lists warm
     replica node ids per partition (JSQ-routed pods; see the replication

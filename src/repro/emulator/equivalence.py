@@ -34,7 +34,7 @@ from repro.core.cluster import (ClusterGraph, blob_cluster, grid_cluster,
                                 random_geometric_cluster, ring_cluster)
 
 from .engine import simulate
-from .faults import LinkFault, NodeFault
+from .faults import LinkDegrade, LinkFault, NodeFault, WireLoss
 from .pipeline import EmulatorConfig
 
 
@@ -105,6 +105,28 @@ def scenarios() -> list[dict]:
                       {"node_stage": 2, "t": 35.0}], {1: 1})
     rep("poisson-two-replicas", [{"node_stage": 2, "t": 25.0}], {1: 2},
         n_batches=80, rate=1.0)
+
+    # -- unreliable wire: Bernoulli frame loss on a boundary link ---------
+    # a lost frame pays the full transfer duration, then the reconnect
+    # loop retransmits after retry_s ("wire ... frame LOST" in the pinned
+    # event log); the loss stream is seeded per link so both engines draw
+    # identically.  Composition cells overlap loss with drift / kills.
+    def wire(sid, faults, **kw):
+        flt(sid, faults, **kw)
+        out[-1]["id"] = f"wire/{sid}"
+
+    wire("loss-hop1", [{"wire_stages": [1, 2], "t": 5.0, "loss": 0.3,
+                        "seed": 5}])
+    wire("loss-windowed", [{"wire_stages": [0, 1], "t": 5.0, "loss": 0.4,
+                            "duration": 40.0, "seed": 7}], n_batches=80,
+         rate=1.0)
+    wire("loss-plus-degrade", [{"wire_stages": [1, 2], "t": 5.0,
+                                "loss": 0.3, "seed": 5},
+                               {"link_stages": [1, 2], "t": 10.0,
+                                "duration": 20.0, "degrade": 0.5}])
+    wire("loss-plus-kill", [{"wire_stages": [0, 1], "t": 5.0, "loss": 0.2,
+                             "seed": 9},
+                            {"node_stage": 2, "t": 20.0}])
     return out
 
 
@@ -150,6 +172,14 @@ def build_scenario(sc: dict):
         elif "node_stage" in f:
             faults.append(NodeFault(f["t"], nodes[f["node_stage"]],
                                     f.get("recover")))
+        elif "wire_stages" in f:
+            a, b = f["wire_stages"]
+            faults.append(WireLoss(f["t"], nodes[a], nodes[b], f["loss"],
+                                   f.get("duration"), f.get("seed", 0)))
+        elif "degrade" in f:
+            a, b = f["link_stages"]
+            faults.append(LinkDegrade(f["t"], nodes[a], nodes[b],
+                                      f["degrade"], f.get("duration")))
         else:
             a, b = f["link_stages"]
             faults.append(LinkFault(f["t"], nodes[a], nodes[b],

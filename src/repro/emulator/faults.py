@@ -80,6 +80,47 @@ class NodeSlowdown:
     duration_s: float | None = None
 
 
+@dataclass
+class WireLoss:
+    """Unreliable wire on one link: while active, each boundary transfer
+    attempted over ``(a, b)`` is independently lost with probability
+    ``loss_rate`` (Bernoulli, per-link rng seeded by ``(seed, a, b)`` so
+    both engines draw the identical sequence).  A lost frame still
+    occupies the link for the full transfer duration, then the sender's
+    reconnect loop retransmits after ``retry_s`` — the emulator-side
+    price of the serving transport's ack/retransmit protocol.
+
+    ``duration_s=None`` is permanent.  ``loss_rate`` must sit in
+    ``[0, 1)``: a rate of 1 never delivers and livelocks the pipeline."""
+    time_s: float
+    a: int
+    b: int
+    loss_rate: float
+    duration_s: float | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.loss_rate < 1.0:
+            raise ValueError(
+                f"WireLoss.loss_rate must be in [0, 1) (a rate of 1 never "
+                f"delivers), got {self.loss_rate}")
+
+
+class _WireRec:
+    """Active wire-loss state on one link: the shared Bernoulli stream
+    both engines consume in attempt order."""
+
+    __slots__ = ("rng", "loss_rate")
+
+    def __init__(self, fault: WireLoss):
+        self.rng = np.random.default_rng(
+            [int(fault.seed), _FAULT_STREAM, int(fault.a), int(fault.b)])
+        self.loss_rate = float(fault.loss_rate)
+
+    def lost(self) -> bool:
+        return float(self.rng.random()) < self.loss_rate
+
+
 class EffectLedger:
     """Pristine value + stack of active multiplicative effects per key.
 
@@ -269,7 +310,7 @@ def effective_cluster(cluster, faults, t: float):
             ev.append((f.time_s, fi, "kill", f))
             if f.recover_after_s is not None:
                 ev.append((f.time_s + f.recover_after_s, fi, "revive", f))
-        elif isinstance(f, (LinkFault, LinkDegrade, NodeSlowdown)):
+        elif isinstance(f, (LinkFault, LinkDegrade, NodeSlowdown, WireLoss)):
             ev.append((f.time_s, fi, "push", f))
             if f.duration_s is not None:
                 ev.append((f.time_s + f.duration_s, fi, "pop", f))
@@ -291,7 +332,10 @@ def effective_cluster(cluster, faults, t: float):
                 eff = nodes_led.pop(f.node, fi)
             scale[f.node] = eff
         else:
-            factor = 0.0 if isinstance(f, LinkFault) else f.factor
+            # a lossy wire's expected goodput is bw * (1 - loss_rate)
+            factor = (0.0 if isinstance(f, LinkFault)
+                      else 1.0 - f.loss_rate if isinstance(f, WireLoss)
+                      else f.factor)
             key = link_key(f.a, f.b)
             if kind == "push":
                 eff = links.push(key, float(bw[f.a, f.b]), fi, factor)
@@ -384,5 +428,20 @@ class FaultInjector:
                     self.emu.sim.after(f.duration_s, clear)
 
                 self.emu.sim.at(f.time_s, slow)
+            elif isinstance(f, WireLoss):
+                def wire_on(f=f):
+                    self.emu.wire[link_key(f.a, f.b)] = _WireRec(f)
+                    self.emu.sim.note(
+                        f"wire ({f.a},{f.b}) loss x{f.loss_rate:g} ON")
+                    if f.duration_s is None:
+                        return
+
+                    def clear():
+                        self.emu.wire.pop(link_key(f.a, f.b), None)
+                        self.emu.sim.note(
+                            f"wire ({f.a},{f.b}) loss cleared")
+                    self.emu.sim.after(f.duration_s, clear)
+
+                self.emu.sim.at(f.time_s, wire_on)
             else:
                 raise TypeError(f)

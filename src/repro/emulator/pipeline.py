@@ -171,6 +171,8 @@ class PipelineEmulator:
         self.rng = np.random.default_rng(rng) if isinstance(rng, int) else rng
         self.sim = Simulator()
         self.down: set[int] = set()
+        # link_key -> active WireLoss state (set by FaultInjector)
+        self.wire: dict = {}
         n_parts = len(boundary_bytes)
         replicas = replicas or [[] for _ in range(n_parts)]
         rep_nodes = [n for r in replicas for n in r]
@@ -206,6 +208,11 @@ class PipelineEmulator:
         if a in self.down or b in self.down:
             return 0.0
         return self.cluster.bw[a, b]
+
+    def _wire_rec(self, a: int, b: int):
+        """Active unreliable-wire state on the (undirected) link, if any."""
+        from .faults import link_key
+        return self.wire.get(link_key(a, b))
 
     def _release(self, node: int) -> None:
         """Return a healthy node that hosts no stage to the spare pool (a
@@ -308,6 +315,15 @@ class PipelineEmulator:
                            lambda: self._attempt_send(k, rep, batch))
             return
         dur = st.out_bytes / bw
+        wrec = self._wire_rec(src, dst)
+        if wrec is not None and wrec.lost():
+            # frame lost on the unreliable wire: it still occupied the
+            # link for the transfer duration, then the sender's reconnect
+            # loop retransmits (the ack never arrived)
+            self.sim.note(f"wire ({src},{dst}) frame LOST — retransmit")
+            self.sim.after(dur + self.cfg.retry_s,
+                           lambda: self._attempt_send(k, rep, batch))
+            return
         e_src = self._node_epoch[src]
         e_dst = self._node_epoch[dst]
         rep2.inflight += 1

@@ -35,6 +35,15 @@ are JSQ-routed across them, one copy's death is a zero-restore
 ``ReplicaLost`` absorbed by the survivors, and only a last-copy loss
 engages checkpoint restore + replay (ROADMAP "Replication contract").
 
+**Unreliable wire**: stage-boundary handoffs can run through a
+``BoundaryTransport`` — a framed channel (sequence numbers, CRC32 payload
+checksums, ack/retransmit under ``RetryPolicy``, duplicate dedup) with
+typed injectable wire faults (``Drop`` / ``CorruptPayload`` / ``Duplicate``
+/ ``Reorder`` / ``Stall``); a ``HeartbeatMonitor`` separates *suspected*
+(stalled wire — keep serving, feed ``ClusterState.fold_health``) from
+*confirmed-dead* (engage the kill → replica/restore paths).  See ROADMAP
+"Transport & failure-detection contract".
+
 See ROADMAP.md "Serving-perf contract", "Deployment contract" and
 "Telemetry & replan contract" for the lockstep/equivalence obligations and
 the BENCH_serve.json workflow.
@@ -46,8 +55,15 @@ from .pipeline import (PipelineServeEngine, ReplicaLost, RestoreExhausted,
 from .retry import RetryExhausted, RetryPolicy, retry_call
 from .scheduler import Request, SlotScheduler
 from .telemetry import ClusterState, TelemetryStream
+from .transport import (BoundaryTransport, CorruptPayload, Drop, Duplicate,
+                        FakeWireClock, FrameLost, HeartbeatMonitor, Reorder,
+                        Stall, WireExhausted, parse_wire_faults,
+                        seeded_wire_faults)
 
-__all__ = ["ClusterState", "PipelineServeEngine", "ReplicaLost", "Request",
+__all__ = ["BoundaryTransport", "ClusterState", "CorruptPayload", "Drop",
+           "Duplicate", "FakeWireClock", "FrameLost", "HeartbeatMonitor",
+           "PipelineServeEngine", "Reorder", "ReplicaLost", "Request",
            "RestoreExhausted", "RetryExhausted", "RetryPolicy",
            "ServeEngine", "SlotScheduler", "StageDegraded", "StageDown",
-           "TelemetryStream", "retry_call"]
+           "Stall", "TelemetryStream", "WireExhausted", "parse_wire_faults",
+           "retry_call", "seeded_wire_faults"]

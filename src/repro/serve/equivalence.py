@@ -11,7 +11,11 @@ block-cut ``StageExecutionPlan`` (first/middle/last cuts x families, with
 mid-stream stage kill + restore variants, ``-replan`` cells that run a
 telemetry-triggered live migration mid-stream, and ``-replica`` cells that
 serve through a warm-replicated stage with JSQ routing, a zero-restore
-replica kill, and a last-copy kill falling back to restore + replay) — and
+replica kill, and a last-copy kill falling back to restore + replay, and
+``-wire`` / ``-wire-silentkill`` cells that route every stage-boundary
+handoff through the framed ``BoundaryTransport`` under injected
+drop/corrupt/duplicate/reorder/stall wire faults and a heartbeat-detected
+silent node death) — and
 a capture function
 that pins the *reference* greedy token streams.  Tokens are ints, so the pin is
 exact by nature (the token-level analogue of the float.hex() pins
@@ -125,6 +129,40 @@ PIPELINE_STREAM_REPLICA_CELLS = [
      [{"after_step": 4, "stage": 1}], "-replica-kill"),
 ]
 
+# unreliable-wire boundary transport (ROADMAP "Transport &
+# failure-detection contract"): the engine routes every stage-boundary
+# handoff through a framed BoundaryTransport (sequence numbers, CRC32
+# checksums, ack/retransmit under RetryPolicy, duplicate dedup) with an
+# injected deterministic fault schedule — ``[kind, hop, xfer, extra]``
+# entries consumed per attempt — and a HeartbeatMonitor on the same fake
+# clock.  ``-wire`` cells pin greedy streams bit-identical across
+# drop/corrupt/duplicate/reorder/stall faults (the delivered payload is
+# rebuilt from the received wire bytes, so any transport bug flips
+# pinned tokens); ``-wire-silentkill`` cells pin identity across a
+# *silent* node failure that only the heartbeat detector can surface
+# (suspected -> confirmed-dead -> restore + replay).
+# Entries: (arch, n_layers, cuts, wire fault specs, kills, suffix).
+PIPELINE_WIRE_CELLS = [
+    ("granite-3-2b", 4, [1, 3],
+     [["drop", 0, 1], ["corrupt", 1, 2, 3], ["dup", 0, 3],
+      ["reorder", 1, 4], ["stall", 0, 5, 3.0]], None, "-wire"),
+    ("mamba2-1.3b", 4, [1, 3],
+     [["drop", 0, 1], ["corrupt", 1, 2, 3], ["dup", 0, 3],
+      ["reorder", 1, 4], ["stall", 0, 5, 3.0]], None, "-wire"),
+    ("whisper-large-v3", 4, [2],
+     [["drop", 0, 1], ["corrupt", 0, 2, 5], ["dup", 0, 3],
+      ["reorder", 0, 4]], None, "-wire"),
+    ("granite-3-2b", 4, [2], None,
+     [{"after_step": 3, "stage": 1, "silent": True}], "-wire-silentkill"),
+]
+PIPELINE_STREAM_WIRE_CELLS = [
+    ("granite-3-2b", 4, [2],
+     [["drop", 0, 2], ["corrupt", 0, 4, 7], ["dup", 0, 6],
+      ["reorder", 0, 8]], None, "-wire"),
+    ("granite-3-2b", 4, [2], None,
+     [{"after_step": 4, "stage": 1, "silent": True}], "-wire-silentkill"),
+]
+
 
 def _pipe_id(prefix, arch, cuts, kill, replan=None):
     cid = f"{prefix}/{arch}/cut{'-'.join(map(str, cuts))}"
@@ -182,6 +220,18 @@ def scenarios() -> list[dict]:
         cid = f"pipeline-stream/{arch}/cut{'-'.join(map(str, cuts))}{sfx}"
         out.append({"id": cid, "kind": "pipeline_stream", "arch": arch,
                     "n_layers": nl, "cuts": cuts, "replicas": reps,
+                    "kill": kills, "slots": 2, "requests": STREAM_REQUESTS,
+                    "seed": 1, "max_len": 32, "kv_block": 16})
+    for arch, nl, cuts, wire, kills, sfx in PIPELINE_WIRE_CELLS:
+        cid = f"pipeline/{arch}/cut{'-'.join(map(str, cuts))}{sfx}"
+        out.append({"id": cid, "kind": "pipeline", "arch": arch,
+                    "n_layers": nl, "cuts": cuts, "wire": wire,
+                    "kill": kills, "batch": 2, "prompt_len": 12,
+                    "gen_len": 8, "seed": 0, "max_len": 32, "kv_block": 16})
+    for arch, nl, cuts, wire, kills, sfx in PIPELINE_STREAM_WIRE_CELLS:
+        cid = f"pipeline-stream/{arch}/cut{'-'.join(map(str, cuts))}{sfx}"
+        out.append({"id": cid, "kind": "pipeline_stream", "arch": arch,
+                    "n_layers": nl, "cuts": cuts, "wire": wire,
                     "kill": kills, "slots": 2, "requests": STREAM_REQUESTS,
                     "seed": 1, "max_len": 32, "kv_block": 16})
     return out
@@ -259,9 +309,29 @@ def build_pipeline_engine(sc: dict, eng: ServeEngine):
                                    cluster=cluster, telemetry=tel)
     plan = from_block_cuts(eng.cfg, sc["cuts"], spare_nodes=(900, 901),
                            replicas=sc.get("replicas"))
+    transport = monitor = None
+    kills = sc.get("kill") or []
+    kills = [kills] if isinstance(kills, dict) else list(kills)
+    if sc.get("wire") is not None or any(k.get("silent") for k in kills):
+        # unreliable-wire cells: every boundary handoff framed through a
+        # BoundaryTransport over a shared fake clock, with a heartbeat
+        # monitor so stalls surface as SUSPECTED and silent kills are
+        # confirmed dead by beat silence rather than by an exception
+        from .retry import RetryPolicy
+        from .transport import (BoundaryTransport, FakeWireClock,
+                                HeartbeatMonitor, parse_wire_faults)
+        n_st = len(sc["cuts"]) + 1
+        clk = FakeWireClock()
+        monitor = HeartbeatMonitor(n_st, clock=clk, sleep=clk.sleep)
+        if sc.get("wire") is not None:
+            transport = BoundaryTransport(
+                n_st - 1, faults=parse_wire_faults(sc["wire"]),
+                policy=RetryPolicy(attempts=6, base_delay_s=0.05),
+                monitor=monitor, clock=clk, sleep=clk.sleep)
     return PipelineServeEngine(eng.cfg, eng.params, plan,
                                max_len=sc["max_len"],
-                               kv_block=sc["kv_block"])
+                               kv_block=sc["kv_block"],
+                               transport=transport, monitor=monitor)
 
 
 def _replan_arg(sc: dict, peng) -> dict | None:
@@ -325,7 +395,17 @@ def run_scenario(sc: dict, engine: str = "reference",
 
 
 def capture() -> dict:
-    return {sc["id"]: run_scenario(sc) for sc in scenarios()}
+    # clear the jit caches between scenarios: nothing is shared (every
+    # cell builds fresh engines), and one process running the whole grid
+    # otherwise accumulates enough executable mmap regions to cross
+    # vm.max_map_count, killing the LLVM JIT with ENOMEM mid-grid
+    import jax
+
+    fix = {}
+    for sc in scenarios():
+        fix[sc["id"]] = run_scenario(sc)
+        jax.clear_caches()
+    return fix
 
 
 def write_fixture(path: str) -> dict:

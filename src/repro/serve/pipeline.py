@@ -85,6 +85,7 @@ from repro.models.layers import set_decode_kv_bucket
 
 from .engine import _quiet
 from .retry import RetryExhausted, RetryPolicy, retry_call
+from .transport import DEAD, SUSPECTED
 
 
 class StageDown(RuntimeError):
@@ -144,12 +145,27 @@ class PipelineServeEngine:
     retry      : RetryPolicy for checkpoint reads / spare acquisition on
                  the restore and migration paths (default 3 attempts,
                  exponential backoff).
+    transport  : optional BoundaryTransport — every stage-boundary handoff
+                 (prefill, decode, admission, replay) is framed, CRC'd,
+                 ack'd, and deduplicated through it, and the delivered
+                 payload is rebuilt from the received bytes; with
+                 ``transport=None`` the handoff is the raw in-process
+                 array pass, byte-identical to before (same contract as
+                 ``telemetry=None``).
+    monitor    : optional HeartbeatMonitor — stages beat after every
+                 completed compute; a *silent* failure (``fail_silent``:
+                 the node goes dark without notification) is only acted
+                 on once the monitor confirms DEAD, at which point the
+                 stage enters ``down`` and the normal restore + replay
+                 machinery engages.  SUSPECTED alone (a stalled wire)
+                 never triggers a restore.
     """
 
     is_pipeline = True
 
     def __init__(self, cfg, params, plan, *, max_len: int, kv_block: int = 32,
-                 ckpt_dir=None, cluster=None, telemetry=None, retry=None):
+                 ckpt_dir=None, cluster=None, telemetry=None, retry=None,
+                 transport=None, monitor=None):
         self.cfg = cfg
         self.plan = plan
         self.max_len = int(max_len)
@@ -180,6 +196,9 @@ class PipelineServeEngine:
         self.cluster = cluster
         self.telemetry = telemetry
         self.retry = retry or RetryPolicy()
+        self._silent: set[int] = set()   # dark nodes awaiting confirmation
+        self.detections: list[tuple[int, float]] = []  # (stage, latency_s)
+        self.attach_wire(transport, monitor)
         self.down: set[int] = set()
         self.events: list[tuple[float, str]] = []
         # event-log timestamps are diagnostics, never token-affecting
@@ -367,16 +386,36 @@ class PipelineServeEngine:
         served[tgt] = served.get(tgt, 0) + 1
         return tgt
 
+    def _pre_stage(self, k):
+        """Liveness gate before computing stage ``k``: a silently-failed
+        node cannot answer, so the heartbeat monitor is driven until it
+        rules DEAD (raising :class:`StageDown` into the restore path) —
+        mere SUSPECTED keeps the pipeline serving."""
+        if k in self._silent:
+            self._confirm_dead(k)
+        self._require_up(k)
+
+    def _post_stage(self, k, x):
+        """After stage ``k`` computes: heartbeat, then the boundary wire
+        (framed/ack'd/deduped when a transport is attached; the delivered
+        payload is rebuilt from the received bytes)."""
+        if self.monitor is not None:
+            self.monitor.beat(k)
+        if self.transport is not None and k < self.n_stages - 1:
+            x = self.transport.send(k, x)
+        return x
+
     def _chain_prefill(self, batch, caches):
         x = side = None
         for k in range(self.n_stages):
-            self._require_up(k)
+            self._pre_stage(k)
             self._route(k)
             bk = self._stage_batch(k, batch, side)
             x, caches[k], s = _quiet(self._prefill_fns[k],
                                      self.stage_params[k], x, caches[k], bk)
             if s is not None:
                 side = s
+            x = self._post_stage(k, x)
         toks, logits = x
         return toks, logits, caches
 
@@ -384,12 +423,13 @@ class PipelineServeEngine:
         x = toks
         tel = self.telemetry
         for k in range(self.n_stages):
-            self._require_up(k)
+            self._pre_stage(k)
             self._route(k)
             if tel is None:
                 x, caches[k] = _quiet(self._decode_fns[k],
                                       self.stage_params[k], x, caches[k],
                                       bucket)
+                x = self._post_stage(k, x)
                 continue
             t0 = tel.now()
             x, caches[k] = _quiet(self._decode_fns[k], self.stage_params[k],
@@ -401,6 +441,7 @@ class PipelineServeEngine:
             if k < self.n_stages - 1:
                 # boundary materialization time stands in for the wire hop
                 tel.record_transfer(k, self._payload_bytes(x), t2 - t1)
+            x = self._post_stage(k, x)
         toks, logits = x
         return toks, logits, caches
 
@@ -448,14 +489,24 @@ class PipelineServeEngine:
             for k in sorted(self.down):
                 self.restore_stage(k)
         caches = self._fresh_caches(b, batch)
-        toks, _, caches = self._chain_prefill(batch, caches)
+        while True:
+            try:
+                toks, _, caches = self._chain_prefill(batch, caches)
+                break
+            except StageDown:      # silent failure confirmed mid-prefill
+                for k in sorted(self.down):
+                    self.restore_stage(k)
+                caches = self._fresh_caches(b, batch)
         outs = [toks]
         cur = prompt_len
         for step in range(gen_len - 1):
             for spec in kills:
                 if spec["after_step"] == step:
-                    self.kill_stage(spec["stage"],
-                                    replica=spec.get("replica"))
+                    if spec.get("silent"):
+                        self.fail_silent(spec["stage"])
+                    else:
+                        self.kill_stage(spec["stage"],
+                                        replica=spec.get("replica"))
             if self.down:
                 for k in sorted(self.down):
                     self.restore_stage(k)
@@ -467,11 +518,30 @@ class PipelineServeEngine:
                     min_gain_s=replan.get("min_gain_s", 0.0))
                 if res.changed:
                     toks, caches = self._replay_sync(batch, step)
-            toks, _, caches = self._chain_decode(toks, caches,
-                                                 self.bucket_for(cur + 1))
+            toks, caches = self._decode_step_checked(batch, toks, caches,
+                                                     step, cur)
             cur += 1
             outs.append(toks)
         return np.asarray(jnp.concatenate(outs, axis=1)).astype(np.int32)
+
+    def _decode_step_checked(self, batch, toks, caches, step, cur):
+        """One decode step with silent-failure recovery: a
+        :class:`StageDown` raised mid-chain (a silent stage the heartbeat
+        monitor just confirmed DEAD) restores every down stage, replays
+        the in-flight batch to ``step`` completed decode steps, and
+        retries.  Terminates: each confirmation resolves one silent stage
+        and the restore path replaces it.  Replays rebuild toks/caches
+        from scratch, so a chain aborted after donating some stage caches
+        is safe — the donated buffers are never re-read."""
+        while True:
+            try:
+                t, _, caches = self._chain_decode(toks, caches,
+                                                  self.bucket_for(cur + 1))
+                return t, caches
+            except StageDown:
+                for k in sorted(self.down):
+                    self.restore_stage(k)
+                toks, caches = self._replay_sync(batch, step)
 
     def _replay_sync(self, batch, steps_done):
         """Replay the in-flight batch after a restore or migration: fresh
@@ -531,6 +601,65 @@ class PipelineServeEngine:
         self.down.add(k)
         self.stage_params[k] = None
         self._note(f"node {self.node_of_stage[k]} FAILED (stage {k})")
+
+    def attach_wire(self, transport=None, monitor=None) -> None:
+        """Swap the boundary transport / heartbeat monitor and reset the
+        wire-side failure state.  The chaos campaign reuses one engine
+        across cases (stage compilation is the expensive part) and
+        attaches a fresh transport + monitor per case."""
+        if transport is not None and transport.n_hops != self.n_stages - 1:
+            raise ValueError(
+                f"transport has {transport.n_hops} hop(s) but the plan has "
+                f"{self.n_stages} stage(s) ({self.n_stages - 1} boundaries)")
+        self.transport = transport
+        self.monitor = monitor
+        self._silent.clear()
+        self.detections = []
+
+    def fail_silent(self, k: int) -> None:
+        """Inject a *silent* failure of stage ``k``'s primary: the node
+        stops computing and heartbeating but nothing raises yet — the
+        failure only becomes actionable once the heartbeat monitor rules
+        it DEAD (``_confirm_dead``, driven from ``_pre_stage``).
+        Requires a monitor: without one a silent failure is undetectable
+        by construction."""
+        if self.monitor is None:
+            raise ValueError(
+                f"stage {k}: silent failure injected with no heartbeat "
+                "monitor attached — it would never be detected")
+        self._require_up(k)
+        self._silent.add(k)
+        self._note(f"stage {k} (node {self.node_of_stage[k]}) went SILENT")
+
+    def _confirm_dead(self, k: int) -> None:
+        """Drive the heartbeat monitor until silent stage ``k`` is ruled
+        DEAD, then engage the existing kill path.
+
+        While the silence is short the stage is merely SUSPECTED: the
+        engine keeps serving and does **not** restore (a stalled wire
+        must never trigger a spurious checkpoint restore — suspicion
+        instead feeds ``ClusterState.fold_health`` via ``replan_live``).
+        Only at DEAD does the copy actually die: ``kill_stage`` absorbs
+        it with surviving replicas (zero restore, promotion) or raises
+        :class:`StageDown` into the restore/replay path when the last
+        copy is gone.  Detection latency (silence at confirmation) lands
+        in ``detections``."""
+        mon = self.monitor
+        noted = False
+        while (st := mon.state(k)) != DEAD:
+            if st == SUSPECTED and not noted:
+                noted = True
+                self._note(f"stage {k}: heartbeat SUSPECTED (silence "
+                           f"{mon.silence_s(k):.3g}s) — still serving, "
+                           "no restore")
+            mon.wait()
+        latency = float(mon.silence_s(k))
+        self.detections.append((k, latency))
+        self._silent.discard(k)
+        self._note(f"stage {k}: heartbeat silence {latency:.3g}s >= "
+                   f"{mon.dead_after_s:.3g}s — CONFIRMED DEAD")
+        self.kill_stage(k)             # survivors absorb; else StageDown:
+        self._require_up(k)
 
     def kill_replica(self, k: int, node: int | None = None) -> None:
         """Kill a warm replica of stage ``k`` (never the primary; default:
@@ -707,6 +836,8 @@ class PipelineServeEngine:
         if self.telemetry is not None and hasattr(state, "fold"):
             state.fold(self.telemetry, self.node_of_stage,
                        self.plan.dispatcher_node)
+        if self.monitor is not None and hasattr(state, "fold_health"):
+            state.fold_health(self.monitor.report(), self.node_of_stage)
         est = state.as_cluster() if hasattr(state, "as_cluster") else state
         res = incremental_replan(self.current_plan(), est,
                                  max_moves=max_moves, min_gain_s=min_gain_s,
@@ -773,13 +904,14 @@ class PipelineServeEngine:
         batch = {"tokens": tokens, **extras}
         x = side = None
         for k in range(self.n_stages):
-            self._require_up(k)
+            self._pre_stage(k)
             bk = self._stage_batch(k, batch, side)
             x, caches[k], s = _quiet(self._admit_fns[k],
                                      self.stage_params[k], x, caches[k], bk,
                                      np.int32(slot))
             if s is not None:
                 side = s
+            x = self._post_stage(k, x)
         tok, _ = x
         slot_tokens = jax.lax.dynamic_update_slice(slot_tokens, tok,
                                                    (slot, 0))

@@ -48,6 +48,7 @@ import numpy as np
 from repro.models import init_serve_cache, prefill
 
 from .engine import _quiet
+from .pipeline import StageDown
 
 
 @dataclasses.dataclass
@@ -238,8 +239,13 @@ class SlotScheduler:
                     if not fired[i] and n_steps >= spec["after_step"]:
                         fired[i] = True
                         hit = True
-                        eng.kill_stage(spec["stage"],
-                                       replica=spec.get("replica"))
+                        if spec.get("silent"):
+                            # node goes dark: nothing happens until the
+                            # heartbeat monitor confirms it DEAD mid-chain
+                            eng.fail_silent(spec["stage"])
+                        else:
+                            eng.kill_stage(spec["stage"],
+                                           replica=spec.get("replica"))
                 if hit and eng.down:
                     inflight = [(s, st[0], st[1])
                                 for s, st in sorted(active.items())]
@@ -269,8 +275,19 @@ class SlotScheduler:
                 tel.record_queue_depth(len(active))
             bucket = eng.bucket_for(
                 int(max(slot_len[s] for s in active)) + 1)
-            slot_tokens, _, cache = eng._decode_quiet(slot_tokens, cache,
-                                                      bucket)
+            while True:
+                try:
+                    slot_tokens, _, cache = eng._decode_quiet(
+                        slot_tokens, cache, bucket)
+                    break
+                except StageDown:
+                    # a silent failure just got confirmed DEAD mid-chain:
+                    # restore the stage and replay every in-flight request
+                    # into its slot, then retry the batched step
+                    inflight = [(s, st[0], st[1])
+                                for s, st in sorted(active.items())]
+                    cache, slot_tokens = eng.recover_and_replay(
+                        inflight, cache, slot_tokens, proto_batch)
             slot_len += 1                      # every row writes, active or not
             n_steps += 1
             busy += len(active)

@@ -134,13 +134,16 @@ class ClusterState:
     observation updates both directions.
     """
 
-    def __init__(self, cluster, *, alpha: float = 0.3, clip: float = 4.0):
+    def __init__(self, cluster, *, alpha: float = 0.3, clip: float = 4.0,
+                 suspect_penalty: float = 0.25):
         self.base = cluster
         self.alpha = float(alpha)
         self.clip = float(clip)
+        self.suspect_penalty = float(suspect_penalty)
         self.bw = cluster.bw.astype(np.float64).copy()
         self.compute_scale = np.asarray(cluster.compute_scale,
                                         np.float64).copy()
+        self.suspected: set[int] = set()  # nodes under heartbeat suspicion
         self.dropped = 0                 # out-of-range samples discarded
 
     def _ewma(self, est: float, sample: float) -> float:
@@ -186,9 +189,33 @@ class ClusterState:
                                    seconds)
         return len(samples)
 
+    def fold_health(self, report: dict, node_of_stage) -> int:
+        """Fold a heartbeat detector snapshot (stage -> ``"up"`` /
+        ``"suspected"`` / ``"dead"``, see ``HeartbeatMonitor.report``)
+        into the estimate: a SUSPECTED stage's node joins ``suspected``
+        and its links are penalized at ``as_cluster()`` time, so the
+        replanner steers work away from a possibly-stalled node without
+        destroying the EWMA estimate (suspicion is reversible — the next
+        healthy report clears it).  DEAD stages are *not* penalized here:
+        confirmation engages the restore path, which re-places the stage
+        outright.  Returns the number of suspected nodes."""
+        for k in sorted(report):
+            node = node_of_stage[k]
+            if report[k] == "suspected":
+                self.suspected.add(node)
+            else:
+                self.suspected.discard(node)
+        return len(self.suspected)
+
     def as_cluster(self):
-        """Materialize the current estimate as a ``ClusterGraph``."""
+        """Materialize the current estimate as a ``ClusterGraph``; links
+        of heartbeat-suspected nodes are multiplicatively penalized
+        (non-destructively — the EWMA estimate itself is untouched)."""
         from repro.core.cluster import ClusterGraph
-        return ClusterGraph(bw=self.bw.copy(), pos=self.base.pos,
+        bw = self.bw.copy()
+        for node in sorted(self.suspected):
+            bw[node, :] *= self.suspect_penalty
+            bw[:, node] *= self.suspect_penalty
+        return ClusterGraph(bw=bw, pos=self.base.pos,
                             labels=self.base.labels,
                             compute_scale=self.compute_scale.copy())

@@ -1,0 +1,38 @@
+"""Bound the process-wide JIT code-mapping count during the suite.
+
+Every jitted computation the suite compiles leaves executable mmap
+regions behind for as long as JAX's global caches hold the executable.
+One pytest process running the whole grid (equivalence replays compile
+fresh per-stage executors per cell) can cross the kernel's
+``vm.max_map_count`` (65530 by default), at which point LLVM's JIT gets
+ENOMEM and the process segfaults inside ``backend_compile`` — with tens
+of gigabytes of RAM still free.
+
+Rather than clearing caches after every test (which would force modules
+that legitimately share an engine across tests to recompile), this
+fixture watches ``/proc/self/maps`` and drops the JAX caches only when
+the count approaches the limit.  On platforms without procfs the guard
+is a no-op.
+"""
+
+import pytest
+
+_MAPS = "/proc/self/maps"
+_LIMIT = 40_000          # vm.max_map_count defaults to 65530; stay clear
+
+
+def _n_maps() -> int:
+    try:
+        with open(_MAPS, "rb") as f:
+            return sum(1 for _ in f)
+    except OSError:
+        return 0
+
+
+@pytest.fixture(autouse=True)
+def _bound_jit_mappings():
+    yield
+    if _n_maps() > _LIMIT:
+        import jax
+
+        jax.clear_caches()

@@ -1,0 +1,10 @@
+"""Corpus: a chaos schedule drawn from ambient state (path carries
+repro/chaos/) — wall-clock seeding and global-RNG draws make the
+campaign unreplayable."""
+import random
+import time
+
+
+def draw_schedule(n_cases):
+    seed = time.time()
+    return [(seed, random.random()) for _ in range(n_cases)]

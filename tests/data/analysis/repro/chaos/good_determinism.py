@@ -1,0 +1,11 @@
+"""Corpus: clean — a seeded generator object and an injected clock keep
+the campaign a pure function of its seed."""
+import time
+
+import numpy as np
+
+
+def draw_schedule(seed, n_cases, clock=time.perf_counter):
+    rng = np.random.default_rng([seed, 0xC4A05])
+    t0 = clock()
+    return [(t0, float(rng.random())) for _ in range(n_cases)]

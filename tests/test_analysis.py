@@ -67,6 +67,29 @@ def test_determinism_scope_covers_serve_layer():
     assert not clean.findings
 
 
+def test_determinism_scope_covers_chaos_layer():
+    # chaos campaigns must be pure functions of their seed (ISSUE 9):
+    # repro/chaos/ is lint-scoped like the other pinned paths.
+    bad = analyze_paths(
+        [str(CORPUS / "repro/chaos/bad_determinism.py")],
+        rules=["determinism"])
+    assert bad.findings, "determinism rule missed repro/chaos/"
+    assert {f.line for f in bad.findings} == {9, 10}
+    clean = analyze_paths(
+        [str(CORPUS / "repro/chaos/good_determinism.py")],
+        rules=["determinism"])
+    assert not clean.findings
+
+
+def test_chaos_package_passes_determinism_lint():
+    # the real package, not just the corpus: the campaign runner itself
+    # must satisfy the rule it is scoped under
+    src = REPO / "src" / "repro" / "chaos"
+    res = analyze_paths([str(p) for p in sorted(src.glob("*.py"))],
+                        rules=["determinism"])
+    assert not res.findings, [str(f) for f in res.findings]
+
+
 def test_findings_carry_location_and_sort_stably():
     res = analyze_paths([str(CORPUS / "bad_compat.py")])
     assert res.findings == sorted(res.findings)

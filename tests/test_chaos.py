@@ -1,0 +1,115 @@
+"""Chaos campaign runner (repro.chaos): seeded schedule generation,
+invariant checking against both serving and emulator engines, and ddmin
+shrinking of failing schedules to minimal repros.
+
+The expensive end-to-end replay (a real PipelineServeEngine driven
+through randomized wire faults and silent kills) runs once per module via
+the shared harness fixture; ``python -m repro.chaos --smoke`` covers the
+same path in CI.
+"""
+
+import pytest
+
+from repro.chaos import (ChaosCase, ChaosHarness, ddmin, generate_campaign,
+                         shrink_case)
+from repro.chaos.campaign import (atoms_of, case_fails, reduced,
+                                  run_emulator_case)
+
+
+class TestScheduleGeneration:
+    def test_same_seed_same_campaign(self):
+        assert generate_campaign(7, 5) == generate_campaign(7, 5)
+
+    def test_different_seeds_differ(self):
+        assert generate_campaign(1, 5) != generate_campaign(2, 5)
+
+    def test_cases_are_independent_substreams(self):
+        # a prefix of a longer campaign is exactly the shorter campaign:
+        # shrinking or re-running case i never perturbs case j
+        assert generate_campaign(3, 8)[:4] == generate_campaign(3, 4)
+
+    def test_schedules_are_in_range(self):
+        from repro.chaos.campaign import GEN_LEN, N_STAGES
+        for case in generate_campaign(11, 20):
+            for kind, hop, xfer, *rest in case.wire:
+                assert kind in ("drop", "corrupt", "dup", "reorder", "stall")
+                assert 0 <= hop < N_STAGES - 1
+                assert 0 <= xfer < GEN_LEN
+            if case.kill is not None:
+                assert 0 <= case.kill["stage"] < N_STAGES
+                assert 1 <= case.kill["after_step"] < GEN_LEN
+            assert any(s["kind"] == "wire" for s in case.emu)
+
+
+class TestDdmin:
+    def test_reduces_to_single_culprit(self):
+        assert ddmin(list(range(10)), lambda xs: 7 in xs) == [7]
+
+    def test_keeps_interacting_pair(self):
+        out = ddmin(list(range(8)), lambda xs: 2 in xs and 5 in xs)
+        assert out == [2, 5]
+
+    def test_schedule_independent_failure_reduces_to_empty(self):
+        assert ddmin([1, 2, 3], lambda xs: True) == []
+
+    def test_requires_failing_input(self):
+        with pytest.raises(ValueError, match="failing input"):
+            ddmin([1, 2], lambda xs: False)
+
+    def test_atoms_round_trip_through_reduced(self):
+        case = generate_campaign(5, 3)[0]
+        assert reduced(case, atoms_of(case)) == case
+
+
+class TestEmulatorHalf:
+    def test_composed_schedule_holds_lockstep(self):
+        case = generate_campaign(0, 1)[0]
+        assert run_emulator_case(case) == []
+
+    def test_kill_plus_wire_plus_degrade(self):
+        case = ChaosCase(cid="manual", emu=(
+            {"kind": "wire", "hop": 0, "t": 2.0, "loss": 0.3,
+             "duration": None, "seed": 3},
+            {"kind": "degrade", "hop": 0, "t": 5.0, "factor": 0.5,
+             "duration": 20.0},
+            {"kind": "kill", "stage": 1, "t": 10.0},
+        ))
+        assert run_emulator_case(case) == []
+
+
+@pytest.fixture(scope="module")
+def harness():
+    return ChaosHarness(seed=0)
+
+
+class TestServingHalf:
+    def test_campaign_cases_hold_invariants(self, harness):
+        for case in generate_campaign(0, 2):
+            assert harness.run_case(case) == [], case.cid
+
+    def test_exhausting_schedule_is_caught_and_shrunk(self, harness):
+        # 6 drops of one frame defeat the 6-attempt policy: the case
+        # fails (WireExhausted), and ddmin strips the incidental faults
+        bad = ChaosCase(cid="forced",
+                        wire=tuple([("drop", 0, 1)] * 6)
+                        + (("dup", 1, 2), ("reorder", 0, 4)))
+        fails = lambda c: case_fails(harness, c, emulator=False)
+        assert fails(bad)
+        small = shrink_case(bad, fails)
+        assert small.kill is None and small.emu == ()
+        assert list(small.wire) == [("drop", 0, 1)] * 6
+
+    def test_silent_kill_detected_within_bound(self, harness):
+        case = ChaosCase(cid="silent", kill={"after_step": 2, "stage": 1,
+                                             "silent": True})
+        assert harness.run_case(case) == []
+        stage, latency = harness.eng.detections[-1]
+        assert stage == 1
+        assert latency >= harness.eng.monitor.dead_after_s
+
+    def test_spare_pool_refills_between_cases(self, harness):
+        before = len(harness.eng.spares)
+        case = ChaosCase(cid="kill", kill={"after_step": 1, "stage": 0,
+                                           "silent": False})
+        assert harness.run_case(case) == []
+        assert len(harness.eng.spares) >= min(before, 4)

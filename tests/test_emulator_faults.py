@@ -351,3 +351,75 @@ class TestEffectiveCluster:
         eff = effective_cluster(cluster, [NodeFault(1.0, 2)], 5.0)
         assert eff.bw[2, :].sum() == 0.0 and eff.bw[:, 2].sum() == 0.0
         assert eff.compute_scale[2] == 0.0
+
+
+from repro.emulator import WireLoss  # noqa: E402
+
+
+class TestWireLoss:
+    """Unreliable-wire frame loss (ISSUE 9): Bernoulli loss on one link,
+    priced as retransmissions in both engines and composing with the
+    drift faults through the EffectLedger."""
+
+    def test_lost_frames_retransmit_and_complete(self):
+        emu = make_emu(5, compute_s=(0.2, 0.05))
+        FaultInjector(emu).schedule([WireLoss(1.0, 1, 2, 0.4, seed=3)])
+        m = emu.run(50, 1e6)
+        assert m["completed"] == 50, "wire loss lost work for good"
+        msgs = [msg for _, msg in m["events"]]
+        assert "wire (1,2) loss x0.4 ON" in msgs
+        assert any("wire (1,2) frame LOST — retransmit" in s for s in msgs)
+
+    def test_windowed_loss_clears(self):
+        emu = make_emu(5, compute_s=(0.2, 0.05))
+        FaultInjector(emu).schedule([WireLoss(1.0, 1, 2, 0.9,
+                                              duration_s=5.0, seed=3)])
+        m = emu.run(50, 1e6)
+        assert m["completed"] == 50
+        msgs = [msg for _, msg in m["events"]]
+        assert "wire (1,2) loss cleared" in msgs
+
+    def test_loss_rate_validated(self):
+        with pytest.raises(ValueError, match="loss_rate"):
+            WireLoss(0.0, 0, 1, 1.0)
+        with pytest.raises(ValueError, match="loss_rate"):
+            WireLoss(0.0, 0, 1, -0.1)
+        WireLoss(0.0, 0, 1, 0.0)                   # boundary: valid
+
+    def test_identical_in_both_engines(self):
+        ref, fast = _both_engines([WireLoss(1.0, 1, 2, 0.3, seed=5)])
+        assert ref["completed"] == fast["completed"] == 50
+        assert ref["mean_e2e_s"] == fast["mean_e2e_s"]
+        assert ref["events"] == fast["events"]
+
+    def test_composes_with_degrade_and_slowdown_in_both_engines(self):
+        # the EffectLedger surface: loss + drift overlap on the same link
+        # while the downstream node is slowed — the worst-case chaos cell
+        faults = compose_faults(
+            [WireLoss(1.0, 1, 2, 0.3, duration_s=30.0, seed=5)],
+            [LinkDegrade(3.0, 1, 2, 0.5, 10.0)],
+            [NodeSlowdown(2.0, 2, 0.5, 6.0)])
+        ref, fast = _both_engines(faults)
+        assert ref["completed"] == fast["completed"] == 50
+        assert ref["mean_e2e_s"] == fast["mean_e2e_s"]
+        assert ref["p95_e2e_s"] == fast["p95_e2e_s"]
+        assert ref["events"] == fast["events"]
+        assert any("frame LOST" in s for _, s in ref["events"])
+        assert any("degraded" in s for _, s in ref["events"])
+
+    def test_loss_slows_delivery(self):
+        clean, _ = _both_engines([])
+        lossy, _ = _both_engines([WireLoss(0.0, 1, 2, 0.5, seed=1)])
+        assert lossy["mean_e2e_s"] > clean["mean_e2e_s"]
+
+    def test_effective_cluster_prices_loss_as_bandwidth_factor(self):
+        cluster = uniform_cluster(4)
+        sched = [WireLoss(1.0, 0, 1, 0.25, duration_s=10.0, seed=0),
+                 LinkDegrade(5.0, 0, 1, 0.5, None)]
+        assert effective_cluster(cluster, sched, 0.5).bw[0, 1] == BW
+        at2 = effective_cluster(cluster, sched, 2.0)
+        assert at2.bw[0, 1] == BW * 0.75           # expected goodput
+        at6 = effective_cluster(cluster, sched, 6.0)
+        assert at6.bw[0, 1] == BW * 0.75 * 0.5     # composed with drift
+        at20 = effective_cluster(cluster, sched, 20.0)
+        assert at20.bw[0, 1] == BW * 0.5           # loss window over

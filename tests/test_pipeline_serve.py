@@ -353,6 +353,185 @@ def test_checkpoint_blip_recovers_within_retry_budget(tmp_path, monkeypatch):
     assert eng.generate(batch, 4).shape == (1, 4)
 
 
+class TestWireAndSilentFailures:
+    """ISSUE 9 tentpole at engine level: boundary handoffs through the
+    framed transport stay token-identical under wire faults, and silent
+    node death is detected by heartbeat silence (suspected first — no
+    restore — then confirmed dead into the existing restore path)."""
+
+    @staticmethod
+    def _wire(eng, faults=()):
+        from repro.serve.transport import (BoundaryTransport, FakeWireClock,
+                                           HeartbeatMonitor,
+                                           parse_wire_faults)
+        clk = FakeWireClock()
+        mon = HeartbeatMonitor(eng.n_stages, clock=clk, sleep=clk.sleep)
+        tr = BoundaryTransport(eng.n_stages - 1,
+                               faults=parse_wire_faults(faults),
+                               policy=RetryPolicy(attempts=6,
+                                                  base_delay_s=0.0),
+                               monitor=mon, clock=clk, sleep=clk.sleep)
+        eng.attach_wire(tr, mon)
+        return tr, mon
+
+    def test_tokens_identical_under_all_fault_kinds(self, tmp_path):
+        cfg, eng = _dense_engine(tmp_path)
+        batch = make_batch(cfg, 1, 8, 3)
+        clean = eng.generate(batch, 6)
+        tr, _ = self._wire(eng, [["drop", 0, 1], ["corrupt", 0, 2, 9],
+                                 ["dup", 0, 3], ["reorder", 0, 4],
+                                 ["stall", 0, 5, 3.0]])
+        toks = eng.generate(batch, 6)
+        np.testing.assert_array_equal(clean, toks)
+        assert tr.exactly_once()
+        assert tr.total("retransmits") == 3        # drop, corrupt, reorder
+        assert tr.total("stale_dropped") == 1
+        assert not any("rescheduled" in m for _, m in eng.events), \
+            "wire trouble must never trigger a restore"
+
+    def test_stall_surfaces_as_suspicion_not_restore(self, tmp_path):
+        cfg, eng = _dense_engine(tmp_path)
+        batch = make_batch(cfg, 1, 8, 3)
+        tr, mon = self._wire(eng, [["stall", 0, 2, 3.0]])
+        eng.generate(batch, 6)
+        assert tr.total("stalls") == 1 and tr.total("suspected") == 1
+        assert eng.detections == []                # suspected != dead
+        assert not any("rescheduled" in m for _, m in eng.events)
+
+    def test_silent_kill_detected_then_restored_token_identical(
+            self, tmp_path):
+        cfg, eng = _dense_engine(tmp_path)
+        batch = make_batch(cfg, 1, 8, 3)
+        clean = eng.generate(batch, 6)
+        self._wire(eng)
+        toks = eng.generate(batch, 6, kill={"after_step": 2, "stage": 1,
+                                            "silent": True})
+        np.testing.assert_array_equal(clean, toks)
+        assert len(eng.detections) == 1
+        stage, latency = eng.detections[0]
+        assert stage == 1
+        assert latency >= eng.monitor.dead_after_s
+        assert latency <= eng.monitor.dead_after_s + eng.monitor.poll_s
+        msgs = [m for _, m in eng.events]
+        i_sil = next(i for i, m in enumerate(msgs) if "went SILENT" in m)
+        i_sus = next(i for i, m in enumerate(msgs) if "SUSPECTED" in m)
+        i_dead = next(i for i, m in enumerate(msgs) if "CONFIRMED DEAD" in m)
+        i_res = next(i for i, m in enumerate(msgs) if "rescheduled" in m)
+        assert i_sil < i_sus < i_dead < i_res      # graded escalation
+        assert eng.node_of_stage[1] == 90
+
+    def test_fail_silent_requires_monitor(self, tmp_path):
+        cfg, eng = _dense_engine(tmp_path)
+        with pytest.raises(ValueError, match="no heartbeat monitor"):
+            eng.fail_silent(1)
+
+    def test_attach_wire_validates_hop_count(self, tmp_path):
+        from repro.serve.transport import BoundaryTransport
+        cfg, eng = _dense_engine(tmp_path)
+        with pytest.raises(ValueError, match="hop"):
+            eng.attach_wire(BoundaryTransport(5))
+
+    def test_fold_health_penalizes_suspected_nodes(self):
+        from repro.core.cluster import ClusterGraph
+        from repro.serve.transport import DEAD, SUSPECTED, UP
+        n = 4
+        bw = np.full((n, n), 100.0)
+        np.fill_diagonal(bw, 0.0)
+        state = ClusterState(ClusterGraph(bw=bw), suspect_penalty=0.25)
+        n_sus = state.fold_health({0: UP, 1: SUSPECTED, 2: DEAD},
+                                  node_of_stage=[1, 2, 3])
+        # only suspicion penalizes: DEAD engages the restore path instead
+        assert n_sus == 1
+        eff = state.as_cluster()
+        assert eff.bw[2, 0] == 25.0 and eff.bw[0, 2] == 25.0
+        assert eff.bw[1, 0] == 100.0               # healthy row untouched
+        # recovery: a clean report lifts the penalty
+        state.fold_health({0: UP, 1: UP, 2: UP}, node_of_stage=[1, 2, 3])
+        assert state.as_cluster().bw[2, 0] == 100.0
+
+
+class TestCheckpointIntegrity:
+    """Per-leaf checksums (ISSUE 9 satellite): a bit-flipped or truncated
+    leaf raises CheckpointCorrupt instead of silently loading bad
+    weights, and — being a ValueError — stays retryable on the serving
+    restore path."""
+
+    @staticmethod
+    def _flip_byte(path):
+        raw = bytearray(path.read_bytes())
+        raw[-1] ^= 0x40                  # last payload byte
+        path.write_bytes(bytes(raw))
+
+    def test_bit_flip_raises_checkpoint_corrupt(self, tmp_path):
+        from repro.checkpoint import (CheckpointCorrupt, restore_checkpoint,
+                                      save_checkpoint)
+        tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4)}
+        save_checkpoint(tmp_path, 0, tree)
+        self._flip_byte(tmp_path / "step_00000000" / "leaf_0.npy")
+        with pytest.raises(CheckpointCorrupt, match="checksum mismatch"):
+            restore_checkpoint(tmp_path, 0, tree)
+        assert issubclass(CheckpointCorrupt, ValueError)  # retryable class
+
+    def test_intact_restore_is_bit_exact(self, tmp_path):
+        from repro.checkpoint import restore_checkpoint, save_checkpoint
+        tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                "b": np.float32(3.5)}
+        save_checkpoint(tmp_path, 0, tree)
+        out = restore_checkpoint(tmp_path, 0, tree)
+        np.testing.assert_array_equal(out["w"], tree["w"])
+        assert out["b"] == tree["b"]
+
+    def test_pre_checksum_manifest_restores_unverified(self, tmp_path):
+        # backward compatibility: manifests without crc32 fields load
+        from repro.checkpoint import restore_checkpoint, save_checkpoint
+        tree = {"w": np.arange(8, dtype=np.float32)}
+        save_checkpoint(tmp_path, 0, tree)
+        man = tmp_path / "step_00000000" / "manifest.json"
+        doc = json.loads(man.read_text())
+        for leaf in doc["leaves"]:
+            del leaf["crc32"]
+        man.write_text(json.dumps(doc))
+        self._flip_byte(tmp_path / "step_00000000" / "leaf_0.npy")
+        restore_checkpoint(tmp_path, 0, tree)      # unverified, no raise
+
+    def test_engine_restore_rejects_corrupt_then_recovers(self, tmp_path):
+        import shutil
+        cfg, eng = _dense_engine(tmp_path)
+        eng.retry = FAST_RETRY
+        eng.kill_stage(1)
+        step_dir = tmp_path / "ckpt" / "stage_1" / "step_00000000"
+        shutil.copytree(step_dir, step_dir.with_suffix(".bak"))
+        self._flip_byte(step_dir / "leaf_0.npy")
+        with pytest.raises(RestoreExhausted) as ei:
+            eng.restore_stage(1)
+        assert "checksum mismatch" in ei.value.attempts[-1].error
+        assert 1 in eng.down and eng.spares == [90]   # pool untouched
+        shutil.rmtree(step_dir)                        # repair the replica
+        step_dir.with_suffix(".bak").rename(step_dir)
+        eng.restore_stage(1)                           # retryable: recovers
+        assert not eng.down
+
+    def test_transient_corrupt_read_is_a_blip(self, tmp_path, monkeypatch):
+        from repro.checkpoint import CheckpointCorrupt
+        cfg, eng = _dense_engine(tmp_path)
+        eng.retry = FAST_RETRY
+        eng.kill_stage(1)
+        import repro.serve.pipeline as pl
+        real, fails = pl.restore_checkpoint, [1]
+
+        def torn_read(*a, **kw):
+            if fails[0] > 0:
+                fails[0] -= 1
+                raise CheckpointCorrupt("torn page")
+            return real(*a, **kw)
+
+        monkeypatch.setattr(pl, "restore_checkpoint", torn_read)
+        eng.restore_stage(1)                   # 1 corrupt read < 3 attempts
+        assert not eng.down
+        batch = make_batch(cfg, 1, 8, 3)
+        assert eng.generate(batch, 4).shape == (1, 4)
+
+
 def test_migrate_stage_keeps_tokens_and_recycles_node(tmp_path):
     cfg, eng = _dense_engine(tmp_path)
     batch = make_batch(cfg, 1, 8, 3)

@@ -68,3 +68,60 @@ def test_exhaustion_history_matches_attempts():
                    what="t", policy=p, retry_on=(OSError,),
                    sleep=lambda s: None)
     assert len(ei.value.attempts) == 2
+
+
+class TestSeededJitter:
+    """Decorrelated backoff (ISSUE 9 satellite): jitter shaves a seeded
+    uniform fraction off each delay so concurrent retry loops stop
+    colliding, while jitter=0 stays bit-identical to the unjittered
+    schedule."""
+
+    def test_jitter_validated(self):
+        with pytest.raises(ValueError, match="jitter"):
+            RetryPolicy(jitter=-0.1)
+        with pytest.raises(ValueError, match="jitter"):
+            RetryPolicy(jitter=1.5)
+        RetryPolicy(jitter=0.0)
+        RetryPolicy(jitter=1.0)                    # boundaries: valid
+
+    def test_jitter_zero_is_bit_identical(self):
+        plain = RetryPolicy(attempts=4)
+        zero = RetryPolicy(attempts=4, jitter=0.0, jitter_seed=123)
+        us = zero.jitter_stream("anything")
+        for i in range(4):
+            assert next(us) is None
+            assert zero.delay_s(i, next(us)) == plain.delay_s(i)
+
+    def test_jittered_delay_is_shrunk_never_grown(self):
+        p = RetryPolicy(jitter=0.5, jitter_seed=7)
+        us = p.jitter_stream("site")
+        for i in range(6):
+            d = p.delay_s(i, next(us))
+            assert 0.5 * p.delay_s(i) <= d <= p.delay_s(i)
+
+    def test_stream_is_deterministic_per_site_and_seed(self):
+        p = RetryPolicy(jitter=0.5, jitter_seed=7)
+        a = [next(p.jitter_stream("site-a")) for _ in range(1)]
+        b = [next(p.jitter_stream("site-a")) for _ in range(1)]
+        assert a == b                              # same site: same draws
+        seq_a = p.jitter_stream("site-a")
+        seq_b = p.jitter_stream("site-b")
+        draws_a = [next(seq_a) for _ in range(4)]
+        draws_b = [next(seq_b) for _ in range(4)]
+        assert draws_a != draws_b                  # sites decorrelated
+        other = RetryPolicy(jitter=0.5, jitter_seed=8)
+        assert draws_a != [next(other.jitter_stream("site-a"))
+                           for _ in range(4)]      # seeds decorrelated
+
+    def test_retry_call_sleeps_jittered_delays(self):
+        slept = []
+        p = RetryPolicy(attempts=3, base_delay_s=1.0, backoff=2.0,
+                        max_delay_s=100.0, jitter=0.5, jitter_seed=3)
+        with pytest.raises(RetryExhausted):
+            retry_call(lambda: (_ for _ in ()).throw(OSError("x")),
+                       what="w", policy=p, retry_on=(OSError,),
+                       sleep=slept.append)
+        us = p.jitter_stream("w")
+        want = [p.delay_s(0, next(us)), p.delay_s(1, next(us))]
+        assert slept == want                       # replayable schedule
+        assert slept[0] != 1.0 and slept[1] != 2.0

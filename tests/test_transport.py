@@ -1,0 +1,217 @@
+"""Unreliable-wire boundary transport + heartbeat failure detection
+(repro.serve.transport, ISSUE 9 tentpole).
+
+The framed channel must deliver every boundary payload exactly once, in
+order, bit-identically, no matter how the injected wire misbehaves — and
+the failure detector must grade silence (SUSPECTED for a stalled wire,
+DEAD only past the confirmation timeout) rather than conflate the two.
+Property tests drive randomized fault schedules through
+``repro.compat.testing`` (real hypothesis when installed, the seeded
+deterministic fallback otherwise).
+"""
+
+import numpy as np
+import pytest
+
+from repro.compat.testing import given, settings, strategies as st
+from repro.serve.retry import RetryPolicy
+from repro.serve.transport import (DEAD, SUSPECTED, UP, BoundaryTransport,
+                                   CorruptPayload, Drop, Duplicate,
+                                   FakeWireClock, HeartbeatMonitor, Reorder,
+                                   Stall, WireExhausted, parse_wire_faults,
+                                   seeded_wire_faults)
+
+FAST = RetryPolicy(attempts=6, base_delay_s=0.0)
+
+
+def make_transport(faults=(), *, n_hops=2, monitor=None,
+                   policy=FAST) -> tuple[BoundaryTransport, FakeWireClock]:
+    clk = FakeWireClock()
+    tr = BoundaryTransport(n_hops, faults=faults, policy=policy,
+                           monitor=monitor, clock=clk, sleep=clk.sleep)
+    return tr, clk
+
+
+def payload(seed: int):
+    """A pytree shaped like a boundary handoff (activations + a scalar)."""
+    rng = np.random.default_rng(seed)
+    return {"h": rng.standard_normal((2, 3)).astype(np.float32),
+            "step": np.int32(seed)}
+
+
+def assert_same(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        got, want = np.asarray(b[k]), np.asarray(a[k])
+        assert got.dtype == want.dtype and got.shape == want.shape
+        assert np.array_equal(got, want)
+
+
+class TestFramedChannel:
+    def test_clean_send_round_trips_bitexactly(self):
+        tr, _ = make_transport()
+        p = payload(0)
+        assert_same(p, tr.send(0, p))
+        s = tr.stats[0]
+        assert (s.sent, s.delivered, s.retransmits) == (1, 1, 0)
+        assert tr.exactly_once()
+
+    @pytest.mark.parametrize("fault, field", [
+        (Drop(0, 0), "dropped"),
+        (CorruptPayload(0, 0, bit=13), "corrupt_rejected"),
+        (Duplicate(0, 0), "dup_dropped"),
+        (Reorder(0, 0), "stale_dropped"),
+    ])
+    def test_single_fault_still_delivers_exactly_once(self, fault, field):
+        tr, _ = make_transport([fault])
+        p = payload(1)
+        assert_same(p, tr.send(0, p))
+        assert tr.exactly_once()
+        assert getattr(tr.stats[0], field) == 1
+        # drop/corrupt/reorder cost one retransmission; a duplicate does not
+        want_rt = 0 if isinstance(fault, Duplicate) else 1
+        assert tr.stats[0].retransmits == want_rt
+
+    def test_corrupt_frame_is_rejected_not_delivered(self):
+        # the delivered payload must be the pristine retransmission, not
+        # the bit-flipped copy the CRC NAK'd
+        for bit in (0, 7, 100, 10_000):
+            tr, _ = make_transport([CorruptPayload(0, 0, bit=bit)])
+            p = payload(bit)
+            assert_same(p, tr.send(0, p))
+            assert tr.stats[0].corrupt_rejected == 1
+
+    def test_reorder_reclassifies_stale_not_duplicate(self):
+        tr, _ = make_transport([Reorder(0, 1)])
+        for i in range(3):
+            tr.send(0, payload(i))
+        s = tr.stats[0]
+        assert (s.stale_dropped, s.dup_dropped) == (1, 0)
+        assert tr.exactly_once()
+
+    def test_fault_chain_on_one_frame_exhausts_policy(self):
+        # 6 consecutive drops of the same frame defeat a 6-attempt policy
+        tr, _ = make_transport([Drop(0, 2)] * 6)
+        tr.send(0, payload(0))
+        tr.send(0, payload(1))
+        with pytest.raises(WireExhausted) as ei:
+            tr.send(0, payload(2))
+        assert len(ei.value.attempts) == 6
+        assert not tr.exactly_once()          # the frame really was lost
+
+    def test_fault_on_wrong_hop_rejected_at_construction(self):
+        with pytest.raises(ValueError, match="hop 5"):
+            make_transport([Drop(5, 0)])
+
+    def test_hops_are_independent(self):
+        tr, _ = make_transport([Drop(0, 0), Duplicate(1, 0)])
+        assert_same(payload(0), tr.send(0, payload(0)))
+        assert_same(payload(1), tr.send(1, payload(1)))
+        assert tr.stats[0].dropped == 1 and tr.stats[0].dup_dropped == 0
+        assert tr.stats[1].dup_dropped == 1 and tr.stats[1].dropped == 0
+
+    def test_stall_trips_suspicion_but_frame_arrives(self):
+        clk = FakeWireClock()
+        mon = HeartbeatMonitor(3, clock=clk, sleep=clk.sleep)
+        tr = BoundaryTransport(2, faults=[Stall(0, 0, stall_s=3.0)],
+                               policy=FAST, monitor=mon, clock=clk,
+                               sleep=clk.sleep)
+        p = payload(0)
+        assert_same(p, tr.send(0, p))
+        assert tr.stats[0].stalls == 1
+        assert tr.stats[0].suspected == 1          # 3 s > suspect_after 2 s
+        assert tr.exactly_once()
+        # the downstream stage beats once it computes: suspicion clears
+        mon.beat(1)
+        assert mon.state(1) == UP
+
+
+SPEC_KINDS = ["drop", "corrupt", "dup", "reorder"]
+
+
+class TestTransportProperties:
+    @settings(max_examples=25)
+    @given(st.lists(st.integers(0, len(SPEC_KINDS) * 2 * 6 - 1),
+                    min_size=0, max_size=8),
+           st.integers(0, 999))
+    def test_exactly_once_under_any_schedule(self, codes, pseed):
+        """Any (non-exhausting) schedule of drop/corrupt/dup/reorder
+        faults over 2 hops x 6 frames delivers every payload exactly
+        once, in order, bit-identically."""
+        faults = []
+        for c in codes:
+            kind, rest = SPEC_KINDS[c % len(SPEC_KINDS)], c // len(SPEC_KINDS)
+            hop, xfer = rest % 2, rest // 2
+            faults.append(parse_wire_faults([[kind, hop, xfer, 9]])[0])
+        # cap per-frame chains below the retry budget
+        by_key = {}
+        kept = []
+        for f in faults:
+            key = (f.hop, f.xfer)
+            if by_key.get(key, 0) < 4:
+                by_key[key] = by_key.get(key, 0) + 1
+                kept.append(f)
+        tr, _ = make_transport(kept)
+        sent = [[payload(pseed * 100 + h * 10 + i) for i in range(6)]
+                for h in range(2)]
+        for i in range(6):
+            for h in range(2):
+                assert_same(sent[h][i], tr.send(h, sent[h][i]))
+        assert tr.exactly_once()
+        assert tr.total("sent") == tr.total("delivered") == 12
+
+    @settings(max_examples=20)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_seeded_schedules_are_reproducible(self, seed):
+        a = seeded_wire_faults(seed, 3, 10, rate=0.3)
+        b = seeded_wire_faults(seed, 3, 10, rate=0.3)
+        assert a == b
+        assert all(0 <= f.hop < 3 and 0 <= f.xfer < 10 for f in a)
+
+
+class TestHeartbeatMonitor:
+    def test_silence_grades_up_suspected_dead(self):
+        clk = FakeWireClock()
+        mon = HeartbeatMonitor(2, clock=clk, sleep=clk.sleep)
+        assert mon.state(0) == UP
+        clk.sleep(2.0)
+        assert mon.state(0) == SUSPECTED
+        clk.sleep(5.9)
+        assert mon.state(0) == SUSPECTED       # 7.9 s < dead_after 8 s
+        clk.sleep(0.1)
+        assert mon.state(0) == DEAD
+        assert mon.silence_s(0) == pytest.approx(8.0)
+
+    def test_beat_resets_silence(self):
+        clk = FakeWireClock()
+        mon = HeartbeatMonitor(2, clock=clk, sleep=clk.sleep)
+        clk.sleep(7.0)
+        mon.beat(0)
+        assert mon.state(0) == UP and mon.state(1) == SUSPECTED
+        assert mon.report() == {0: UP, 1: SUSPECTED}
+
+    def test_wait_advances_one_poll(self):
+        clk = FakeWireClock()
+        mon = HeartbeatMonitor(1, poll_s=0.5, clock=clk, sleep=clk.sleep)
+        mon.wait()
+        assert clk.t == pytest.approx(0.5)
+
+    def test_thresholds_validated(self):
+        with pytest.raises(ValueError, match="suspicion must precede"):
+            HeartbeatMonitor(1, suspect_after_s=9.0, dead_after_s=8.0)
+        with pytest.raises(ValueError, match="poll_s"):
+            HeartbeatMonitor(1, poll_s=0.0)
+
+    def test_suspected_is_not_dead_no_restore_threshold(self):
+        # the split the detector exists for: a stall that clears before
+        # dead_after_s never reaches DEAD
+        clk = FakeWireClock()
+        mon = HeartbeatMonitor(1, clock=clk, sleep=clk.sleep)
+        states = []
+        for _ in range(16):
+            clk.sleep(0.5)
+            states.append(mon.state(0))
+        assert states[2] == UP                   # 1.5 s: still healthy
+        assert states[3] == SUSPECTED            # 2.0 s is the boundary
+        assert SUSPECTED in states and DEAD in states
+        assert states.index(DEAD) - states.index(SUSPECTED) == 12
