@@ -14,8 +14,16 @@ smoke presets (real JAX compute on CPU):
 * ``pipeline_decode[_int8]/<arch>`` — steady-state decode through
   ``PipelineServeEngine`` over a mid-model stage cut (the stage IR), with
   a raw and a rowwise-int8-quantized boundary wire; ``vs_monolithic`` is
-  the pipelining overhead vs the monolithic fast path (raw wire asserts
-  token identity live; int8 is lossy by design);
+  the decode throughput ratio vs the monolithic fast path — monolithic
+  median / pipelined median, bigger = better, < 1 means the partition
+  costs throughput (raw wire asserts token identity live; int8 is lossy
+  by design);
+* ``pipeline_decode_4stage[_overlap]/<arch>`` — the same decode over a
+  4-stage cut, sequential vs the overlapped executor (``overlap=True``:
+  async dispatch, donated boundary buffers, micro-batch interleave), an
+  on/off ablation so the overlap win is attributable; ``--check``
+  additionally gates the tentpole acceptance number: overlapped 4-stage
+  decode at >= 1.0x monolithic throughput (best-of-reps);
 * ``wire_faults/<arch>`` — the same pipelined decode with every boundary
   handoff framed through ``BoundaryTransport`` under a seeded wire-fault
   schedule (rate ``WIRE_LOSS``): ``wire_overhead`` is the framing +
@@ -147,13 +155,57 @@ def measure(reps: int, with_naive: bool) -> dict:
         e = {"median_us": med * 1e6, "min_us": lo * 1e6,
              "decode_toks_per_s": round(toks / med, 1),
              "mono_median_us": mono_med * 1e6,
-             "vs_monolithic": round(med / mono_med, 2), "wire_bits": bits}
+             "vs_monolithic": round(mono_med / med, 2), "wire_bits": bits}
         if with_naive and bits == 0:
             # equivalence contract, live: pipelined == monolithic tokens
             mono = eng.generate(batch, DECODE_STEPS, engine="fast")
             pipe = peng.generate(batch, DECODE_STEPS)
             assert (mono == pipe).all(), \
                 f"{PIPE_ARCH}: pipelined tokens diverged from monolithic"
+        entries[f"{name}/{PIPE_ARCH}"] = e
+
+    # -- 4-stage cut: sequential vs overlapped executor (ablation) ----------
+    # The smoke preset is deepened to 4 layers so the plan has interior
+    # cuts (same recipe as the equivalence cells).  Both cells serve the
+    # identical model/batch as their own 4-layer monolithic baseline, so
+    # vs_monolithic is comparable across the on/off pair and the overlap
+    # win is attributable to the executor alone (on one shared device the
+    # overlapped executor degenerates to a single fused dispatch per
+    # micro-batch — the boundary handoff never materializes; see
+    # PipelineServeEngine._fused_ok).
+    cfg4 = get_config(PIPE_ARCH, "smoke")
+    if cfg4.n_layers < 4:
+        cfg4 = cfg4.replace(n_layers=4)
+    params4 = init_params(cfg4, jax.random.PRNGKey(0))
+    eng4 = ServeEngine(cfg4, params4, max_len=MAX_LEN, kv_block=KV_BLOCK)
+    batch4 = make_batch(cfg4, BATCH, PROMPT_LEN, 42)
+    eng4.warmup(batch4, DECODE_STEPS + 1)
+    mono4_med, mono4_lo = time_s(
+        lambda: eng4.timed_decode(batch4, DECODE_STEPS), reps)
+    mono4_toks = eng4.generate(batch4, DECODE_STEPS, engine="fast") \
+        if with_naive else None
+    toks4 = DECODE_STEPS * BATCH
+    plan4 = from_block_cuts(cfg4, [1, 2, 3])
+    for name, ov in [("pipeline_decode_4stage", False),
+                     ("pipeline_decode_4stage_overlap", True)]:
+        peng = PipelineServeEngine(cfg4, params4, plan4, max_len=MAX_LEN,
+                                   kv_block=KV_BLOCK, overlap=ov)
+        peng.warmup(batch4, DECODE_STEPS + 1)
+        med, lo = time_s(lambda: peng.timed_decode(batch4, DECODE_STEPS),
+                         reps)
+        e = {"median_us": med * 1e6, "min_us": lo * 1e6,
+             "decode_toks_per_s": round(toks4 / med, 1),
+             "mono_median_us": mono4_med * 1e6,
+             "mono_min_us": mono4_lo * 1e6,
+             "vs_monolithic": round(mono4_med / med, 2),
+             "overlap": ov,
+             "micro_batches": peng._resolve_micro(BATCH)}
+        if with_naive:
+            # equivalence contract, live: the overlapped executor reorders
+            # execution, never math — same tokens as the monolithic engine
+            pipe = peng.generate(batch4, DECODE_STEPS)
+            assert (mono4_toks == pipe).all(), \
+                f"{name}: pipelined tokens diverged from monolithic"
         entries[f"{name}/{PIPE_ARCH}"] = e
 
     # -- pipelined decode over an unreliable wire ---------------------------
@@ -240,8 +292,22 @@ def measure(reps: int, with_naive: bool) -> dict:
 
 
 def check(reps: int) -> int:
-    return check_bench("serve_bench", BENCH_PATH,
-                       measure(reps, with_naive=False), CHECK_RATIO)
+    entries = measure(reps, with_naive=False)
+    rc = check_bench("serve_bench", BENCH_PATH, entries, CHECK_RATIO)
+    # tentpole acceptance gate (ISSUE 10 / ROADMAP open item 2): the
+    # overlapped 4-stage pipelined decode must reach at least parity with
+    # the monolithic engine on the gate model (best-of-reps on both
+    # sides, the least-noise estimator --check already uses)
+    ov = entries.get(f"pipeline_decode_4stage_overlap/{PIPE_ARCH}")
+    if ov is not None:
+        ratio = ov["mono_min_us"] / ov["min_us"]
+        ok = ratio >= 1.0
+        print(f"serve_bench: overlap gate {'ok' if ok else 'FAIL'} — "
+              f"overlapped 4-stage decode {ratio:.2f}x monolithic "
+              "(best-of-reps, >= 1.0 required)")
+        if not ok:
+            rc = rc or 1
+    return rc
 
 
 def update(reps: int) -> None:
@@ -258,8 +324,15 @@ def update(reps: int) -> None:
                      f"{STREAM_SLOTS} continuous-batching slots; "
                      "pipeline_decode[_int8] = the same decode through "
                      "PipelineServeEngine over a mid-model stage cut "
-                     "(vs_monolithic = pipelining overhead, raw vs "
-                     "rowwise-int8 boundary wire); wire_faults = the same "
+                     "(vs_monolithic = monolithic median / pipelined "
+                     "median, a decode throughput ratio, bigger = better; "
+                     "raw vs rowwise-int8 boundary wire); "
+                     "pipeline_decode_4stage[_overlap] = a 4-stage cut on "
+                     "a 4-layer preset, sequential vs the overlapped "
+                     "executor (async dispatch + donated boundary "
+                     "buffers + micro-batch interleave), with --check "
+                     "gating the overlap cell at >= 1.0x monolithic "
+                     "best-of-reps; wire_faults = the same "
                      "pipelined decode through the framed BoundaryTransport "
                      f"under a seeded fault schedule at rate {WIRE_LOSS} "
                      "(wire_overhead = vs the transportless pipe); --check "

@@ -51,6 +51,14 @@ PYTHONPATH=src python -m repro.analysis --check src tests benchmarks examples
 phase "pytest"
 python -m pytest -x -q
 
+phase "pytest: multidevice shard (8 emulated devices)"
+# re-runs the multidevice-marked tests with the CPU split into 8 XLA
+# devices, exercising real per-stage placement + cross-device boundary
+# handoffs in the overlapped executor; on one device these tests
+# auto-skip (tests/conftest.py), so this shard is where they run
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m pytest -x -q -m multidevice
+
 phase "smoke: fixture drift (one cell per pinned family)"
 # regenerates one small cell per pinned fixture (planner, emulator, serve)
 # through the reference path and byte-compares it against the committed

@@ -10,6 +10,7 @@ from .rules_compat import CompatBoundaryRule
 from .rules_jit import DonationAfterUseRule, JitPurityRule
 from .rules_pallas import PallasStructureRule
 from .rules_rng import DeterminismRule, PrngDisciplineRule
+from .rules_sync import SyncInHotLoopRule
 
 _RULE_CLASSES = (
     CompatBoundaryRule,
@@ -18,6 +19,7 @@ _RULE_CLASSES = (
     PrngDisciplineRule,
     DeterminismRule,
     PallasStructureRule,
+    SyncInHotLoopRule,
 )
 
 

@@ -1,0 +1,85 @@
+"""sync-in-hot-loop: keep the serving steady-state loops async.
+
+The overlapped pipeline executor's throughput comes from the dispatch
+loop never blocking on the device: every jitted step is enqueued, the
+host races ahead, and stage k+1's dispatch overlaps stage k's compute.
+A single ``jax.block_until_ready`` — or any implicit device->host copy
+(``jax.device_get``, ``np.asarray`` on a device array, a scalar
+``.item()`` read) — inside the loop body serializes the pipeline back to
+lockstep and silently erases the overlap win.
+
+The rule flags those constructs lexically inside ``for``/``while``
+bodies under ``repro/serve/``.  Intentional sync points are allowlisted
+with ``# repro: ignore[sync-in-hot-loop]`` plus a justification — the
+telemetry tick (which *must* observe a live value), a per-rep timing
+sync in a benchmark helper.  The wire layer (``repro/serve/transport``)
+is excluded wholesale: serializing a boundary frame to host bytes is its
+job, not a leak.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .engine import Project, Rule
+
+# dotted call targets that force a host<->device rendezvous
+_SYNC_DOTTED = {
+    "jax.block_until_ready": "blocks until every queued computation lands",
+    "jax.device_get": "copies device buffers to host, fencing the stream",
+    "numpy.asarray": "materializes a device array on host, fencing the "
+                     "stream",
+    "numpy.array": "materializes a device array on host, fencing the "
+                   "stream",
+}
+
+
+class SyncInHotLoopRule(Rule):
+    id = "sync-in-hot-loop"
+    summary = ("a host sync (block_until_ready / device_get / np.asarray / "
+               ".item()) inside a serving steady-state loop defeats async "
+               "dispatch")
+    scopes = ("repro/serve/",)
+    excludes = ("repro/serve/transport",)
+
+    _HINT = ("hoist the sync out of the loop (fetch tokens once after the "
+             "last step, like ServeEngine.generate) or suppress with a "
+             "justification at an intentional sync point (telemetry tick, "
+             "timed-rep fence)")
+
+    def check(self, project: Project):
+        for mod in self.in_scope(project):
+            seen = set()
+            for loop in ast.walk(mod.tree):
+                if not isinstance(loop, (ast.For, ast.AsyncFor, ast.While)):
+                    continue
+                for node in ast.walk(loop):
+                    if node is loop or not isinstance(node, ast.Call):
+                        continue
+                    key = (node.lineno, node.col_offset)
+                    if key in seen:        # nested loops walk bodies twice
+                        continue
+                    f = self._classify(mod, node)
+                    if f is not None:
+                        seen.add(key)
+                        yield f
+
+    def _classify(self, mod, call: ast.Call):
+        dotted = mod.dotted(call.func)
+        why = _SYNC_DOTTED.get(dotted or "")
+        if why is not None:
+            return self.finding(
+                mod, call,
+                f"`{dotted}` inside a steady-state serving loop — {why}",
+                self._HINT)
+        # scalar fetch: x.item() on anything (device arrays dominate here;
+        # a host-side .item() in a hot loop is a smell either way)
+        if (isinstance(call.func, ast.Attribute)
+                and call.func.attr == "item" and not call.args
+                and not call.keywords):
+            return self.finding(
+                mod, call,
+                "`.item()` inside a steady-state serving loop pulls a "
+                "scalar to host, fencing the dispatch stream",
+                self._HINT)
+        return None

@@ -38,7 +38,16 @@ def main(argv=None) -> int:
     report = run_campaign(args.seed, n_cases, serve=not args.no_serve,
                           emulator=not args.no_emulator, log=print)
     print(report.summary())
-    if report.ok:
+    ok = report.ok
+    if args.smoke and not args.no_serve:
+        # one extra case through the overlapped executor (ISSUE 10): the
+        # same invariants must hold with 2 micro-batches in flight
+        ov = run_campaign(args.seed, 1, serve=True, emulator=False,
+                          overlap=True,
+                          log=lambda m: print(f"overlap {m}"))
+        print("overlap " + ov.summary())
+        ok = ok and ov.ok
+    if ok:
         return 0
 
     if not args.no_shrink:

@@ -168,7 +168,8 @@ class ChaosHarness:
     are arbitrary labels, so minting new spares keeps the engine
     reusable for arbitrarily many cases and shrink probes)."""
 
-    def __init__(self, arch: str = "granite-3-2b", *, seed: int = 0):
+    def __init__(self, arch: str = "granite-3-2b", *, seed: int = 0,
+                 overlap: bool = False):
         import jax
 
         from repro.configs import get_config
@@ -183,8 +184,12 @@ class ChaosHarness:
         params = init_params(cfg, jax.random.PRNGKey(0))
         plan = from_block_cuts(cfg, list(CUTS),
                                spare_nodes=tuple(range(900, 906)))
+        # overlap=True replays cases through the overlapped executor
+        # (ISSUE 10): 2 micro-batches in flight per decode step, same
+        # invariants — chaos must not care how dispatch is ordered
         self.eng = PipelineServeEngine(cfg, params, plan, max_len=32,
-                                       kv_block=16)
+                                       kv_block=16, overlap=overlap,
+                                       micro_batches=2 if overlap else None)
         self.batch = make_batch(cfg, 2, 12, seed)
         self._next_spare = 910
         self.baseline = self.eng.generate(self.batch, GEN_LEN).tolist()
@@ -299,12 +304,15 @@ def run_emulator_case(case: ChaosCase, *, n_batches: int = 40) -> list[str]:
 
 def run_campaign(seed: int = 0, n_cases: int = 6, *, arch="granite-3-2b",
                  serve: bool = True, emulator: bool = True,
-                 log=None) -> CampaignReport:
+                 overlap: bool = False, log=None) -> CampaignReport:
     """Generate and replay one campaign; every failing case is reported
     with its violated invariants (shrink separately via
-    :func:`repro.chaos.shrink.shrink_case`)."""
+    :func:`repro.chaos.shrink.shrink_case`).  ``overlap`` replays the
+    serving half through the overlapped executor (micro-batches in
+    flight) — the invariants are identical by contract."""
     cases = generate_campaign(seed, n_cases)
-    harness = ChaosHarness(arch, seed=seed) if serve else None
+    harness = ChaosHarness(arch, seed=seed, overlap=overlap) if serve \
+        else None
     results = []
     for case in cases:
         res = CaseResult(case.cid)

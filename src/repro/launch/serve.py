@@ -16,6 +16,13 @@ token-identical oracle; see ROADMAP.md "Serving-perf contract").
 slot scheduler rather than one synchronized batch.  ``--plan`` prints the
 SEIFER stage plan for the production TPU cluster (the compile-only path
 for full presets is repro.launch.dryrun with --variant serve2d).
+
+``--cuts C1,C2,...`` serves through ``PipelineServeEngine`` over those
+block cuts instead; ``--overlap`` turns on the overlapped executor
+(skewed async dispatch, donated boundary handoffs, ``--micro-batches M``
+in flight), and ``--devices auto`` places one stage per visible jax
+device — emulate a fleet on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 
 from __future__ import annotations
@@ -47,6 +54,21 @@ def main():
     ap.add_argument("--plan", action="store_true",
                     help="print the SEIFER pipeline-stage plan for the "
                          "2-pod production cluster")
+    ap.add_argument("--cuts", default="", metavar="C1,C2",
+                    help="serve through PipelineServeEngine over these "
+                         "block cuts (e.g. 1,2,3)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped pipeline executor: skewed async "
+                         "dispatch + donated boundary handoffs + "
+                         "micro-batch interleave (needs --cuts)")
+    ap.add_argument("--micro-batches", type=int, default=None,
+                    help="micro-batches in flight under --overlap "
+                         "(default: n_stages when multi-device, else 1)")
+    ap.add_argument("--devices", default=None,
+                    help="per-stage placement: 'auto' round-robins stages "
+                         "onto jax.devices(); emulate a fleet with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, args.preset)
@@ -64,6 +86,32 @@ def main():
     key = jax.random.PRNGKey(0)
     params = init_params(cfg, key)
     b, pl, gl = args.batch, args.prompt_len, args.gen_len
+
+    if args.cuts:
+        from repro.core.stageplan import from_block_cuts
+        from repro.serve import PipelineServeEngine
+        cuts = [int(c) for c in args.cuts.split(",")]
+        peng = PipelineServeEngine(cfg, params, from_block_cuts(cfg, cuts),
+                                   max_len=pl + gl, kv_block=32,
+                                   overlap=args.overlap,
+                                   micro_batches=args.micro_batches,
+                                   devices=args.devices)
+        batch = make_batch(cfg, b, pl, seed=0)
+        compile_s = peng.warmup(batch, gl)
+        t0 = time.perf_counter()
+        toks = peng.generate(batch, gl)
+        dt = time.perf_counter() - t0
+        decode_s = peng.timed_decode(batch, gl - 1)
+        mode = "overlap" if args.overlap else "sequential"
+        n_dev = len(set(peng.devices)) if peng.devices else 1
+        print(f"[serve/pipeline-{mode}] {cfg.name}: {len(cuts) + 1} stages "
+              f"on {n_dev} device(s), {peng._resolve_micro(b)} "
+              f"micro-batch(es) in flight: {b * gl} tokens in {dt:.2f}s; "
+              f"decode-only {b * (gl - 1) / decode_s:.1f} tok/s; "
+              f"warmup+compile {compile_s:.2f}s, excluded; "
+              f"sample: {toks[0, :8].tolist()}")
+        return
+
     eng = ServeEngine(cfg, params, max_len=pl + gl, kv_block=32)
 
     if args.stream:

@@ -225,7 +225,41 @@ def stage_cache_len(cfg: ModelConfig, cache):
     return _cache_len(cfg, cache)
 
 
+def resolve_stage_devices(spec, n_stages: int):
+    """Resolve a per-stage device assignment.
+
+    ``None`` means no explicit placement (every stage on the default
+    device — the single-node layout).  ``"auto"`` round-robins the
+    ``n_stages`` logical stages onto whatever ``jax.devices()`` exposes —
+    one stage per device on a fleet (or a CPU emulating one via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``), wrapping
+    when stages outnumber devices.  An explicit sequence of devices is
+    cycled the same way.  Returns ``None`` or a list of ``n_stages``
+    devices."""
+    if spec is None:
+        return None
+    if isinstance(spec, str):
+        if spec != "auto":
+            raise ValueError(f"devices spec must be None, 'auto', or a "
+                             f"sequence of jax devices, got {spec!r}")
+        pool = jax.devices()
+    else:
+        pool = list(spec)
+        if not pool:
+            raise ValueError("devices sequence is empty")
+    return [pool[k % len(pool)] for k in range(n_stages)]
+
+
+def place_stage_params(sparams, device):
+    """Commit one stage's param subtree to its executor's device (the
+    runtime half of the plan's node assignment: stage k's weights live
+    where stage k computes)."""
+    if device is None:
+        return sparams
+    return jax.device_put(sparams, device)
+
+
 __all__ = ["check_stage_ranges", "embed_tokens", "encode",
            "extract_stage_params", "init_stage_cache", "lm_logits",
-           "stage_backbone", "stage_cache_len", "stage_fill_cross",
-           "stage_granularity"]
+           "place_stage_params", "resolve_stage_devices", "stage_backbone",
+           "stage_cache_len", "stage_fill_cross", "stage_granularity"]

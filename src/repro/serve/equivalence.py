@@ -15,7 +15,9 @@ replica kill, and a last-copy kill falling back to restore + replay, and
 ``-wire`` / ``-wire-silentkill`` cells that route every stage-boundary
 handoff through the framed ``BoundaryTransport`` under injected
 drop/corrupt/duplicate/reorder/stall wire faults and a heartbeat-detected
-silent node death) — and
+silent node death, and ``-overlap*`` cells that serve through the
+overlapped executor — skewed async dispatch with >= 2 micro-batches in
+flight — under the same kill/wire/silent-kill fault surface) — and
 a capture function
 that pins the *reference* greedy token streams.  Tokens are ints, so the pin is
 exact by nature (the token-level analogue of the float.hex() pins
@@ -163,6 +165,32 @@ PIPELINE_STREAM_WIRE_CELLS = [
      [{"after_step": 4, "stage": 1, "silent": True}], "-wire-silentkill"),
 ]
 
+# overlapped executor (ISSUE 10, ROADMAP "Pipelined multi-device
+# execution"): the same requests served with ``overlap=True`` and the
+# batch split into 2 micro-batches, so >= 2 are in flight on every decode
+# step.  Overlap reorders *execution* — skewed dispatch, donated boundary
+# buffers, micro-batch interleave — never math, so the pins are the same
+# monolithic REFERENCE tokens as everywhere else, now enforced across a
+# mid-stream stage kill + restore + replay with micro-batches in flight,
+# a faulted wire schedule, and a heartbeat-detected silent kill.
+# Entries: (arch, n_layers, cuts, micro_batches, kills, wire, suffix).
+PIPELINE_OVERLAP_CELLS = [
+    ("granite-3-2b", 4, [1, 2, 3], 2, None, None, "-overlap"),
+    ("granite-3-2b", 4, [1, 2, 3], 2,
+     [{"after_step": 3, "stage": 1}], None, "-overlap-kill"),
+    ("mamba2-1.3b", 4, [1, 2, 3], 2,
+     [{"after_step": 3, "stage": 2}], None, "-overlap-kill"),
+    ("granite-3-2b", 4, [1, 3], 2, None,
+     [["drop", 0, 1], ["corrupt", 1, 2, 3], ["dup", 0, 3],
+      ["reorder", 1, 4], ["stall", 0, 5, 3.0]], "-overlap-wire"),
+    ("granite-3-2b", 4, [2], 2,
+     [{"after_step": 3, "stage": 1, "silent": True}], None,
+     "-overlap-silentkill"),
+]
+PIPELINE_STREAM_OVERLAP_CELLS = [
+    ("granite-3-2b", 4, [2], 2, None, None, "-overlap"),
+]
+
 
 def _pipe_id(prefix, arch, cuts, kill, replan=None):
     cid = f"{prefix}/{arch}/cut{'-'.join(map(str, cuts))}"
@@ -234,6 +262,20 @@ def scenarios() -> list[dict]:
                     "n_layers": nl, "cuts": cuts, "wire": wire,
                     "kill": kills, "slots": 2, "requests": STREAM_REQUESTS,
                     "seed": 1, "max_len": 32, "kv_block": 16})
+    for arch, nl, cuts, m, kills, wire, sfx in PIPELINE_OVERLAP_CELLS:
+        cid = f"pipeline/{arch}/cut{'-'.join(map(str, cuts))}{sfx}"
+        out.append({"id": cid, "kind": "pipeline", "arch": arch,
+                    "n_layers": nl, "cuts": cuts, "wire": wire,
+                    "kill": kills, "overlap": {"micro_batches": m},
+                    "batch": 2, "prompt_len": 12, "gen_len": 8, "seed": 0,
+                    "max_len": 32, "kv_block": 16})
+    for arch, nl, cuts, m, kills, wire, sfx in PIPELINE_STREAM_OVERLAP_CELLS:
+        cid = f"pipeline-stream/{arch}/cut{'-'.join(map(str, cuts))}{sfx}"
+        out.append({"id": cid, "kind": "pipeline_stream", "arch": arch,
+                    "n_layers": nl, "cuts": cuts, "wire": wire,
+                    "kill": kills, "overlap": {"micro_batches": m},
+                    "slots": 2, "requests": STREAM_REQUESTS, "seed": 1,
+                    "max_len": 32, "kv_block": 16})
     return out
 
 
@@ -287,6 +329,7 @@ def build_pipeline_engine(sc: dict, eng: ServeEngine):
     onto the (unobserved, still-fast) spare."""
     from repro.core.stageplan import from_block_cuts
     from .pipeline import PipelineServeEngine
+    ov = sc.get("overlap") or {}
     if sc.get("replan"):
         from repro.core.cluster import ClusterGraph
         from repro.models.config import SHAPES
@@ -306,7 +349,9 @@ def build_pipeline_engine(sc: dict, eng: ServeEngine):
         return PipelineServeEngine(eng.cfg, eng.params, plan,
                                    max_len=sc["max_len"],
                                    kv_block=sc["kv_block"],
-                                   cluster=cluster, telemetry=tel)
+                                   cluster=cluster, telemetry=tel,
+                                   overlap=bool(ov),
+                                   micro_batches=ov.get("micro_batches"))
     plan = from_block_cuts(eng.cfg, sc["cuts"], spare_nodes=(900, 901),
                            replicas=sc.get("replicas"))
     transport = monitor = None
@@ -331,7 +376,9 @@ def build_pipeline_engine(sc: dict, eng: ServeEngine):
     return PipelineServeEngine(eng.cfg, eng.params, plan,
                                max_len=sc["max_len"],
                                kv_block=sc["kv_block"],
-                               transport=transport, monitor=monitor)
+                               transport=transport, monitor=monitor,
+                               overlap=bool(ov),
+                               micro_batches=ov.get("micro_batches"))
 
 
 def _replan_arg(sc: dict, peng) -> dict | None:
@@ -348,8 +395,13 @@ def _requests(cfg, sc) -> list[Request]:
     reqs = []
     for i, (plen, glen) in enumerate(sc["requests"]):
         b = make_batch(cfg, 1, plen, sc["seed"] * 1000 + i)
-        reqs.append(Request(rid=i, tokens=np.asarray(b.pop("tokens")),
-                            gen_len=glen, extras=b))
+        # scenario construction, not a decode loop: requests carry host
+        # tokens by contract (Request.tokens is np)
+        reqs.append(Request(
+            rid=i,
+            tokens=np.asarray(  # repro: ignore[sync-in-hot-loop]
+                b.pop("tokens")),
+            gen_len=glen, extras=b))
     return reqs
 
 

@@ -83,7 +83,7 @@ from repro.kernels.quantize.ref import rowwise_quantize
 from repro.models import staging
 from repro.models.layers import set_decode_kv_bucket
 
-from .engine import _quiet
+from .engine import _quiet, _quiet_scope
 from .retry import RetryExhausted, RetryPolicy, retry_call
 from .transport import DEAD, SUSPECTED
 
@@ -159,13 +159,35 @@ class PipelineServeEngine:
                  stage enters ``down`` and the normal restore + replay
                  machinery engages.  SUSPECTED alone (a stalled wire)
                  never triggers a restore.
+    overlap    : run ``generate``/``timed_decode`` through the overlapped
+                 executor — micro-batched, async-dispatched, one host loop
+                 that never blocks in the steady state (JAX async dispatch
+                 is the scheduler).  Overlap reorders *execution only*:
+                 greedy tokens are bit-identical to the sequential chain
+                 (pinned by the ``-overlap`` equivalence cells, including
+                 kill/restore/replay and wire faults with micro-batches in
+                 flight).
+    micro_batches : decode/prefill micro-batch count under ``overlap``
+                 (clamped to the batch size; forced to 1 for MoE, whose
+                 expert capacity is batch-coupled).  Default: one
+                 micro-batch per stage when stages span multiple devices
+                 (fills the pipeline bubbles), else 1 — splitting on a
+                 single shared device only adds dispatch overhead.
+    devices    : per-stage device placement — ``None`` (default device,
+                 the single-node layout), ``"auto"`` (round-robin stages
+                 onto ``jax.devices()``; emulate a fleet on CPU via
+                 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``),
+                 or an explicit device sequence.  Params, caches, and
+                 boundary handoffs are committed to the owning stage's
+                 device; placement never affects tokens.
     """
 
     is_pipeline = True
 
     def __init__(self, cfg, params, plan, *, max_len: int, kv_block: int = 32,
                  ckpt_dir=None, cluster=None, telemetry=None, retry=None,
-                 transport=None, monitor=None):
+                 transport=None, monitor=None, overlap: bool = False,
+                 micro_batches: int | None = None, devices=None):
         self.cfg = cfg
         self.plan = plan
         self.max_len = int(max_len)
@@ -175,9 +197,17 @@ class PipelineServeEngine:
         staging.check_stage_ranges(cfg, self.ranges)
         self.n_stages = len(self.ranges)
         last = self.n_stages - 1
+        self.overlap = bool(overlap)
+        self.micro_batches = (None if micro_batches is None
+                              else int(micro_batches))
+        self.devices = staging.resolve_stage_devices(devices, self.n_stages)
+        self._multi_device = (self.devices is not None
+                              and len(set(self.devices)) > 1)
         self.stage_params = [
-            staging.extract_stage_params(cfg, params, lo, hi, k == 0,
-                                         k == last)
+            staging.place_stage_params(
+                staging.extract_stage_params(cfg, params, lo, hi, k == 0,
+                                             k == last),
+                self._stage_device(k))
             for k, (lo, hi) in enumerate(self.ranges)]
         self.node_of_stage = [s.node for s in plan.stages]
         self.replica_nodes = [list(s.replicas) for s in plan.stages]
@@ -218,13 +248,29 @@ class PipelineServeEngine:
             self._templates.append(jax.tree.map(
                 lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), sp))
 
+        # non-first stages also donate their boundary input buffer: the
+        # payload is consumed exactly once, so the freed buffer becomes
+        # the stage's other half of a double-buffered handoff (stage k
+        # computes micro-batch i while the k->k+1 wire's buffer for
+        # micro-batch i-1 is recycled).  Stage 0's input is the token
+        # array callers retain (outs / slot_tokens), so it is never
+        # donated.  Donation changes buffer reuse, never math.
         self._prefill_fns = [jax.jit(self._prefill_body(k),
-                                     donate_argnums=(2,))
+                                     donate_argnums=(2,) if k == 0
+                                     else (1, 2))
                              for k in range(self.n_stages)]
         self._decode_fns = [jax.jit(self._decode_body(k),
-                                    static_argnums=(3,), donate_argnums=(2,))
+                                    static_argnums=(3,),
+                                    donate_argnums=(2,) if k == 0
+                                    else (1, 2))
                             for k in range(self.n_stages)]
-        self._admit_fns = [jax.jit(self._admit_body(k), donate_argnums=(2,))
+        # degenerate overlap (all stages on one device, bare wire): the
+        # whole decode chain as one fused dispatch — see _fused_ok
+        self._fused_decode = None
+        self._rebuild_fused()
+        self._admit_fns = [jax.jit(self._admit_body(k),
+                                   donate_argnums=(2,) if k == 0
+                                   else (1, 2))
                            for k in range(self.n_stages)]
         self._scatter_fns = [jax.jit(self._scatter_body(k),
                                      donate_argnums=(0,))
@@ -246,16 +292,35 @@ class PipelineServeEngine:
                 jnp.dtype(self.cfg.param_dtype))
         return x
 
+    # -- per-stage device placement ----------------------------------------
+
+    def _stage_device(self, k):
+        """Stage ``k``'s device, or None under the single-node layout."""
+        return None if self.devices is None else self.devices[k]
+
+    def _to_stage(self, k, x):
+        """Commit ``x`` to stage ``k``'s device (async copy; identity
+        under the single-node layout)."""
+        if self.devices is None or x is None:
+            return x
+        return jax.device_put(x, self.devices[k])
+
+    def _adopt_params(self, k, tree):
+        """A restored/migrated param subtree onto stage ``k``'s device."""
+        return staging.place_stage_params(jax.tree.map(jnp.asarray, tree),
+                                          self._stage_device(k))
+
     # -- per-stage step bodies ---------------------------------------------
 
     def _stage_batch(self, k, batch, side):
-        """The parts of the request a non-first stage needs."""
+        """The parts of the request a non-first stage needs (committed to
+        the consuming stage's device when stages are placed)."""
         if k == 0:
             return batch
         if self.cfg.family == "vlm":
-            return {"vision": batch["vision"]}
+            return {"vision": self._to_stage(k, batch["vision"])}
         if self.cfg.family == "encdec":
-            return {"enc_out": side}
+            return {"enc_out": self._to_stage(k, side)}
         return {}
 
     def _prefill_body(self, k):
@@ -398,11 +463,18 @@ class PipelineServeEngine:
     def _post_stage(self, k, x):
         """After stage ``k`` computes: heartbeat, then the boundary wire
         (framed/ack'd/deduped when a transport is attached; the delivered
-        payload is rebuilt from the received bytes)."""
+        payload is rebuilt from the received bytes).  With per-stage
+        placement the handoff lands on stage ``k+1``'s device — via the
+        transport's rebuild when one is attached, else a direct async
+        device-to-device copy."""
         if self.monitor is not None:
             self.monitor.beat(k)
-        if self.transport is not None and k < self.n_stages - 1:
-            x = self.transport.send(k, x)
+        if k < self.n_stages - 1:
+            if self.transport is not None:
+                x = self.transport.send(k, x,
+                                        device=self._stage_device(k + 1))
+            elif self.devices is not None:
+                x = jax.device_put(x, self.devices[k + 1])
         return x
 
     def _chain_prefill(self, batch, caches):
@@ -420,7 +492,7 @@ class PipelineServeEngine:
         return toks, logits, caches
 
     def _chain_decode(self, toks, caches, bucket):
-        x = toks
+        x = self._to_stage(0, toks)   # last stage's toks back to stage 0
         tel = self.telemetry
         for k in range(self.n_stages):
             self._pre_stage(k)
@@ -435,7 +507,8 @@ class PipelineServeEngine:
             x, caches[k] = _quiet(self._decode_fns[k], self.stage_params[k],
                                   x, caches[k], bucket)
             t1 = tel.now()
-            jax.block_until_ready(x)
+            # telemetry sampling is an allowlisted sync point
+            jax.block_until_ready(x)  # repro: ignore[sync-in-hot-loop]
             t2 = tel.now()
             tel.record_decode(k, t2 - t0)
             if k < self.n_stages - 1:
@@ -455,9 +528,12 @@ class PipelineServeEngine:
         return self._chain_decode(toks, caches, bucket)
 
     def _fresh_caches(self, b, batch):
-        return [staging.init_stage_cache(self.cfg, lo, hi, b, self.max_len,
-                                         batch=batch)
-                for lo, hi in self.ranges]
+        caches = [staging.init_stage_cache(self.cfg, lo, hi, b, self.max_len,
+                                           batch=batch)
+                  for lo, hi in self.ranges]
+        if self.devices is not None:
+            caches = [self._to_stage(k, c) for k, c in enumerate(caches)]
+        return caches
 
     # -- synchronized-batch generation with deterministic fault injection ---
 
@@ -480,6 +556,9 @@ class PipelineServeEngine:
         ``max_moves``, ``min_gain_s``); if the plan changed, the in-flight
         batch is replayed across the migrated placement, so the stream is
         identical to an undisturbed run."""
+        if self.overlap:
+            return self._generate_overlap(batch, gen_len, kill=kill,
+                                          replan=replan)
         tokens = batch["tokens"]
         b, prompt_len = tokens.shape
         self._check_fit(prompt_len, gen_len)
@@ -559,6 +638,243 @@ class PipelineServeEngine:
         self._note(f"replayed {b} in-flight request(s), {steps_done} "
                    "decode step(s)")
         return toks, caches
+
+    # -- overlapped execution (async dispatch + micro-batch interleave) -----
+    #
+    # The overlapped executor reorders *execution only*.  Each micro-batch
+    # is an independent greedy stream (slot isolation: per-row tokens do
+    # not depend on batch composition, the property the pipeline-stream
+    # cells already pin), so splitting a synchronized batch and skewing
+    # the dispatch schedule — at tick t, stage k runs micro-batch t-k —
+    # cannot change a single token.  The host loop only enqueues work:
+    # JAX async dispatch queues each stage call on its stage's device,
+    # per-device FIFO order preserves the data dependencies, and with
+    # stages on distinct devices stage k computes micro-batch i while the
+    # k->k+1 handoff of micro-batch i-1 is still in flight (the donated
+    # boundary buffers above make the handoff double-buffered).  The
+    # steady-state loop never blocks; the only host syncs are the
+    # end-of-generate materialization and telemetry sampling.
+
+    def _resolve_micro(self, b: int) -> int:
+        """Micro-batch count for a ``b``-row batch (see ``micro_batches``
+        in the class docstring)."""
+        if not self.overlap:
+            return 1
+        if self.cfg.family == "moe":
+            # expert capacity is contended across the batch (Switch-style
+            # drops), so splitting would change routing — never split
+            return 1
+        m = self.micro_batches
+        if m is None:
+            m = self.n_stages if self._multi_device else 1
+        return max(1, min(int(m), b))
+
+    @staticmethod
+    def _split_batch(batch, m: int):
+        """Split every request field into ``m`` contiguous row blocks
+        (row order is preserved, so concatenating the per-micro-batch
+        streams restores the caller's batch order)."""
+        if m == 1:
+            return [batch]
+        b = batch["tokens"].shape[0]
+        bounds = [(i * b) // m for i in range(m + 1)]
+        return [{kk: v[lo:hi] for kk, v in batch.items()}
+                for lo, hi in zip(bounds[:-1], bounds[1:])]
+
+    def _overlap_prefill(self, mbs):
+        """Prefill ``mbs`` through the stage pipeline on the skewed
+        schedule (enqueue-only; fresh per-micro-batch per-stage caches).
+        Returns (per-micro-batch first tokens, per-micro-batch caches)."""
+        m = len(mbs)
+        last = self.n_stages - 1
+        caches_mb = [self._fresh_caches(mb["tokens"].shape[0], mb)
+                     for mb in mbs]
+        xs = [None] * m
+        sides = [None] * m
+        fns, sp = self._prefill_fns, self.stage_params
+        for t in range(m + last):
+            for k in range(min(t, last), max(t - m, -1), -1):
+                j = t - k
+                self._pre_stage(k)
+                self._route(k)
+                bk = self._stage_batch(k, mbs[j], sides[j])
+                xs[j], caches_mb[j][k], s = fns[k](sp[k], xs[j],
+                                                   caches_mb[j][k], bk)
+                if s is not None:
+                    sides[j] = s
+                xs[j] = self._post_stage(k, xs[j])
+        return [x[0] for x in xs], caches_mb
+
+    def _rebuild_fused(self):
+        """(Re)build the fused decode chain for the degenerate-overlap
+        fast path.  The whole chain is ONE traceable function: stage k's
+        output feeds stage k+1 directly inside the trace, so the
+        boundary handoff is function composition — it never
+        materializes.  It composes the exact per-stage bodies the staged
+        path jits individually (same ops, same order: bit-identical
+        tokens, pinned by the ``-overlap`` equivalence cells).  Stage
+        params are closed over as trace-time residents — a serving node
+        does not re-ship its weights every step — so every restore or
+        migration that swaps a stage's param subtree rebuilds the fused
+        program."""
+        if not self.overlap:
+            return
+        bodies = [self._decode_body(k) for k in range(self.n_stages)]
+        sps = list(self.stage_params)
+
+        def fn(toks, caches, kv_bucket):
+            x, out = toks, []
+            for k, body in enumerate(bodies):
+                x, c = body(sps[k], x, caches[k], kv_bucket)
+                out.append(c)
+            return x, out
+
+        self._fused_decode = jax.jit(fn, static_argnums=(2,),
+                                     donate_argnums=(1,))
+
+    def _fused_ok(self) -> bool:
+        """True when the overlapped executor may take the fused-dispatch
+        fast path.  With every stage on one device the skewed schedule
+        cannot overlap anything — a single device queue serializes the
+        stage calls and each one pays full dispatch — so the executor
+        instead dispatches the whole chain as one fused jitted call per
+        micro-batch (the strongest double-buffering: the boundary buffer
+        never exists).  Anything that observes per-stage execution —
+        per-stage devices, a boundary transport, heartbeats, telemetry,
+        replica routing, or a dead/dark stage — forces the staged
+        schedule, which keeps every fault/observability contract on the
+        per-stage path."""
+        return (self.overlap and not self._multi_device
+                and self.devices is None
+                and self.transport is None and self.monitor is None
+                and self.telemetry is None
+                and not self.down and not self._silent
+                and all(not r for r in self.replica_nodes))
+
+    def _overlap_step(self, toks_mb, caches_mb, bucket):
+        """One greedy decode step for every micro-batch, dispatched on
+        the skewed schedule: within a tick, later stages (older
+        micro-batches) are enqueued before earlier ones, so stage k's
+        compute of micro-batch j overlaps the k->k+1 handoff of
+        micro-batch j-1.  Enqueue-only — no host sync (telemetry
+        sampling, when attached, is the allowlisted exception).  A
+        :class:`StageDown` raised mid-schedule aborts the step; callers
+        replay the in-flight window deterministically, so partially
+        donated caches are never re-read.  On a single shared device the
+        step degenerates to one fused dispatch per micro-batch (see
+        :meth:`_fused_ok`)."""
+        m = len(toks_mb)
+        if self._fused_ok():
+            fused, outs = self._fused_decode, []
+            for j in range(m):
+                x, caches_mb[j] = fused(toks_mb[j], caches_mb[j], bucket)
+                outs.append(x[0])
+            return outs, caches_mb
+        last = self.n_stages - 1
+        fns, sp = self._decode_fns, self.stage_params
+        tel = self.telemetry
+        xs = [self._to_stage(0, t) for t in toks_mb]
+        for t in range(m + last):
+            for k in range(min(t, last), max(t - m, -1), -1):
+                j = t - k
+                self._pre_stage(k)
+                self._route(k)
+                if tel is None:
+                    xs[j], caches_mb[j][k] = fns[k](sp[k], xs[j],
+                                                    caches_mb[j][k], bucket)
+                    xs[j] = self._post_stage(k, xs[j])
+                    continue
+                t0 = tel.now()
+                xs[j], caches_mb[j][k] = fns[k](sp[k], xs[j],
+                                                caches_mb[j][k], bucket)
+                t1 = tel.now()
+                # telemetry sampling is an allowlisted sync point
+                jax.block_until_ready(xs[j])  # repro: ignore[sync-in-hot-loop]
+                t2 = tel.now()
+                tel.record_decode(k, t2 - t0)
+                if k < last:
+                    tel.record_transfer(k, self._payload_bytes(xs[j]),
+                                        t2 - t1)
+                xs[j] = self._post_stage(k, xs[j])
+        return [x[0] for x in xs], caches_mb
+
+    def _overlap_replay(self, mbs, steps_done: int):
+        """Replay the in-flight window after a restore/migration under
+        overlap: fresh caches, skewed prefill, and the ``steps_done``
+        decode steps already emitted — the overlapped counterpart of
+        ``_replay_sync`` (greedy decoding is deterministic, so the replay
+        reconstructs the lost stage state bit-exactly)."""
+        toks_mb, caches_mb = self._overlap_prefill(mbs)
+        cur = mbs[0]["tokens"].shape[1]
+        for _ in range(steps_done):
+            toks_mb, caches_mb = self._overlap_step(
+                toks_mb, caches_mb, self.bucket_for(cur + 1))
+            cur += 1
+        n = sum(mb["tokens"].shape[0] for mb in mbs)
+        self._note(f"replayed {n} in-flight request(s) across {len(mbs)} "
+                   f"micro-batch(es), {steps_done} decode step(s)")
+        return toks_mb, caches_mb
+
+    def _generate_overlap(self, batch, gen_len: int, *, kill=None,
+                          replan=None):
+        """The overlapped executor behind ``generate`` (same contract,
+        same fault semantics, bit-identical tokens): micro-batched, async
+        -dispatched, one end-of-generate host sync."""
+        b, prompt_len = batch["tokens"].shape
+        self._check_fit(prompt_len, gen_len)
+        kills = ([] if kill is None
+                 else [kill] if isinstance(kill, dict) else list(kill))
+        if self.down:                      # e.g. stage killed between calls
+            for k in sorted(self.down):
+                self.restore_stage(k)
+        m = self._resolve_micro(b)
+        mbs = self._split_batch(batch, m)
+        with _quiet_scope():
+            while True:
+                try:
+                    toks_mb, caches_mb = self._overlap_prefill(mbs)
+                    break
+                except StageDown:  # silent failure confirmed mid-prefill
+                    for k in sorted(self.down):
+                        self.restore_stage(k)
+            outs = [[t] for t in toks_mb]
+            cur = prompt_len
+            for step in range(gen_len - 1):
+                for spec in kills:
+                    if spec["after_step"] == step:
+                        if spec.get("silent"):
+                            self.fail_silent(spec["stage"])
+                        else:
+                            self.kill_stage(spec["stage"],
+                                            replica=spec.get("replica"))
+                if self.down:
+                    for k in sorted(self.down):
+                        self.restore_stage(k)
+                    toks_mb, caches_mb = self._overlap_replay(mbs, step)
+                if replan is not None and replan["after_step"] == step:
+                    res = self.replan_live(
+                        replan["cluster"],
+                        max_moves=replan.get("max_moves", 1),
+                        min_gain_s=replan.get("min_gain_s", 0.0))
+                    if res.changed:
+                        toks_mb, caches_mb = self._overlap_replay(mbs, step)
+                while True:
+                    try:
+                        toks_mb, caches_mb = self._overlap_step(
+                            toks_mb, caches_mb, self.bucket_for(cur + 1))
+                        break
+                    except StageDown:  # silent failure confirmed mid-step
+                        for k in sorted(self.down):
+                            self.restore_stage(k)
+                        toks_mb, caches_mb = self._overlap_replay(mbs, step)
+                cur += 1
+                for j, t in enumerate(toks_mb):
+                    outs[j].append(t)
+            rows = [jnp.concatenate(o, axis=1) for o in outs]
+        # the single end-of-generate host sync (row order restored by the
+        # contiguous split)
+        return np.concatenate([np.asarray(r) for r in rows],
+                              axis=0).astype(np.int32)
 
     # -- fault injection / recovery ----------------------------------------
 
@@ -727,7 +1043,8 @@ class PipelineServeEngine:
         self.spares.remove(target)
         old = self.node_of_stage[k]
         self.node_of_stage[k] = target
-        self.stage_params[k] = jax.tree.map(jnp.asarray, restored)
+        self.stage_params[k] = self._adopt_params(k, restored)
+        self._rebuild_fused()              # closed-over params changed
         self.down.discard(k)
         self._note(f"stage {k}: pod rescheduled {old} -> {target} "
                    "(params restored from checkpoint)")
@@ -771,7 +1088,8 @@ class PipelineServeEngine:
         self.spares.remove(target)
         old = self.node_of_stage[k]
         self.node_of_stage[k] = target
-        self.stage_params[k] = jax.tree.map(jnp.asarray, restored)
+        self.stage_params[k] = self._adopt_params(k, restored)
+        self._rebuild_fused()              # closed-over params changed
         self.spares.append(old)            # vacated node is healthy
         self._note(f"stage {k}: MIGRATED {old} -> {target} "
                    "(params restored from checkpoint, "
@@ -868,6 +1186,21 @@ class PipelineServeEngine:
         return s
 
     # -- scheduler integration (continuous batching across stages) ----------
+
+    def admit_burst(self) -> int | None:
+        """How many prefill admissions the scheduler should interleave
+        per decode round.  ``None`` (the sequential engines) keeps the
+        legacy schedule — fill every free slot before stepping.  Under
+        overlap, admissions ride the micro-batch interleave instead of
+        stalling the decode train: at most one admission per pipeline
+        bubble slot per round.  Pacing reorders admissions only; per
+        -request tokens are schedule-independent (slot isolation), so the
+        streams are unchanged."""
+        if not self.overlap:
+            return None
+        m = (self.micro_batches if self.micro_batches is not None
+             else self.n_stages)
+        return max(1, int(m))
 
     def slot_bank(self, slots: int, proto_batch):
         """Per-stage cache banks for ``slots`` requests; also fixes the
@@ -987,9 +1320,27 @@ class PipelineServeEngine:
 
     def timed_decode(self, batch, steps: int) -> float:
         """Steady-state pipelined decode seconds for ``steps`` tokens
-        (prefill outside the clock; same methodology as ServeEngine)."""
+        (prefill outside the clock; same methodology as ServeEngine).
+        Overlap engines time the overlapped executor — the same code path
+        ``generate`` uses — so the bench ablation measures exactly what
+        serves."""
         prompt_len = batch["tokens"].shape[1]
         self._check_fit(prompt_len, steps + 1)
+        if self.overlap:
+            m = self._resolve_micro(batch["tokens"].shape[0])
+            mbs = self._split_batch(batch, m)
+            with _quiet_scope():
+                toks_mb, caches_mb = self._overlap_prefill(mbs)
+                jax.block_until_ready(toks_mb)
+                cur = prompt_len
+                # benchmark wall time: measured, never token-affecting
+                t0 = time.perf_counter()  # repro: ignore[determinism]
+                for _ in range(steps):
+                    toks_mb, caches_mb = self._overlap_step(
+                        toks_mb, caches_mb, self.bucket_for(cur + 1))
+                    cur += 1
+                jax.block_until_ready(toks_mb)
+            return time.perf_counter() - t0  # repro: ignore[determinism]
         caches = self._fresh_caches(batch["tokens"].shape[0], batch)
         toks, _, caches = self._chain_prefill(batch, caches)
         jax.block_until_ready(toks)

@@ -206,10 +206,19 @@ class SlotScheduler:
                  else [kill] if isinstance(kill, dict) else list(kill))
         fired = [False] * len(kills)
         replanned = False
+        # overlap engines pace admissions (admit_burst) so prefills ride
+        # the micro-batch interleave instead of stalling the decode train;
+        # None keeps the legacy fill-every-free-slot schedule.  Pacing
+        # reorders admissions only — per-request tokens are schedule
+        # -independent (slot isolation), so streams are unchanged.
+        burst = getattr(eng, "admit_burst", lambda: None)()
         while next_idx < len(requests) or active:
-            while free and next_idx < len(requests):
+            admitted = 0
+            while free and next_idx < len(requests) and (
+                    burst is None or admitted < burst):
                 r = requests[next_idx]
                 next_idx += 1
+                admitted += 1
                 slot = free.pop(0)
                 extras = {k: jnp.asarray(v)
                           for k, v in (r.extras or {}).items()}

@@ -311,6 +311,14 @@ class BoundaryTransport:
     @staticmethod
     def _to_frame(seq: int, payload) -> tuple[_Frame, object]:
         leaves, treedef = jax.tree.flatten(payload)
+        # start every device->host copy before materializing any of them:
+        # the frame still needs host bytes (CRC/framing is a host-side
+        # protocol), but not-yet-ready device buffers from an overlapped
+        # dispatch all drain concurrently instead of one forced sync at a
+        # time
+        for a in leaves:
+            if hasattr(a, "copy_to_host_async"):
+                a.copy_to_host_async()
         host = [np.asarray(a) for a in leaves]
         return _Frame(seq, _crc_leaves(host), host), treedef
 
@@ -368,10 +376,12 @@ class BoundaryTransport:
 
     # -- the wire -----------------------------------------------------------
 
-    def send(self, hop: int, payload):
+    def send(self, hop: int, payload, *, device=None):
         """Deliver one boundary payload over ``hop`` exactly once, in
         order, under the fault schedule; returns the payload rebuilt from
-        the received bytes."""
+        the received bytes — placed on ``device`` when given (the
+        receiving stage's device in a multi-device pipeline), else on the
+        default device."""
         frame, treedef = self._to_frame(self._tx[hop], payload)
         self._tx[hop] += 1
         st = self.stats[hop]
@@ -443,6 +453,9 @@ class BoundaryTransport:
                     "delivered after its retransmission")
             self.stats[hop].dup_dropped -= 1
             self.stats[hop].stale_dropped += 1
+        if device is not None:
+            return jax.tree.unflatten(
+                treedef, [jax.device_put(a, device) for a in leaves])
         return jax.tree.unflatten(treedef, [jnp.asarray(a) for a in leaves])
 
     # -- accounting ---------------------------------------------------------

@@ -1,0 +1,25 @@
+"""Seeded violations: host syncs inside a steady-state decode loop.
+
+Every flagged line fences the async dispatch stream once per step,
+serializing the pipeline back to lockstep execution.
+"""
+
+import jax
+import numpy as np
+
+
+def decode_loop(step_fn, toks, cache, steps):
+    outs = []
+    for _ in range(steps):
+        toks, cache = step_fn(toks, cache)
+        jax.block_until_ready(toks)            # per-step barrier
+        outs.append(np.asarray(toks))          # per-step device->host copy
+    return outs
+
+
+def drain_loop(step_fn, toks, cache, done):
+    while not done:
+        toks, cache = step_fn(toks, cache)
+        host = jax.device_get(toks)            # per-step fetch
+        done = host[0, 0].item() == 0          # scalar read in the loop
+    return toks

@@ -27,6 +27,8 @@ CASES = {
     "determinism": ("repro/core/bad_determinism.py",
                     "repro/core/good_determinism.py"),
     "pallas-structure": ("bad_pallas.py", "good_pallas.py"),
+    "sync-in-hot-loop": ("repro/serve/bad_sync_hot_loop.py",
+                         "repro/serve/good_sync_hot_loop.py"),
 }
 
 
@@ -79,6 +81,30 @@ def test_determinism_scope_covers_chaos_layer():
         [str(CORPUS / "repro/chaos/good_determinism.py")],
         rules=["determinism"])
     assert not clean.findings
+
+
+def test_sync_rule_corpus_lines_and_suppression():
+    # the overlap executor's contract (ISSUE 10): no host sync inside a
+    # steady-state serving loop; allowlisted sync points are suppressed,
+    # not silently ignored
+    bad = analyze_paths(
+        [str(CORPUS / "repro/serve/bad_sync_hot_loop.py")],
+        rules=["sync-in-hot-loop"])
+    assert {f.line for f in bad.findings} == {15, 16, 23, 24}
+    clean = analyze_paths(
+        [str(CORPUS / "repro/serve/good_sync_hot_loop.py")],
+        rules=["sync-in-hot-loop"])
+    assert not clean.findings
+    assert len(clean.suppressed) == 1      # the telemetry-tick allowlist
+
+
+def test_serve_package_passes_sync_lint():
+    # the real serving layer, not just the corpus: the engines under the
+    # overlap contract must satisfy the rule they are scoped under
+    src = REPO / "src" / "repro" / "serve"
+    res = analyze_paths([str(p) for p in sorted(src.glob("*.py"))],
+                        rules=["sync-in-hot-loop"])
+    assert not res.findings, [str(f) for f in res.findings]
 
 
 def test_chaos_package_passes_determinism_lint():
